@@ -1,0 +1,53 @@
+"""Shared benchmark helpers: load sweeps → CSV rows."""
+from __future__ import annotations
+
+import csv
+import os
+import time
+
+from repro.core import ClusterCfg, PolicySpec, summarize_sim
+from repro.core.simulator import simulate
+from repro.core.sim_ref import simulate_ref
+
+OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments")
+
+
+def sweep_policies(policies, cluster: ClusterCfg, loads, n_arrivals,
+                   workload_fn, *, seed: int = 0, engine: str = "jax",
+                   warmup_frac: float = 0.1):
+    """Run every (policy × load) cell; returns list of dict rows."""
+    rows = []
+    for load in loads:
+        wl = workload_fn(cluster, load, n_arrivals, seed)
+        for pol in policies:
+            t0 = time.time()
+            if engine == "jax":
+                out = simulate(pol, cluster, wl)
+            else:
+                out = simulate_ref(pol, cluster, wl)
+            s = summarize_sim(out, wl, warmup_frac=warmup_frac)
+            row = {"policy": pol.name, "load": load,
+                   "wall_s": round(time.time() - t0, 2), **s.row()}
+            rows.append(row)
+    return rows
+
+
+def write_csv(name: str, rows) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, name)
+    if not rows:
+        return path
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0]))
+        w.writeheader()
+        w.writerows(rows)
+    return path
+
+
+def fmt_table(rows, cols) -> str:
+    out = [" | ".join(f"{c:>12s}" for c in cols)]
+    for r in rows:
+        out.append(" | ".join(
+            f"{r[c]:12.3f}" if isinstance(r[c], float) else f"{str(r[c]):>12s}"
+            for c in cols))
+    return "\n".join(out)

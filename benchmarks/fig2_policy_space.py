@@ -1,0 +1,28 @@
+"""Paper Fig. 2 — tail latency (2a) and tail slowdown (2b) across the
+policy taxonomy, 4 workers × 12 cores, Azure-shaped workload.
+
+Expected reproduction: all policies look similar on p99 *latency*; on
+p99 *slowdown* Late Binding and E/*/FCFS blow up early (head-of-line
+blocking), PS-based policies survive, E/LL/PS is best (Lessons 1-2).
+"""
+from __future__ import annotations
+
+from repro.core import FIG2_POLICIES, PAPER_SMALL, ms_trace
+
+from .common import sweep_policies, write_csv
+
+
+def run(quick: bool = True):
+    loads = [0.3, 0.5, 0.6, 0.7, 0.8, 0.9, 0.95] if quick else \
+        [0.1, 0.2, 0.3, 0.4, 0.5, 0.55, 0.6, 0.65, 0.7, 0.75, 0.8,
+         0.85, 0.9, 0.95]
+    n = 8000 if quick else 20000
+    rows = sweep_policies(FIG2_POLICIES, PAPER_SMALL, loads, n, ms_trace)
+    write_csv("fig2_policy_space.csv", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['policy']:10s} load={r['load']:.2f} "
+              f"lat99={r['lat_p99']:10.2f}s slow99={r['slow_p99']:10.1f}")

@@ -1,0 +1,27 @@
+"""Paper Fig. 3 — SRPT (oracle exec times) vs PS, median + 99% slowdown.
+
+Expected reproduction (Lesson 3): E/LL/SRPT beats E/LL/PS on *median*
+slowdown at high load but loses on the 99% tail (long-request
+starvation).
+"""
+from __future__ import annotations
+
+from repro.core import E_LL_PS, E_LL_SRPT, PAPER_SMALL, ms_trace
+
+from .common import sweep_policies, write_csv
+
+
+def run(quick: bool = True):
+    loads = [0.5, 0.7, 0.8, 0.9, 0.95] if quick else \
+        [0.3, 0.4, 0.5, 0.6, 0.7, 0.75, 0.8, 0.85, 0.9, 0.95]
+    n = 8000 if quick else 20000
+    rows = sweep_policies((E_LL_PS, E_LL_SRPT), PAPER_SMALL, loads, n,
+                          ms_trace)
+    write_csv("fig3_srpt.csv", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['policy']:10s} load={r['load']:.2f} "
+              f"slow50={r['slow_p50']:8.2f} slow99={r['slow_p99']:10.1f}")

@@ -1,0 +1,29 @@
+"""Paper Fig. 4 — 99% slowdown at scale (100 servers × 12 cores).
+
+Expected reproduction (§3.5): E/R/PS and E/LOC/PS explode near 0.6 load;
+Late Binding improves with scale (less head-of-line blocking) but
+E/LL/PS still wins at very high load (>0.96).
+"""
+from __future__ import annotations
+
+from repro.core import (E_LL_PS, E_LOC_PS, E_R_PS, LATE_BINDING,
+                        PAPER_LARGE, ms_trace)
+
+from .common import sweep_policies, write_csv
+
+POLICIES = (E_R_PS, E_LOC_PS, LATE_BINDING, E_LL_PS)
+
+
+def run(quick: bool = True):
+    loads = [0.5, 0.7, 0.9, 0.97] if quick else \
+        [0.3, 0.5, 0.6, 0.7, 0.8, 0.9, 0.94, 0.96, 0.98]
+    n = 12000 if quick else 40000
+    rows = sweep_policies(POLICIES, PAPER_LARGE, loads, n, ms_trace)
+    write_csv("fig4_scale.csv", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['policy']:10s} load={r['load']:.2f} "
+              f"slow99={r['slow_p99']:10.1f}")

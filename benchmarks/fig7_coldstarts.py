@@ -1,0 +1,25 @@
+"""Paper Fig. 7 — % of invocations that cold-start, per scheduler.
+
+Expected reproduction: Hermes lowest on skewed workloads (locality-aware
+packing); Least-Loaded highest at low load (spreads 50 functions over
+all 8 invokers); Vanilla lowest only on the balanced workload.
+"""
+from __future__ import annotations
+
+from .common import write_csv
+from .fig6_slowdown import run as run_fig6
+
+
+def run(quick: bool = True):
+    rows = run_fig6(quick)
+    cold = [{"workload": r["workload"], "scheduler": r["scheduler"],
+             "load": r["load"], "rps": r["rps"],
+             "cold_pct": 100.0 * r["cold_frac"]} for r in rows]
+    write_csv("fig7_coldstarts.csv", cold)
+    return cold
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['workload']:18s} {r['scheduler']:13s} "
+              f"load={r['load']:.2f} cold%={r['cold_pct']:5.1f}")

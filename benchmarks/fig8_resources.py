@@ -1,0 +1,25 @@
+"""Paper Fig. 8 — average servers/cores utilized (MS Trace workload).
+
+Expected reproduction: cores used ≈ equal across policies; Hermes uses
+markedly fewer *servers* than Least-Loaded at low load (consolidation)
+while matching its slowdown.
+"""
+from __future__ import annotations
+
+from .common import write_csv
+from .fig6_slowdown import run as run_fig6
+
+
+def run(quick: bool = True):
+    rows = run_fig6(quick, workloads=("ms-trace",))
+    res = [{"scheduler": r["scheduler"], "load": r["load"],
+            "mean_servers": r["mean_servers"], "mean_cores": r["mean_cores"],
+            "slow_p99": r["slow_p99"]} for r in rows]
+    write_csv("fig8_resources.csv", res)
+    return res
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['scheduler']:13s} load={r['load']:.2f} "
+              f"servers={r['mean_servers']:5.2f} cores={r['mean_cores']:6.2f}")

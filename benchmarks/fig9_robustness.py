@@ -1,0 +1,22 @@
+"""Paper Fig. 9 — robustness to light-tailed (exponential) exec times.
+
+Expected reproduction: with homogeneous execution times all load-aware
+schedulers converge; Hermes matches Least-Loaded / Late Binding, and
+Vanilla OpenWhisk still suffers from skew.
+"""
+from __future__ import annotations
+
+from .common import write_csv
+from .fig6_slowdown import run as run_fig6
+
+
+def run(quick: bool = True):
+    rows = run_fig6(quick, workloads=("homogeneous-exec",))
+    write_csv("fig9_robustness.csv", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['scheduler']:13s} load={r['load']:.2f} "
+              f"slow50={r['slow_p50']:7.2f} slow99={r['slow_p99']:9.1f}")

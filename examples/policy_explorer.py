@@ -1,0 +1,57 @@
+"""Interactive policy-space exploration (paper §3 methodology).
+
+Sweep any ``T/LB/S`` policy over load and workload knobs; prints a
+slowdown/latency/efficiency table.  Examples::
+
+    PYTHONPATH=src python examples/policy_explorer.py \
+        --policies E/H/PS E/LL/PS L/*/* --loads 0.3 0.6 0.9 \
+        --workload ms-trace --workers 8 --cores 12
+"""
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--policies", nargs="+",
+                    default=["E/H/PS", "E/LL/PS", "E/LOC/PS", "L/*/*"])
+    ap.add_argument("--loads", nargs="+", type=float,
+                    default=[0.3, 0.6, 0.9])
+    ap.add_argument("--workload", default="ms-trace",
+                    choices=["ms-trace", "ms-representative",
+                             "single-function", "multi-balanced",
+                             "homogeneous-exec"])
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--cores", type=int, default=12)
+    ap.add_argument("-n", type=int, default=4000)
+    ap.add_argument("--engine", choices=["sim", "serve"], default="sim",
+                    help="pure simulator vs serving platform (cold starts)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.core import (ClusterCfg, WORKLOADS, parse_policy, summarize,
+                            summarize_sim)
+    from repro.core.simulator import simulate
+    from repro.serving.engine import ServeCfg, ServingCluster
+
+    cl = ClusterCfg(n_workers=args.workers, cores=args.cores)
+    wfn = WORKLOADS[args.workload]
+    print(f"{'policy':10s} {'load':>5s} {'slow50':>8s} {'slow99':>10s} "
+          f"{'lat99':>9s} {'cold%':>6s} {'servers':>8s}")
+    for load in args.loads:
+        wl = wfn(cl, load, args.n, seed=args.seed)
+        for ptext in args.policies:
+            pol = parse_policy(ptext)
+            if args.engine == "sim":
+                s = summarize_sim(simulate(pol, cl, wl), wl)
+            else:
+                out = ServingCluster(ServeCfg(cluster=cl), pol).run(wl)
+                s = summarize(out.response, wl.service, out.cold,
+                              out.rejected, out.server_time, out.core_time,
+                              out.end_time)
+            print(f"{pol.name:10s} {load:5.2f} {s.slow_p50:8.2f} "
+                  f"{s.slow_p99:10.1f} {s.lat_p99:9.2f} "
+                  f"{100*s.cold_frac:6.1f} {s.mean_servers:8.2f}")
+
+
+if __name__ == "__main__":
+    main()

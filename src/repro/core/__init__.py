@@ -1,0 +1,27 @@
+"""Core of the paper's contribution: scheduling taxonomy, simulators, Hermes.
+
+Importing :mod:`repro.core.simulator` enables JAX x64 (event-time
+precision); all model code in this repo pins explicit dtypes, so this is
+safe process-wide.
+"""
+from .cluster import ClusterCfg, PAPER_LARGE, PAPER_SMALL, PAPER_TESTBED
+from .taxonomy import (Binding, LoadBalance, PolicySpec, WorkerSched,
+                       parse_policy, FIG2_POLICIES, EVAL_POLICIES, HERMES,
+                       LATE_BINDING, E_LL_PS, E_LL_FCFS, E_LL_SRPT, E_LOC_PS,
+                       E_LOC_FCFS, E_R_PS, E_R_FCFS)
+from .workload import (Workload, WORKLOADS, synth_workload, ms_trace,
+                       ms_representative, single_function, multi_balanced,
+                       homogeneous_exec, lognormal_mean,
+                       AZURE_MU, AZURE_SIGMA)
+from .metrics import Summary, summarize, summarize_sim
+
+__all__ = [
+    "ClusterCfg", "PAPER_LARGE", "PAPER_SMALL", "PAPER_TESTBED",
+    "Binding", "LoadBalance", "PolicySpec", "WorkerSched", "parse_policy",
+    "FIG2_POLICIES", "EVAL_POLICIES", "HERMES", "LATE_BINDING", "E_LL_PS",
+    "E_LL_FCFS", "E_LL_SRPT", "E_LOC_PS", "E_LOC_FCFS", "E_R_PS", "E_R_FCFS",
+    "Workload", "WORKLOADS", "synth_workload", "ms_trace",
+    "ms_representative", "single_function", "multi_balanced",
+    "homogeneous_exec", "lognormal_mean", "AZURE_MU", "AZURE_SIGMA",
+    "Summary", "summarize", "summarize_sim",
+]

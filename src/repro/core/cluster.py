@@ -1,0 +1,39 @@
+"""Cluster configuration for the scheduling simulator and serving runtime."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+
+class ClusterCfg(NamedTuple):
+    """A homogeneous cluster of ``n_workers`` machines.
+
+    Mirrors the paper's testbed model (§3.2, §6.1): each worker has
+    ``cores`` CPU cores and can host up to ``capacity_factor × cores``
+    invocations (running + waiting) — the memory-capacity model OpenWhisk
+    uses (26,624 MB / 256 MB = 104 ≈ 8×12 cores in the paper's setup).
+    """
+
+    n_workers: int = 4
+    cores: int = 12
+    capacity_factor: int = 8
+    # Cold-start penalty added to an invocation's service time when no warm
+    # executor exists on the chosen worker.  The paper's *simulator* sets
+    # this to 0 ("does not model overheads such as the container start-up
+    # time", §3.2); the OpenWhisk runtime experiences a real one, which the
+    # serving layer models explicitly.
+    cold_start_penalty: float = 0.0
+
+    @property
+    def slots(self) -> int:
+        """Max invocations (running + queued) a worker can host."""
+        return self.capacity_factor * self.cores
+
+    @property
+    def total_cores(self) -> int:
+        return self.n_workers * self.cores
+
+
+# Setups used in the paper.
+PAPER_SMALL = ClusterCfg(n_workers=4, cores=12)      # §3.3, Fig 2/3
+PAPER_LARGE = ClusterCfg(n_workers=100, cores=12)    # §3.5, Fig 4
+PAPER_TESTBED = ClusterCfg(n_workers=8, cores=12)    # §6, 8 invokers

@@ -1,0 +1,72 @@
+"""Metrics for the scheduling study — slowdown first (paper §3.3).
+
+``slowdown = response_time / execution_time`` — the paper's headline metric:
+tail latency hides head-of-line blocking of short functions behind long
+ones; tail slowdown exposes it.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Summary:
+    n: int
+    n_rejected: int
+    cold_frac: float          # fraction of completed invocations cold-started
+    lat_p50: float
+    lat_p99: float
+    slow_p50: float
+    slow_p99: float
+    slow_mean: float
+    mean_servers: float       # time-averaged # of busy servers
+    mean_cores: float         # time-averaged # of busy cores
+    throughput: float         # completed invocations / horizon
+
+    def row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def summarize(response: np.ndarray, service: np.ndarray,
+              cold: np.ndarray, rejected: np.ndarray,
+              server_time: float, core_time: float, end_time: float,
+              *, warmup_frac: float = 0.1,
+              arrival: np.ndarray | None = None) -> Summary:
+    """Aggregate per-task results.
+
+    ``warmup_frac`` drops the earliest fraction of arrivals (cold system)
+    so steady-state percentiles are not polluted by ramp-up, mirroring the
+    paper's 1-hour steady-state runs.
+    """
+    n = len(response)
+    lo = int(n * warmup_frac)
+    sel = np.ones(n, dtype=bool)
+    sel[:lo] = False
+    ok = sel & ~rejected & np.isfinite(response)
+    resp = response[ok]
+    svc = np.maximum(service[ok], 1e-12)
+    slow = resp / svc
+    horizon = max(end_time, 1e-12)
+
+    def pct(x, q):
+        return float(np.percentile(x, q)) if len(x) else float("nan")
+
+    return Summary(
+        n=int(ok.sum()),
+        n_rejected=int((rejected & sel).sum()),
+        cold_frac=float(cold[ok].mean()) if ok.any() else float("nan"),
+        lat_p50=pct(resp, 50), lat_p99=pct(resp, 99),
+        slow_p50=pct(slow, 50), slow_p99=pct(slow, 99),
+        slow_mean=float(slow.mean()) if len(slow) else float("nan"),
+        mean_servers=server_time / horizon,
+        mean_cores=core_time / horizon,
+        throughput=float(np.isfinite(response).sum()) / horizon,
+    )
+
+
+def summarize_sim(out, wl, **kw) -> Summary:
+    """Convenience wrapper over a SimOutput + Workload pair."""
+    return summarize(out.response, wl.service, out.cold, out.rejected,
+                     out.server_time, out.core_time, out.end_time, **kw)

@@ -1,0 +1,206 @@
+"""Pure-numpy reference discrete-event simulator (oracle).
+
+This is the readable, obviously-correct implementation of the simulation
+contract; the vectorized JAX engine in :mod:`repro.core.simulator` must
+reproduce it task-by-task.  Shared semantics (both engines implement this
+exactly):
+
+* Arrivals are processed in order; between consecutive arrivals the cluster
+  is advanced through every completion event (piecewise-constant rates).
+* Worker scheduling rates (per active task, in cores):
+    - PS:   every task gets ``min(1, C/n)``;
+    - FCFS: the ``C`` earliest-arrived tasks get 1, the rest 0;
+    - SRPT: the ``C`` tasks with least remaining work get 1 (oracle exec
+      times; ties by arrival sequence), the rest 0;
+    - Late binding: workers hold at most ``C`` tasks, all at rate 1; excess
+      invocations queue FIFO at the controller.
+* Load-balancing selection is deterministic given the pre-drawn per-arrival
+  uniform ``u_lb`` (random policy) and the function-home table (locality):
+    - LOC: home worker, then linear probe to the next worker with a free
+      slot; reject if the whole ring is full.
+    - R:   the ``floor(u·k)``-th of the ``k`` workers with a free slot.
+    - LL:  least active invocations among workers with a free slot, ties to
+      the lowest index.
+    - H:   Hermes — see :func:`repro.core.policies.hermes_score`.
+* Warm executors: each completion leaves one idle warm executor for its
+  function on its worker.  A placement consumes a matching warm executor
+  (warm start) if present, else it is a cold start; if the worker's slots
+  are exhausted by busy+idle executors, the idle executor of the function
+  with the most idle executors is evicted.  Late binding checks warmth at
+  *dispatch* (queue pop) time, matching the paper's observation that
+  queuing increases warm hits (§6.3).
+* After the last arrival the cluster is drained to empty; only rejected
+  invocations have NaN response.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from .cluster import ClusterCfg
+from .policies import select_worker_np
+from .taxonomy import Binding, PolicySpec, WorkerSched
+from .workload import Workload
+
+EPS = 1e-9
+
+
+@dataclasses.dataclass
+class _Task:
+    arr_idx: int
+    func: int
+    arrival: float
+    remaining: float
+    seq: int
+    rate: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    response: np.ndarray    # (N,) float64 seconds; NaN if rejected
+    cold: np.ndarray        # (N,) bool — placement caused a cold start
+    rejected: np.ndarray    # (N,) bool
+    worker: np.ndarray      # (N,) int32; -1 if rejected
+    server_time: float      # ∫ #workers-with-≥1-active dt
+    core_time: float        # ∫ Σ_w min(n_w, C) dt
+    end_time: float
+
+
+def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload
+                 ) -> SimResult:
+    W, C, S = cluster.n_workers, cluster.cores, cluster.slots
+    F = wl.n_functions
+    N = wl.n
+
+    tasks: list[list[_Task]] = [[] for _ in range(W)]
+    warm = np.zeros((W, F), dtype=np.int64)
+    queue: list[int] = []  # arrival indices (late binding only)
+
+    response = np.full(N, np.nan)
+    cold = np.zeros(N, dtype=bool)
+    rejected = np.zeros(N, dtype=bool)
+    worker_of = np.full(N, -1, dtype=np.int32)
+
+    server_time = 0.0
+    core_time = 0.0
+    now = 0.0
+    late = policy.binding == Binding.LATE
+
+    def set_rates(w: int) -> None:
+        ts = tasks[w]
+        n = len(ts)
+        if n == 0:
+            return
+        if late:
+            for t in ts:
+                t.rate = 1.0
+            return
+        if policy.sched == WorkerSched.PS:
+            r = min(1.0, C / n)
+            for t in ts:
+                t.rate = r
+        elif policy.sched == WorkerSched.FCFS:
+            order = sorted(range(n), key=lambda i: ts[i].seq)
+            for k, i in enumerate(order):
+                ts[i].rate = 1.0 if k < C else 0.0
+        else:  # SRPT
+            order = sorted(range(n), key=lambda i: (ts[i].remaining,
+                                                    ts[i].seq))
+            for k, i in enumerate(order):
+                ts[i].rate = 1.0 if k < C else 0.0
+
+    def start_task(w: int, arr_idx: int, start_service: bool) -> None:
+        """Place arrival ``arr_idx`` on worker ``w`` (slot already free)."""
+        f = int(wl.func[arr_idx])
+        if warm[w, f] > 0:
+            warm[w, f] -= 1
+            is_cold = False
+        else:
+            is_cold = True
+            idle = int(warm[w].sum())
+            if len(tasks[w]) + idle >= S:      # evict an idle executor
+                victim = int(np.argmax(warm[w]))
+                warm[w, victim] -= 1
+        cold[arr_idx] = is_cold
+        worker_of[arr_idx] = w
+        svc = float(wl.service[arr_idx])
+        if is_cold:
+            svc += cluster.cold_start_penalty
+        tasks[w].append(_Task(arr_idx=arr_idx, func=f,
+                              arrival=float(wl.arrival[arr_idx]),
+                              remaining=svc, seq=arr_idx))
+
+    def pop_queue() -> None:
+        """Dispatch queued invocations to workers with free cores."""
+        while queue:
+            loads = [len(tasks[w]) for w in range(W)]
+            w = int(np.argmin(loads))
+            if loads[w] >= C:
+                break
+            start_task(w, queue.pop(0), True)
+
+    def advance(dt: float) -> None:
+        nonlocal now, server_time, core_time
+        dt_left = dt
+        while True:
+            any_task = any(tasks[w] for w in range(W))
+            if not any_task:
+                if late:
+                    pop_queue()
+                    if any(tasks[w] for w in range(W)):
+                        continue
+                break
+            for w in range(W):
+                set_rates(w)
+            tau = dt_left
+            for w in range(W):
+                for t in tasks[w]:
+                    if t.rate > 0:
+                        tau = min(tau, t.remaining / t.rate)
+            if tau <= 0 and dt_left <= 0:
+                break
+            tau = max(tau, 0.0)
+            # integrals with pre-advance occupancy (rates constant over tau)
+            server_time += tau * sum(1 for w in range(W) if tasks[w])
+            core_time += tau * sum(min(len(tasks[w]), C) for w in range(W))
+            now += tau
+            dt_left -= tau
+            for w in range(W):
+                survivors = []
+                for t in tasks[w]:
+                    t.remaining -= t.rate * tau
+                    if t.remaining <= EPS:
+                        response[t.arr_idx] = now - t.arrival
+                        warm[w, t.func] += 1
+                    else:
+                        survivors.append(t)
+                tasks[w] = survivors
+            if late:
+                pop_queue()
+            if dt_left <= 0:
+                break
+
+    for i in range(N):
+        advance(float(wl.arrival[i]) - now)
+        now = float(wl.arrival[i])  # guard drift
+        active = np.array([len(tasks[w]) for w in range(W)])
+        if late:
+            if active.min() < C:
+                start_task(int(np.argmin(active)), i, True)
+            else:
+                queue.append(i)
+        else:
+            w = select_worker_np(policy.balance, active, warm,
+                                 int(wl.func[i]), wl.func_home,
+                                 float(wl.u_lb[i]), C, S)
+            if w < 0:
+                rejected[i] = True
+            else:
+                start_task(w, i, True)
+
+    advance(math.inf)  # drain
+    return SimResult(response=response, cold=cold, rejected=rejected,
+                     worker=worker_of, server_time=server_time,
+                     core_time=core_time, end_time=now)

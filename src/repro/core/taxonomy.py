@@ -1,0 +1,100 @@
+"""Taxonomy of serverless scheduling policies (paper §3.1).
+
+A policy is a triple ``T/LB/S``:
+
+* ``T``  — binding time: **E**\\ arly (dispatch on arrival, queue at workers)
+           or **L**\\ ate (queue at the controller until a core frees).
+* ``LB`` — load balancing: ``LOC`` (locality/sticky hashing — OpenWhisk
+           default), ``R`` (random), ``LL`` (least-loaded / JSQ) or ``H``
+           (Hermes hybrid: packing at low load, least-loaded at high load,
+           locality-aware tie-breaking).
+* ``S``  — intra-worker scheduling: ``PS`` (processor sharing ≈ CFS),
+           ``FCFS`` or ``SRPT`` (oracle execution times; §3.4).
+
+Policies are *data*: the simulator and the serving runtime both take a
+:class:`PolicySpec` and stay branch-free internally, so the entire space can
+be swept by a single jitted program per spec.
+"""
+from __future__ import annotations
+
+import enum
+from typing import NamedTuple
+
+
+class Binding(enum.IntEnum):
+    EARLY = 0
+    LATE = 1
+
+
+class LoadBalance(enum.IntEnum):
+    LOCALITY = 0      # OpenWhisk-style sticky hashing (LOC)
+    RANDOM = 1        # uniform over workers with free capacity (R)
+    LEAST_LOADED = 2  # join-shortest-queue by active invocations (LL)
+    HYBRID = 3        # Hermes (H): pack at low load, LL at high load
+
+
+class WorkerSched(enum.IntEnum):
+    PS = 0    # processor sharing: each active task gets min(1, C/n) cores
+    FCFS = 1  # first C tasks in arrival order run at rate 1
+    SRPT = 2  # C tasks with smallest remaining work run at rate 1 (oracle)
+
+
+class PolicySpec(NamedTuple):
+    binding: Binding
+    balance: LoadBalance
+    sched: WorkerSched
+
+    @property
+    def name(self) -> str:
+        t = "E" if self.binding == Binding.EARLY else "L"
+        lb = {
+            LoadBalance.LOCALITY: "LOC",
+            LoadBalance.RANDOM: "R",
+            LoadBalance.LEAST_LOADED: "LL",
+            LoadBalance.HYBRID: "H",
+        }[self.balance]
+        s = {WorkerSched.PS: "PS", WorkerSched.FCFS: "FCFS",
+             WorkerSched.SRPT: "SRPT"}[self.sched]
+        return f"{t}/{lb}/{s}"
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        return self.name
+
+
+_LB = {"LOC": LoadBalance.LOCALITY, "R": LoadBalance.RANDOM,
+       "LL": LoadBalance.LEAST_LOADED, "H": LoadBalance.HYBRID}
+_S = {"PS": WorkerSched.PS, "FCFS": WorkerSched.FCFS,
+      "SRPT": WorkerSched.SRPT}
+
+
+def parse_policy(text: str) -> PolicySpec:
+    """Parse ``"E/LL/PS"``-style notation (paper §3.1) into a PolicySpec.
+
+    For late binding the LB/S components are irrelevant (the simulator,
+    like the paper's, runs dispatched tasks uninterruptedly at rate 1);
+    ``"L/*/*"`` is accepted as an alias of ``"L/LL/FCFS"``.
+    """
+    t, lb, s = text.strip().upper().split("/")
+    binding = Binding.EARLY if t == "E" else Binding.LATE
+    if binding == Binding.LATE and (lb == "*" or s == "*"):
+        return PolicySpec(Binding.LATE, LoadBalance.LEAST_LOADED,
+                          WorkerSched.FCFS)
+    return PolicySpec(binding, _LB[lb], _S[s])
+
+
+# The policy combinations explored in the paper's Fig. 2 (§3.3) plus the
+# SRPT study (§3.4) and Hermes itself (§4).
+LATE_BINDING = parse_policy("L/*/*")
+E_LL_PS = parse_policy("E/LL/PS")
+E_LL_FCFS = parse_policy("E/LL/FCFS")
+E_LOC_PS = parse_policy("E/LOC/PS")        # vanilla OpenWhisk
+E_LOC_FCFS = parse_policy("E/LOC/FCFS")
+E_R_PS = parse_policy("E/R/PS")
+E_R_FCFS = parse_policy("E/R/FCFS")
+E_LL_SRPT = parse_policy("E/LL/SRPT")
+HERMES = parse_policy("E/H/PS")
+
+FIG2_POLICIES = (
+    LATE_BINDING, E_LL_FCFS, E_LL_PS, E_LOC_FCFS, E_LOC_PS, E_R_FCFS, E_R_PS,
+)
+EVAL_POLICIES = (E_LOC_PS, LATE_BINDING, E_LL_PS, HERMES)  # paper §6 baselines

@@ -1,0 +1,88 @@
+"""Pallas TPU decode attention (single query token vs a long KV cache).
+
+Memory-bound streaming reduction: grid ``(B, H, n_kv)`` with KV blocks
+innermost; the query row and running ``(m, l, acc)`` stay in VMEM while
+the cache streams HBM→VMEM once.  Positions past ``pos`` are masked (the
+cache is a ring of capacity ≥ pos+1).
+
+Layout: q [B, H, Dh]; k,v [B, KV, S, Dh]; pos [B] int32.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, scale: float, bk: int, n_kv: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[0]
+    # skip blocks entirely past the valid prefix
+    @pl.when(j * bk <= pos)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)              # [1, Dh] row
+        k = k_ref[0, 0].astype(jnp.float32)              # [bk, Dh]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        t = j * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        s = jnp.where(t <= pos, s * scale, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_hm(q, k, v, pos, *, bk: int = 512,
+                        interpret: bool = False):
+    """q: [B,H,Dh]; k,v: [B,KV,S,Dh]; pos: [B] int32 → [B,H,Dh]."""
+    B, H, Dh = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    g = H // KV
+    bk = min(bk, S)
+    n_kv = pl.cdiv(S, bk)
+    scale = 1.0 / math.sqrt(Dh)
+    kernel = functools.partial(_kernel, scale=scale, bk=bk, n_kv=n_kv)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, n_kv),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, j: (b,)),
+            pl.BlockSpec((1, 1, 1, Dh), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, Dh), lambda b, h, j: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, Dh), lambda b, h, j: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, Dh), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, 1, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, Dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos, q[:, :, None, :], k, v)
+    return out[:, :, 0, :]

@@ -1,0 +1,21 @@
+"""Jit'd wrapper: seq-major cache API over the head-major decode kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import decode_attention_hm
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("bk",))
+def decode_attention(q, k, v, pos, *, bk: int = 512):
+    """q: [B,H,Dh]; k,v: [B,S,KV,Dh]; pos: [B] int32 → [B,H,Dh]."""
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    return decode_attention_hm(q, kh, vh, pos, bk=bk,
+                               interpret=_interpret())

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for decode attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, pos):
+    """q: [B,H,Dh]; k,v: [B,S,KV,Dh]; pos: [B] → [B,H,Dh] (fp32 math)."""
+    B, H, Dh = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    qf = q.astype(jnp.float32).reshape(B, KV, g, Dh)
+    s = jnp.einsum("bkgd,btkd->bkgt", qf, k.astype(jnp.float32))
+    s = s / math.sqrt(Dh)
+    t = jnp.arange(S)
+    mask = t[None, :] <= pos[:, None]
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", a, v.astype(jnp.float32))
+    return o.reshape(B, H, Dh).astype(q.dtype)

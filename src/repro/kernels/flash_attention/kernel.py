@@ -1,0 +1,92 @@
+"""Pallas TPU flash attention (causal, GQA-aware).
+
+Canonical online-softmax tiling: grid ``(B, H, n_q, n_kv)`` with the KV
+index innermost; running ``(m, l, acc)`` live in VMEM scratch and persist
+across the KV dim; upper-triangle blocks are skipped with ``pl.when``.
+GQA is handled in the BlockSpec index maps (query head ``h`` reads KV head
+``h // group``) — KV is never materialized per-query-head.
+
+Layout: q [B, H, S, Dh]; k,v [B, KV, S, Dh] (head-major for clean tiling).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, scale: float, bq: int, bk: int, n_kv: int):
+    i = pl.program_id(2)          # q block
+    j = pl.program_id(3)          # kv block (innermost)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal frontier: kv block j intersects q block i iff j*bk <= i*bq+bq-1
+    @pl.when(j * bk <= i * bq + bq - 1)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # [bq, Dh]
+        k = k_ref[0, 0].astype(jnp.float32)          # [bk, Dh]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale
+        qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_hm(q, k, v, *, bq: int = 128, bk: int = 128,
+                       interpret: bool = False):
+    """Head-major flash attention.  q: [B,H,S,Dh]; k,v: [B,KV,S,Dh]."""
+    B, H, S, Dh = q.shape
+    KV = k.shape[1]
+    assert H % KV == 0
+    g = H // KV
+    bq = min(bq, S)
+    bk = min(bk, S)
+    n_q, n_kv = pl.cdiv(S, bq), pl.cdiv(S, bk)
+    scale = 1.0 / math.sqrt(Dh)
+    kernel = functools.partial(_kernel, scale=scale, bq=bq, bk=bk,
+                               n_kv=n_kv)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, Dh), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, Dh), lambda b, h, i, j: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, Dh), lambda b, h, i, j: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, Dh), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),     # m
+            pltpu.VMEM((bq, 1), jnp.float32),     # l
+            pltpu.VMEM((bq, Dh), jnp.float32),    # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

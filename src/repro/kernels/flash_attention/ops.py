@@ -1,0 +1,30 @@
+"""Jit'd wrapper: seq-major [B,S,H,Dh] API over the head-major kernel.
+
+On CPU (this container) the kernel executes under ``interpret=True``; on
+TPU it lowers through Mosaic.  Model code calls :func:`flash_attention`.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_hm
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "bq", "bk"))
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
+                    bk: int = 128):
+    """q: [B,S,H,Dh]; k,v: [B,S,KV,Dh] → [B,S,H,Dh]."""
+    assert causal, "only causal attention is provided"
+    qh = q.transpose(0, 2, 1, 3)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    o = flash_attention_hm(qh, kh, vh, bq=bq, bk=bk,
+                           interpret=_interpret())
+    return o.transpose(0, 2, 1, 3)

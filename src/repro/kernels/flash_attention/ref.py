@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for flash attention (causal, GQA)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v):
+    """q: [B,S,H,Dh]; k,v: [B,S,KV,Dh] → [B,S,H,Dh] (fp32 math)."""
+    B, S, H, Dh = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    qf = q.astype(jnp.float32).reshape(B, S, KV, g, Dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qf, kf) / math.sqrt(Dh)
+    pos = jnp.arange(S)
+    mask = pos[:, None] >= pos[None, :]
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,btkd->bqkgd", a, vf)
+    return o.reshape(B, S, H, Dh).astype(q.dtype)

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel for the Hermes controller hot loop (paper §4.2, §6.6).
+
+The OpenWhisk controller sustains ~3.8 k scheduling decisions per second;
+each decision is a streaming reduction over the per-worker load vector
+(score → argmax → load update).  A scalar implementation re-reads the
+cluster state from HBM per invocation.  On TPU the natural formulation is
+*batched sequential dispatch*: the whole ``[W]`` active-count vector stays
+resident in VMEM while a batch of arrivals is dispatched in order — one
+HBM read of cluster state per *batch* rather than per invocation, with
+each decision a vectorized O(W) score + argmax on the VPU.
+
+Semantics (must match ``repro.core.policies.hermes_score_np`` exactly —
+the sequential dependency is preserved, this is not an approximation):
+
+* low-load mode (∃ worker with a free core): among workers with a free
+  core prefer class 3 = non-empty & warm, 2 = non-empty, 1 = warm,
+  0 = empty; within a class prefer the most loaded (packing).
+* high-load mode: least-loaded among workers with a free slot; warmth
+  breaks ties.  All-full → sentinel ``-1`` (rejection).
+
+Completions between arrivals are applied by the caller batch-by-batch
+(the serving controller syncs worker state at batch boundaries, exactly
+like the paper's synchronous Controller↔Worker protocol).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_BIG = 1 << 30
+
+
+def _kernel(active_ref, warm_ref, out_ref, active_out_ref, act_ref,
+            *, n: int, cores: int, slots: int):
+    act_ref[...] = active_ref[...]                    # [1, W] int32
+
+    def body(i, _):
+        active = act_ref[0]                           # [W]
+        warm = warm_ref[i] > 0                        # [W] bool
+        has_slot = active < slots
+        has_core = active < cores
+        nonempty = active > 0
+        warm_i = warm.astype(jnp.int32)
+        cls = jnp.where(nonempty, 2 + warm_i, warm_i)
+        lo = jnp.where(has_core, cls * (slots + 1) + active, -_BIG)
+        hi = jnp.where(has_slot, -(active * 2 - warm_i), -_BIG)
+        score = jnp.where(has_core.any(), lo, hi)
+        w = jnp.argmax(score).astype(jnp.int32)
+        ok = has_slot.any()
+        out_ref[i] = jnp.where(ok, w, -1)
+        act_ref[0] = jnp.where(
+            ok & (jax.lax.iota(jnp.int32, active.shape[0]) == w),
+            active + 1, active)
+        return 0
+
+    jax.lax.fori_loop(0, n, body, 0)
+    active_out_ref[...] = act_ref[...]
+
+
+def hermes_select_batch(active, warm_cols, *, cores: int, slots: int,
+                        interpret: bool = False):
+    """Dispatch a batch of arrivals with Hermes hybrid balancing.
+
+    active: [W] int32 current per-worker active counts;
+    warm_cols: [N, W] int32 — warm-executor count of each arrival's
+    function on each worker (gathered by the caller from ``warm[W, F]``).
+
+    Returns (choices [N] int32 — worker ids or -1, active_out [W]).
+    """
+    W = active.shape[0]
+    N = warm_cols.shape[0]
+    kernel = functools.partial(_kernel, n=N, cores=cores, slots=slots)
+    out, active_out = pl.pallas_call(
+        kernel,
+        in_specs=[pl.BlockSpec((1, W), lambda: (0, 0)),
+                  pl.BlockSpec((N, W), lambda: (0, 0))],
+        out_specs=[pl.BlockSpec((N,), lambda: (0,)),
+                   pl.BlockSpec((1, W), lambda: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((N,), jnp.int32),
+                   jax.ShapeDtypeStruct((1, W), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((1, W), jnp.int32)],
+        interpret=interpret,
+    )(active[None], warm_cols)
+    return out, active_out[0]

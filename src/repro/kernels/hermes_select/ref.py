@@ -1,0 +1,22 @@
+"""Oracle for the batched Hermes dispatch: numpy loop over arrivals."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.policies import hermes_score_np
+
+
+def hermes_select_ref(active, warm_cols, *, cores: int, slots: int):
+    """active: [W] int; warm_cols: [N, W].  Sequential reference."""
+    active = np.asarray(active, np.int64).copy()
+    warm_cols = np.asarray(warm_cols)
+    N = warm_cols.shape[0]
+    out = np.full(N, -1, np.int32)
+    for i in range(N):
+        if not (active < slots).any():
+            continue
+        score, _ = hermes_score_np(active, warm_cols[i], cores, slots)
+        w = int(np.argmax(score))
+        out[i] = w
+        active[w] += 1
+    return out, active.astype(np.int32)

@@ -1,0 +1,93 @@
+"""Pallas TPU kernel for the Mamba-2 SSD chunked scan.
+
+Grid ``(B, n_chunks)``; all heads of one sequence-chunk are processed per
+step so the [H, P, N] state (fp32) persists in VMEM scratch across the
+chunk dim.  Intra-chunk work is the 1-semiseparable matrix form: a
+scalar-per-head pairwise decay builds [c, c] score matrices (log-space,
+exponent ≤ 0), inter-chunk work is a rank-c state update.
+
+Layout: x [B,T,H,P]; dt [B,T,H]; bmat,cmat [B,T,N]; a [H];
+outs: y [B,T,H,P], state [B,H,P,N] fp32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, s_out_ref, s_ref,
+            *, chunk: int, n_chunks: int):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    x = x_ref[0].astype(jnp.float32)             # [c, H, P]
+    dd = dt_ref[0].astype(jnp.float32)           # [c, H]
+    bm = b_ref[0].astype(jnp.float32)            # [c, N]
+    cm = c_ref[0].astype(jnp.float32)            # [c, N]
+    a = a_ref[...].astype(jnp.float32)           # [H]
+
+    la = jnp.cumsum(dd * a[None, :], axis=0)     # [c, H], ≤ 0
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [c,c]
+    dec = jnp.exp(la[:, None, :] - la[None, :, :])               # [t,s,H]
+    c = chunk
+    ti = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    m = jnp.where((ti >= si)[:, :, None],
+                  cb[:, :, None] * dec * dd[None, :, :], 0.0)    # [t,s,H]
+    y = jnp.einsum("tsh,shp->thp", m, x)
+    # carry-in: y += C_t · (S ⊙ e^{la_t})  per head
+    y = y + jnp.einsum("tn,hpn,th->thp", cm, s_ref[...], jnp.exp(la))
+    y_ref[0] = y.astype(y_ref.dtype)
+    # state: S' = S·e^{la_end} + Σ_s e^{la_end−la_s}·Δ_s·B_s⊗x_s
+    la_end = la[-1:, :]                                          # [1,H]
+    w = jnp.exp(la_end - la) * dd                                # [c,H]
+    upd = jnp.einsum("sh,sn,shp->hpn", w, bm, x)
+    s_ref[...] = s_ref[...] * jnp.exp(la_end[0])[:, None, None] + upd
+
+    @pl.when(t == n_chunks - 1)
+    def _finish():
+        s_out_ref[0] = s_ref[...]
+
+
+def ssd_pallas(x, dt_h, bmat, cmat, a, *, chunk: int = 128,
+               interpret: bool = False):
+    """x: [B,T,H,P]; dt_h: [B,T,H]; bmat,cmat: [B,T,N]; a: [H].
+
+    Returns (y [B,T,H,P], state [B,H,P,N] fp32).
+    """
+    B, T, H, P = x.shape
+    N = bmat.shape[-1]
+    c = min(chunk, T)
+    assert T % c == 0
+    n = T // c
+    kernel = functools.partial(_kernel, chunk=c, n_chunks=n)
+    y, s_out = pl.pallas_call(
+        kernel,
+        grid=(B, n),
+        in_specs=[
+            pl.BlockSpec((1, c, H, P), lambda b, t: (b, t, 0, 0)),
+            pl.BlockSpec((1, c, H), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, c, N), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, c, N), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((H,), lambda b, t: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, H, P), lambda b, t: (b, t, 0, 0)),
+            pl.BlockSpec((1, H, P, N), lambda b, t: (b, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((H, P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt_h, bmat, cmat, a)
+    return y, s_out

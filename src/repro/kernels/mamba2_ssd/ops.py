@@ -1,0 +1,19 @@
+"""Jit'd wrapper over the SSD kernel (interpret on CPU, Mosaic on TPU)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import ssd_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def ssd(x, dt_h, bmat, cmat, a, *, chunk: int = 128):
+    """x: [B,T,H,P]; dt_h: [B,T,H]; b,c: [B,T,N]; a: [H]."""
+    return ssd_pallas(x, dt_h, bmat, cmat, a, chunk=chunk,
+                      interpret=_interpret())

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the SSD scan: literal per-step recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt_h, bmat, cmat, a, h0=None):
+    """x: [B,T,H,P]; dt_h: [B,T,H]; bmat,cmat: [B,T,N]; a: [H].
+
+    Returns (y [B,T,H,P], state [B,H,P,N]).
+    """
+    B, T, H, P = x.shape
+    N = bmat.shape[-1]
+    a = jnp.asarray(a, jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def step(h, inp):
+        xt, dt_t, bt, ct = inp
+        xt = xt.astype(jnp.float32)
+        dt_t = dt_t.astype(jnp.float32)
+        decay = jnp.exp(dt_t * a[None, :])[:, :, None, None]
+        upd = dt_t[:, :, None, None] * xt[..., None] * \
+            bt.astype(jnp.float32)[:, None, None, :]
+        h = h * decay + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, ct.astype(jnp.float32))
+        return h, y
+
+    xs = (x.swapaxes(0, 1), dt_h.swapaxes(0, 1),
+          bmat.swapaxes(0, 1), cmat.swapaxes(0, 1))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype), h

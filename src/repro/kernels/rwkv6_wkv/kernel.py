@@ -1,0 +1,97 @@
+"""Pallas TPU kernel for the RWKV-6 WKV recurrence (chunked, log-space).
+
+Grid ``(B, H, n_chunks)`` with the chunk dim innermost; the [K, K] state
+matrix lives in fp32 VMEM scratch and persists across chunks, so the HBM
+traffic is exactly one pass over r/k/v/decay plus one state write — the
+recurrence never round-trips the state.  Within a chunk the pairwise
+decay matrix ``exp(Lx_t − Li_s)`` (s < t → exponent ≤ 0, numerically
+safe) forms the attention-like intra-chunk term; the carry state update
+is a rank-c matmul.
+
+Layout: r,k,v,lw [B, H, T, K] (head-major); u [H, K]; state out [B,H,K,K].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, y_ref, s_out_ref, s_ref,
+            *, chunk: int, n_chunks: int):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0, 0].astype(jnp.float32)           # [c, K]
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    lw = lw_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)              # [K]
+
+    li = jnp.cumsum(lw, axis=0)                   # inclusive
+    lx = li - lw                                  # exclusive
+    # A[t,s] = Σ_k r[t,k]·k[s,k]·exp(lx[t]−li[s])   (s < t)
+    dec = jnp.exp(lx[:, None, :] - li[None, :, :])           # [c,c,K]
+    a = jnp.sum(r[:, None, :] * k[None, :, :] * dec, axis=-1)
+    c = chunk
+    ti = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    diag = jnp.sum(r * u[None, :] * k, axis=-1)
+    a = jnp.where(ti > si, a, 0.0) + jnp.where(
+        ti == si, diag[:, None], 0.0)
+    y = jax.lax.dot_general(a, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y = y + jax.lax.dot_general(r * jnp.exp(lx), s_ref[...],
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+    # state: S' = diag(e^{Lc}) S + Σ_s (k_s e^{Lc−Li_s})ᵀ v_s
+    lc = li[-1:, :]                                # [1,K]
+    kd = k * jnp.exp(lc - li)
+    s_ref[...] = s_ref[...] * jnp.exp(lc).T + jax.lax.dot_general(
+        kd, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(t == n_chunks - 1)
+    def _finish():
+        s_out_ref[0, 0] = s_ref[...]
+
+
+def wkv6_hm(r, k, v, lw, u, *, chunk: int = 32, interpret: bool = False):
+    """Head-major WKV6.  r,k,v,lw: [B,H,T,K]; u: [H,K].
+
+    Returns (y [B,H,T,K], state [B,H,K,K] fp32).
+    """
+    B, H, T, K = r.shape
+    c = min(chunk, T)
+    assert T % c == 0
+    n = T // c
+    kernel = functools.partial(_kernel, chunk=c, n_chunks=n)
+    y, s_out = pl.pallas_call(
+        kernel,
+        grid=(B, H, n),
+        in_specs=[
+            pl.BlockSpec((1, 1, c, K), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, c, K), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, c, K), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, c, K), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, K), lambda b, h, t: (h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, c, K), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, K, K), lambda b, h, t: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, T, K), r.dtype),
+            jax.ShapeDtypeStruct((B, H, K, K), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((K, K), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, lw, u)
+    return y, s_out

@@ -1,0 +1,20 @@
+"""Jit'd wrapper: seq-major [B,T,H,K] API over the head-major WKV kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import wkv6_hm
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def wkv6(r, k, v, lw, u, *, chunk: int = 32):
+    """r,k,v,lw: [B,T,H,K]; u: [H,K] → (y [B,T,H,K], state [B,H,K,K])."""
+    rh, kh, vh, lh = (x.transpose(0, 2, 1, 3) for x in (r, k, v, lw))
+    y, s = wkv6_hm(rh, kh, vh, lh, u, chunk=chunk, interpret=_interpret())
+    return y.transpose(0, 2, 1, 3), s

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the WKV6 recurrence: literal per-step scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, lw, u, s0=None):
+    """r,k,v,lw: [B,T,H,K]; u: [H,K].  Sequential fp32 recurrence.
+
+    Returns (y [B,T,H,K], state [B,H,K,K]).
+    """
+    B, T, H, K = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((B, H, K, K), jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, lt = (x.astype(jnp.float32) for x in inp)  # [B,H,K]
+        kv = kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv",
+                       rt, s + u.astype(jnp.float32)[None, :, :, None] * kv)
+        s = s * jnp.exp(lt)[..., None] + kv
+        return s, y
+
+    xs = tuple(x.swapaxes(0, 1) for x in (r, k, v, lw))
+    s, ys = jax.lax.scan(step, s0, xs)
+    return ys.swapaxes(0, 1).astype(r.dtype), s

@@ -1,0 +1,74 @@
+"""Serving launcher: Hermes-scheduled cluster over a request trace.
+
+Two modes:
+
+* ``--backend platform`` (default) — the event-driven serving platform
+  (cold-start model, straggler mitigation), any ``T/LB/S`` policy,
+  Azure-shaped or custom workload.  This is the §6 evaluation vehicle.
+* ``--backend models`` — real reduced-config JAX models behind the
+  Hermes frontend with measured compile-time cold starts.
+
+Examples::
+
+    python -m repro.launch.serve --policy E/H/PS --load 0.6 -n 5000
+    python -m repro.launch.serve --backend models --requests 12
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=["platform", "models"],
+                    default="platform")
+    ap.add_argument("--policy", default="E/H/PS")
+    ap.add_argument("--workload", default="ms-trace")
+    ap.add_argument("--load", type=float, default=0.6)
+    ap.add_argument("-n", type=int, default=4000)
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--cores", type=int, default=12)
+    ap.add_argument("--cold-start", type=float, default=0.5)
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="dispatch through the Pallas controller kernel")
+    ap.add_argument("--requests", type=int, default=12)
+    args = ap.parse_args()
+
+    if args.backend == "models":
+        from repro import configs
+        from repro.serving.backends import (HermesFrontend, Invocation,
+                                            ModelRegistry)
+        import numpy as np
+        reg = ModelRegistry()
+        reg.register("olmo-tiny", configs.get_smoke("olmo-1b"))
+        reg.register("rwkv-tiny", configs.get_smoke("rwkv6-3b"))
+        fe = HermesFrontend(reg, n_workers=2, cores=2, max_len=64)
+        rng = np.random.default_rng(0)
+        for i in range(args.requests):
+            fn = ("olmo-tiny", "rwkv-tiny")[i % 2]
+            out = fe.dispatch(Invocation(
+                func=fn, prompt=rng.integers(0, 100, 8), n_new=4))
+            print(f"req {i:2d} {fn:10s} worker={out.worker} "
+                  f"{'COLD' if out.cold else 'warm'} "
+                  f"{out.response_s*1e3:8.1f}ms")
+        return
+
+    from repro.core import (ClusterCfg, WORKLOADS, parse_policy, summarize)
+    from repro.serving.engine import ServeCfg, ServingCluster
+    cl = ClusterCfg(n_workers=args.workers, cores=args.cores)
+    wl = WORKLOADS[args.workload](cl, args.load, args.n, seed=0)
+    cfg = ServeCfg(cluster=cl, cold_start_s=args.cold_start)
+    out = ServingCluster(cfg, parse_policy(args.policy),
+                         use_kernel=args.use_kernel).run(wl)
+    s = summarize(out.response, wl.service, out.cold, out.rejected,
+                  out.server_time, out.core_time, out.end_time)
+    print(f"policy={args.policy} workload={args.workload} "
+          f"load={args.load}")
+    print(f"  slow p50/p99 = {s.slow_p50:.2f} / {s.slow_p99:.1f}")
+    print(f"  lat  p50/p99 = {s.lat_p50:.2f}s / {s.lat_p99:.2f}s")
+    print(f"  cold starts  = {100*s.cold_frac:.1f}%   "
+          f"servers = {s.mean_servers:.2f}   rejected = {s.n_rejected}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+``input_specs(cfg, shape_cfg)`` returns (args, in_specs) for the step
+that the shape lowers: ``train_step`` for train shapes, ``prefill`` for
+prefill shapes, ``decode_step`` for decode shapes.  For the ``[audio]``
+/ ``[vlm]`` archs the modality frontend is a stub — these specs ARE the
+precomputed frame/patch token ids, per the assignment.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distribution.sharding import pspec
+from repro.models.transformer import Model
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def param_shapes(model: Model):
+    return jax.eval_shape(lambda: model.init(jax.random.key(0)))
+
+
+def cache_shapes(model: Model, batch: int, max_len: int):
+    return jax.eval_shape(lambda: model.init_cache(batch, max_len))
+
+
+def input_specs(model: Model, shape_cfg):
+    """Returns (args, arg_pspecs) for the step function of this shape."""
+    cfg = model.cfg
+    B, S = shape_cfg.global_batch, shape_cfg.seq_len
+    tok_spec = pspec("batch", "seq")
+    if shape_cfg.kind == "train":
+        args = {"tokens": _sds((B, S), jnp.int32),
+                "labels": _sds((B, S), jnp.int32)}
+        specs = {"tokens": tok_spec, "labels": tok_spec}
+        return args, specs
+    if shape_cfg.kind == "prefill":
+        cache = cache_shapes(model, B, S)
+        args = {"tokens": _sds((B, S), jnp.int32), "cache": cache}
+        specs = {"tokens": tok_spec,
+                 "cache": model.cache_specs(B, S)}
+        return args, specs
+    # decode: one new token against a seq_len-deep cache/state
+    cache = cache_shapes(model, B, S)
+    args = {"tok": _sds((B, 1), jnp.int32), "cache": cache,
+            "pos": _sds((B,), jnp.int32)}
+    specs = {"tok": tok_spec, "cache": model.cache_specs(B, S),
+             "pos": pspec("batch")}
+    return args, specs

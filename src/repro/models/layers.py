@@ -1,0 +1,168 @@
+"""Shared neural building blocks (pure functions over param dicts).
+
+Conventions:
+* params are nested dicts of ``jnp`` arrays; per-layer params are stacked
+  along a leading ``L`` axis and consumed through ``jax.lax.scan``.
+* compute runs in ``cfg.act_dtype`` (bf16 by default); params are stored
+  in ``cfg.param_dtype`` (f32) and cast at use — standard mixed precision.
+* every activation is annotated with logical axis names via
+  :func:`repro.distribution.sharding.shard` (no-ops without a mesh ctx).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distribution.sharding import shard
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, *, in_axis: int = -2) -> jax.Array:
+    """LeCun-normal in the contraction dim (matches common LM inits)."""
+    fan_in = shape[in_axis]
+    return (jax.random.normal(key, shape) / math.sqrt(fan_in)).astype(dtype)
+
+
+def embed_init(key, shape, dtype) -> jax.Array:
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array | None, eps: float = 1e-6
+            ) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    if scale is not None:
+        x = x * (1.0 + scale.astype(jnp.float32))
+    return x.astype(dt)
+
+
+def layernorm_np(x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Non-parametric LayerNorm (OLMo): no scale, no bias."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps)).astype(dt)
+
+
+def apply_norm(cfg, x: jax.Array, scale: jax.Array | None) -> jax.Array:
+    if cfg.norm == "layernorm_np":
+        return layernorm_np(x)
+    return rmsnorm(x, scale)
+
+
+# ---------------------------------------------------------------------------
+# Positional encodings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, Dh]; pos: broadcastable to [..., S] (int32)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # [Dh/2]
+    ang = pos[..., None].astype(jnp.float32) * freqs    # [..., S, Dh/2]
+    cos = jnp.cos(ang)[..., None, :]                    # [..., S, 1, Dh/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pe(seq: int, d_model: int, offset: int = 0) -> jax.Array:
+    """Classic transformer sinusoidal position embedding (musicgen)."""
+    pos = jnp.arange(offset, offset + seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d_model)
+    pe = jnp.zeros((seq, d_model), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang))
+    pe = pe.at[:, 1::2].set(jnp.cos(ang))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg, d_ff: int | None = None) -> dict:
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    dt = cfg.p_dtype
+    ks = jax.random.split(key, 3)
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {"w_gate": dense_init(ks[0], (D, F), dt),
+                "w_in": dense_init(ks[1], (D, F), dt),
+                "w_out": dense_init(ks[2], (F, D), dt)}
+    return {"w_in": dense_init(ks[0], (D, F), dt),
+            "w_out": dense_init(ks[1], (F, D), dt)}
+
+
+def mlp(cfg, p: dict, x: jax.Array) -> jax.Array:
+    """x: [B, S, D] → [B, S, D]."""
+    dt = x.dtype
+    if cfg.mlp in ("swiglu", "geglu"):
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))
+        h = jnp.einsum("bsd,df->bsf", x, p["w_in"].astype(dt))
+        g = shard(g, "batch", "seq", "ff")
+        h = shard(h, "batch", "seq", "ff")
+        act = jax.nn.silu(g) if cfg.mlp == "swiglu" else \
+            jax.nn.gelu(g, approximate=True)
+        h = act * h
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, p["w_in"].astype(dt))
+        h = shard(h, "batch", "seq", "ff")
+        h = jax.nn.gelu(h, approximate=True)
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_out"].astype(dt))
+    return shard(out, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def init_embed(key, cfg) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {"tok": embed_init(k1, (cfg.vocab, cfg.d_model), cfg.p_dtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(k2, (cfg.d_model, cfg.vocab), cfg.p_dtype)
+    return p
+
+
+def embed(cfg, p: dict, tokens: jax.Array) -> jax.Array:
+    x = p["tok"].astype(cfg.act_dtype)[tokens]
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.act_dtype)
+    return shard(x, "batch", "seq", "embed")
+
+
+def lm_logits(cfg, p: dict, x: jax.Array) -> jax.Array:
+    w = (p["tok"].T if cfg.tie_embeddings else p["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+    if cfg.logit_softcap > 0.0:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean cross-entropy; fp32 reduction; labels < 0 are masked."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum((lse - ll) * mask) / jnp.maximum(jnp.sum(mask), 1.0)

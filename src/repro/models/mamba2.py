@@ -1,0 +1,179 @@
+"""Mamba-2 (SSD) block — the state-space backbone of zamba2.
+
+Selective state space with scalar-per-head decay (the SSD restriction):
+
+    h_t = exp(Δ_t·A_h) · h_{t-1} + Δ_t · B_t ⊗ x_t      h: [H, P, N]
+    y_t = C_t · h_t + D_h · x_t
+
+Training/prefill uses the chunked "1-semiseparable" matrix form: within a
+chunk the pairwise decay ``exp(la_t − la_s)`` (s ≤ t, exponent ≤ 0 — log
+space, no overflow) forms an [c, c] attention-like score matrix per head,
+and the carried state advances once per chunk.  Decode is the O(1)
+recurrence with a rolling conv window.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distribution.sharding import shard
+from repro.models.layers import dense_init
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    return s, d_in, n_heads
+
+
+def init_mamba2(key, cfg) -> dict:
+    s, d_in, H = _dims(cfg)
+    D, N = cfg.d_model, s.d_state
+    dt = cfg.p_dtype
+    ks = jax.random.split(key, 3)
+    conv_ch = d_in + 2 * N
+    return {
+        "in_proj": dense_init(ks[0], (D, 2 * d_in + 2 * N + H), dt),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_width, conv_ch))
+                   * 0.1).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "a_log": jnp.zeros((H,), dt),                  # A = -exp(a_log)
+        "d_skip": jnp.ones((H,), dt),
+        "dt_bias": jnp.zeros((H,), dt),
+        "norm_scale": jnp.ones((d_in,), dt),
+        "out_proj": dense_init(ks[2], (d_in, D), dt),
+    }
+
+
+def init_mamba_state(cfg, batch: int, n_layers: int | None = None) -> dict:
+    s, d_in, H = _dims(cfg)
+    L = n_layers if n_layers is not None else cfg.n_layers
+    return {
+        "conv": jnp.zeros((L, batch, s.conv_width - 1, d_in + 2 * s.d_state),
+                          cfg.act_dtype),
+        "ssm": jnp.zeros((L, batch, H, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD scan — chunked (train/prefill) and stepwise (decode)
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, dt_h, bmat, cmat, a, h0, chunk: int = 128):
+    """Chunked SSD scan.
+
+    x: [B,T,H,P]; dt_h: [B,T,H] (post-softplus Δ); bmat/cmat: [B,T,N];
+    a: [H] (negative); h0: [B,H,P,N] f32.  Returns (y [B,T,H,P], h_out).
+    """
+    B, T, H, P = x.shape
+    N = bmat.shape[-1]
+    c = min(chunk, T)
+    T0 = T
+    if T % c:                      # pad tail: Δ=0 ⇒ no state contribution
+        pad = c - T % c
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt_h = jnp.pad(dt_h, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        T = T + pad
+    n = T // c
+
+    def rs(z, trailing):
+        return z.reshape((B, n, c) + trailing).swapaxes(0, 1)
+
+    xc = rs(x, (H, P))
+    dtc = rs(dt_h, (H,))
+    bc = rs(bmat, (N,))
+    cc = rs(cmat, (N,))
+
+    def chunk_step(h, inp):
+        xx, dd, bb, ccm = inp                      # [B,c,H,P],[B,c,H],[B,c,N]
+        dd = dd.astype(jnp.float32)
+        la = jnp.cumsum(dd * a[None, None, :], axis=1)       # [B,c,H] ≤ 0
+        # intra-chunk scores  M[t,s] = (C_t·B_s)·exp(la_t−la_s)·Δ_s, s ≤ t
+        cb = jnp.einsum("btn,bsn->bts", ccm.astype(jnp.float32),
+                        bb.astype(jnp.float32))
+        dec = jnp.exp(la[:, :, None, :] - la[:, None, :, :])  # [B,t,s,H]
+        t_idx = jnp.arange(c)
+        mask = (t_idx[:, None] >= t_idx[None, :])[None, :, :, None]
+        m = jnp.where(mask, cb[..., None] * dec * dd[:, None], 0.0)
+        y = jnp.einsum("btsh,bshp->bthp", m, xx.astype(jnp.float32))
+        # carry-in contribution:  C_t · (h0 ⊙ e^{la_t})
+        y = y + jnp.einsum("btn,bhpn,bth->bthp", ccm.astype(jnp.float32),
+                           h, jnp.exp(la))
+        # state update:  h' = h·e^{la_end} + Σ_s e^{la_end−la_s}·Δ_s·B_s⊗x_s
+        la_end = la[:, -1:, :]                                # [B,1,H]
+        w = jnp.exp(la_end - la) * dd                         # [B,c,H]
+        h_new = h * jnp.exp(la_end[:, 0])[:, :, None, None] + jnp.einsum(
+            "bsh,bsn,bshp->bhpn", w, bb.astype(jnp.float32),
+            xx.astype(jnp.float32))
+        return h_new, y.astype(x.dtype)
+
+    h_out, ys = jax.lax.scan(chunk_step, h0, (xc, dtc, bc, cc))
+    y = ys.swapaxes(0, 1).reshape(B, T, H, P)
+    return y[:, :T0], h_out
+
+
+def ssd_step(x, dt_h, bvec, cvec, a, h):
+    """One-token SSD.  x: [B,H,P]; dt_h: [B,H]; b,c: [B,N]; h: [B,H,P,N]."""
+    dd = dt_h.astype(jnp.float32)
+    decay = jnp.exp(dd * a[None, :])[:, :, None, None]
+    upd = (dd[:, :, None, None] * x.astype(jnp.float32)[..., None]
+           * bvec.astype(jnp.float32)[:, None, None, :])
+    h_new = h * decay + upd
+    y = jnp.einsum("bhpn,bn->bhp", h_new, cvec.astype(jnp.float32))
+    return y.astype(x.dtype), h_new
+
+
+# ---------------------------------------------------------------------------
+# Block forward
+# ---------------------------------------------------------------------------
+
+def _causal_conv(seq, w, b, conv_in):
+    """seq: [B,T,C]; w: [W,C]; conv_in: [B,W-1,C] carry.  Depthwise."""
+    W = w.shape[0]
+    full = jnp.concatenate([conv_in, seq], axis=1)          # [B,T+W-1,C]
+    out = sum(full[:, i:i + seq.shape[1]] * w[i][None, None]
+              for i in range(W))
+    out = out + b[None, None]
+    carry = full[:, -(W - 1):] if W > 1 else conv_in
+    return jax.nn.silu(out), carry
+
+
+def mamba2_block(cfg, p, x, state: dict):
+    """x: [B,T,D]; state: {conv [B,W-1,C], ssm [B,H,P,N]}."""
+    s, d_in, H = _dims(cfg)
+    N, P = s.d_state, s.head_dim
+    B, T, D = x.shape
+    dt = x.dtype
+    proj = jnp.einsum("btd,de->bte", x, p["in_proj"].astype(dt))
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in:d_in + d_in + 2 * N]
+    dt_raw = proj[..., -H:]
+    xbc, conv_out = _causal_conv(xbc, p["conv_w"].astype(dt),
+                                 p["conv_b"].astype(dt), state["conv"])
+    xin = xbc[..., :d_in].reshape(B, T, H, P)
+    bmat = xbc[..., d_in:d_in + N]
+    cmat = xbc[..., d_in + N:]
+    dt_h = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                           + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xin = shard(xin, "batch", "seq", "heads", None)
+    if T == 1:
+        y, ssm = ssd_step(xin[:, 0], dt_h[:, 0], bmat[:, 0], cmat[:, 0],
+                          a, state["ssm"])
+        y = y[:, None]
+    else:
+        y, ssm = ssd_chunked(xin, dt_h, bmat, cmat, a, state["ssm"],
+                             s.chunk)
+    y = y + xin * p["d_skip"].astype(dt)[None, None, :, None]
+    y = y.reshape(B, T, d_in)
+    # gated RMSNorm (Mamba-2): norm(y · silu(z))
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+         ).astype(dt) * p["norm_scale"].astype(dt)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"].astype(dt))
+    return (shard(out, "batch", "seq", "embed"),
+            {"conv": conv_out, "ssm": ssm})

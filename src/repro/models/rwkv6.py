@@ -1,0 +1,231 @@
+"""RWKV-6 "Finch" block: data-dependent decay time-mix + channel-mix.
+
+The WKV recurrence per head (K = V = head_size):
+
+    S_t = diag(w_t) · S_{t-1} + k_tᵀ v_t
+    y_t = r_t · (S_{t-1} + diag(u) · k_tᵀ v_t)
+
+with per-channel, *data-dependent* decay ``w_t = exp(-exp(ŵ_t))`` (the
+RWKV-6 novelty over RWKV-5's static decay).  Training/prefill uses a
+chunked formulation: within a chunk the pairwise decay factors
+``exp(Lx_t − Li_s)`` are computed in log space (always ≤ 1 for s < t, so
+no overflow), and the carried state is advanced once per chunk — the same
+structure as the Pallas kernel in ``repro.kernels.rwkv6_wkv``.
+
+State per layer (decode): token-shift carries (time-mix and channel-mix)
+plus the [H, K, V] WKV state — O(1) in sequence length, which is exactly
+why ``long_500k`` is runnable for this arch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distribution.sharding import shard
+from repro.models.layers import dense_init, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_rwkv_block(key, cfg) -> dict:
+    r, D = cfg.rwkv, cfg.d_model
+    K = r.head_size
+    H = D // K
+    F = int(r.ff_mult * D)
+    dt = cfg.p_dtype
+    ks = jax.random.split(key, 10)
+    tm = {
+        "mu_x": jnp.full((D,), 0.5, dt),
+        "mu": jnp.full((5, D), 0.5, dt),                  # r,k,v,w,g lerp
+        "mix_w1": dense_init(ks[0], (D, 5 * r.mix_lora), dt),
+        "mix_w2": (jax.random.normal(ks[1], (5, r.mix_lora, D)) * 0.01
+                   ).astype(dt),
+        "wr": dense_init(ks[2], (D, D), dt),
+        "wk": dense_init(ks[3], (D, D), dt),
+        "wv": dense_init(ks[4], (D, D), dt),
+        "wg": dense_init(ks[5], (D, D), dt),
+        "wo": dense_init(ks[6], (D, D), dt),
+        "decay_base": jnp.full((D,), -4.0, dt),           # ŵ bias
+        "decay_w1": dense_init(ks[7], (D, r.decay_lora), dt),
+        "decay_w2": (jax.random.normal(ks[8], (r.decay_lora, D)) * 0.01
+                     ).astype(dt),
+        "bonus": jnp.zeros((D,), dt),                     # u, per channel
+        "ln_scale": jnp.ones((D,), dt),                   # per-head groupnorm
+        "ln_bias": jnp.zeros((D,), dt),
+    }
+    k9, k10, k11 = jax.random.split(ks[9], 3)
+    cm = {
+        "mu_k": jnp.full((D,), 0.5, dt),
+        "mu_r": jnp.full((D,), 0.5, dt),
+        "wk": dense_init(k9, (D, F), dt),
+        "wv": dense_init(k10, (F, D), dt),
+        "wr": dense_init(k11, (D, D), dt),
+    }
+    return {"tm": tm, "cm": cm,
+            "ln1": jnp.zeros((D,), dt), "ln2": jnp.zeros((D,), dt)}
+
+
+def init_rwkv_state(cfg, batch: int, n_layers: int | None = None) -> dict:
+    D = cfg.d_model
+    K = cfg.rwkv.head_size
+    H = D // K
+    L = n_layers if n_layers is not None else cfg.n_layers
+    return {
+        "tm_shift": jnp.zeros((L, batch, D), cfg.act_dtype),
+        "cm_shift": jnp.zeros((L, batch, D), cfg.act_dtype),
+        "wkv": jnp.zeros((L, batch, H, K, K), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# WKV — chunked (train/prefill) and stepwise (decode)
+# ---------------------------------------------------------------------------
+
+def wkv_chunked(r, k, v, lw, u, s0, chunk: int = 32):
+    """Chunked WKV scan.
+
+    r,k,v: [B,T,H,K]; lw: [B,T,H,K] log-decay (≤0); u: [H,K];
+    s0: [B,H,K,K] f32 carry-in.  Returns (y [B,T,H,K], s_out).
+    """
+    B, T, H, K = r.shape
+    c = min(chunk, T)
+    T0 = T
+    if T % c:          # pad tail: lw=0 ⇒ decay 1, k=v=0 ⇒ no contribution
+        pad = c - T % c
+        r, k, v, lw = (jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                       for a in (r, k, v, lw))
+        T = T + pad
+    n = T // c
+
+    def rs(x):
+        return x.reshape(B, n, c, H, K).transpose(1, 0, 3, 2, 4)
+
+    rc, kc, vc, lwc = rs(r), rs(k), rs(v), rs(lw)   # [n,B,H,c,K]
+
+    def chunk_step(s, inp):
+        rr, kk, vv, ll = inp                         # [B,H,c,K]
+        ll = ll.astype(jnp.float32)
+        li = jnp.cumsum(ll, axis=2)                  # inclusive  Li[s]
+        lx = li - ll                                 # exclusive  Lx[t]
+        # pairwise decay D[t,s] = exp(Lx[t] - Li[s]), s < t  (≤ 1 — safe)
+        dec = jnp.exp(lx[:, :, :, None, :] - li[:, :, None, :, :])
+        rrf = rr.astype(jnp.float32)
+        kkf = kk.astype(jnp.float32)
+        a = (rrf[:, :, :, None, :] * kkf[:, :, None, :, :] * dec).sum(-1)
+        t_idx = jnp.arange(c)
+        mask = t_idx[:, None] > t_idx[None, :]
+        a = jnp.where(mask[None, None], a, 0.0)      # strict lower
+        diag = (rrf * u[None, :, None, :].astype(jnp.float32) * kkf).sum(-1)
+        a = a + jnp.eye(c)[None, None] * diag[:, :, :, None]
+        y = jnp.einsum("bhts,bhsk->bhtk", a, vv.astype(jnp.float32))
+        y = y + jnp.einsum("bhtk,bhkv->bhtv", rrf * jnp.exp(lx), s)
+        # advance state:  S' = diag(e^Lc) S + Σ_s (k_s e^{Lc−Li_s})ᵀ v_s
+        lc = li[:, :, -1:, :]                        # [B,H,1,K]
+        kd = kkf * jnp.exp(lc - li)
+        s_new = s * jnp.exp(lc.squeeze(2))[..., None] + jnp.einsum(
+            "bhsk,bhsv->bhkv", kd, vv.astype(jnp.float32))
+        return s_new, y
+
+    s_out, ys = jax.lax.scan(chunk_step, s0, (rc, kc, vc, lwc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, T, H, K).astype(r.dtype)
+    return y[:, :T0], s_out
+
+
+def wkv_step(r, k, v, lw, u, s):
+    """Single-token WKV.  r,k,v,lw: [B,H,K]; s: [B,H,K,V] f32."""
+    rf, kf, vf = (x.astype(jnp.float32) for x in (r, k, v))
+    kv = kf[..., :, None] * vf[..., None, :]               # [B,H,K,V]
+    y = jnp.einsum("bhk,bhkv->bhv",
+                   rf, s + u[None].astype(jnp.float32)[..., None] * kv)
+    s_new = s * jnp.exp(lw.astype(jnp.float32))[..., None] + kv
+    return y.astype(r.dtype), s_new
+
+
+# ---------------------------------------------------------------------------
+# Block forward
+# ---------------------------------------------------------------------------
+
+def _ddlerp(tm, x, x_prev):
+    """Data-dependent token-shift interpolation (RWKV-6)."""
+    B, T, D = x.shape
+    xx = x_prev - x
+    base = x + xx * tm["mu_x"].astype(x.dtype)
+    lora = jnp.tanh(jnp.einsum("btd,de->bte", base,
+                               tm["mix_w1"].astype(x.dtype)))
+    lora = lora.reshape(B, T, 5, -1)
+    delta = jnp.einsum("btfe,fed->fbtd", lora, tm["mix_w2"].astype(x.dtype))
+    mixed = x[None] + xx[None] * (tm["mu"].astype(x.dtype)[:, None, None]
+                                  + delta)
+    return mixed  # [5, B, T, D] → r,k,v,w,g
+
+
+def time_mix(cfg, tm, x, shift_in, wkv_in, chunk: int = 32):
+    """x: [B,T,D].  Returns (out, shift_out, wkv_out)."""
+    B, T, D = x.shape
+    K = cfg.rwkv.head_size
+    H = D // K
+    x_prev = jnp.concatenate([shift_in[:, None], x[:, :-1]], axis=1)
+    xr, xk, xv, xw, xg = _ddlerp(tm, x, x_prev)
+    dt = x.dtype
+    r = jnp.einsum("btd,de->bte", xr, tm["wr"].astype(dt))
+    k = jnp.einsum("btd,de->bte", xk, tm["wk"].astype(dt))
+    v = jnp.einsum("btd,de->bte", xv, tm["wv"].astype(dt))
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", xg, tm["wg"].astype(dt)))
+    w_hat = tm["decay_base"].astype(jnp.float32) + jnp.einsum(
+        "btd,de,ef->btf", xw.astype(jnp.float32),
+        tm["decay_w1"].astype(jnp.float32),
+        tm["decay_w2"].astype(jnp.float32))
+    lw = -jnp.exp(w_hat)                                   # log w ≤ 0
+
+    hs = (B, T, H, K)
+    r_, k_, v_ = (a.reshape(hs) for a in (r, k, v))
+    lw_ = lw.reshape(hs)
+    u = tm["bonus"].astype(jnp.float32).reshape(H, K)
+    r_ = shard(r_, "batch", "seq", "heads", None)
+    k_ = shard(k_, "batch", "seq", "heads", None)
+    v_ = shard(v_, "batch", "seq", "heads", None)
+    lw_ = shard(lw_, "batch", "seq", "heads", None)
+    if T == 1:
+        y, s_out = wkv_step(r_[:, 0], k_[:, 0], v_[:, 0], lw_[:, 0], u,
+                            wkv_in)
+        y = y[:, None]
+    else:
+        y, s_out = wkv_chunked(r_, k_, v_, lw_, u, wkv_in, chunk)
+    # per-head group norm, then gate and output projection
+    y = y.reshape(B, T, H, K)
+    mu = y.mean(-1, keepdims=True)
+    var = ((y - mu) ** 2).mean(-1, keepdims=True)
+    y = (y - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = y.reshape(B, T, D) * tm["ln_scale"].astype(dt) + \
+        tm["ln_bias"].astype(dt)
+    out = jnp.einsum("btd,de->bte", y.astype(dt) * g, tm["wo"].astype(dt))
+    return shard(out, "batch", "seq", "embed"), x[:, -1], s_out
+
+
+def channel_mix(cfg, cm, x, shift_in):
+    B, T, D = x.shape
+    dt = x.dtype
+    x_prev = jnp.concatenate([shift_in[:, None], x[:, :-1]], axis=1)
+    xx = x_prev - x
+    xk = x + xx * cm["mu_k"].astype(dt)
+    xr = x + xx * cm["mu_r"].astype(dt)
+    k = jnp.einsum("btd,df->btf", xk, cm["wk"].astype(dt))
+    k = shard(k, "batch", "seq", "ff")
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("btf,fd->btd", k, cm["wv"].astype(dt))
+    r = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, cm["wr"].astype(dt)))
+    return shard(r * kv, "batch", "seq", "embed"), x[:, -1]
+
+
+def rwkv_block(cfg, p, x, state: dict, chunk: int = 32):
+    """One RWKV-6 layer.  state: {tm_shift, cm_shift, wkv} (per layer)."""
+    h = rmsnorm(x, p["ln1"])
+    att, tm_shift, wkv = time_mix(cfg, p["tm"], h, state["tm_shift"],
+                                  state["wkv"], chunk)
+    x = shard(x + att, "batch", "act_seq", "embed")
+    h = rmsnorm(x, p["ln2"])
+    ff, cm_shift = channel_mix(cfg, p["cm"], h, state["cm_shift"])
+    x = shard(x + ff, "batch", "act_seq", "embed")
+    return x, {"tm_shift": tm_shift, "cm_shift": cm_shift, "wkv": wkv}

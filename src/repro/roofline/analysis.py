@@ -1,0 +1,174 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+Per (arch × shape × mesh) cell::
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = collective_bytes_per_device / link_bw
+
+(cost_analysis on a GSPMD-partitioned executable is already per device,
+so no further division by chip count.)
+
+**While-loop correction.**  XLA's cost analysis counts a while-loop body
+once, and this framework scans over layers (and the flash attention
+scans over blocks).  The roofline therefore never reads the full scanned
+module; it compiles two *unrolled* lowerings with ``L = unit`` and
+``L = 2·unit`` layers (``unit`` = the arch's repeat period) and solves
+the affine model ``cost(L) = fixed + per_layer·L`` exactly — layers are
+homogeneous, so the extrapolation to the real depth is exact, and the
+unrolled attention (`attn_impl="xla_unrolled"`) makes the true causal
+FLOPs visible.  The full-depth scanned compile (launch/dryrun.py) is
+still what proves memory fits; this module owns the FLOPs/bytes/
+collective terms.
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI, ~25 GB/s/link inter-pod (DCI assumption, stated in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+from repro import configs
+from repro.configs.shapes import SHAPES, applicable
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (in-pod)
+DCI_BW = 25e9                # bytes/s per link (cross-pod, assumption)
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    # extrapolated per-device totals for the real depth
+    flops: float
+    bytes_hbm: float
+    coll_bytes: float
+    coll_cross_pod: float
+    # the three terms, in seconds
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float            # 6·N_active·tokens (train) / 2· (serve)
+    useful_ratio: float           # MODEL_FLOPS / (HLO_FLOPs × chips)
+    roofline_frac: float          # t_ideal_compute / max(terms)
+    note: str = ""
+
+    def row(self):
+        return dataclasses.asdict(self)
+
+
+def model_flops(cfg, shape_cfg) -> float:
+    """Analytic matmul FLOPs: 6·N·D (train) or 2·N·D (forward-only)."""
+    n_active = cfg.active_params()
+    tokens = shape_cfg.global_batch * (
+        shape_cfg.seq_len if shape_cfg.kind in ("train", "prefill") else 1)
+    mult = 6.0 if shape_cfg.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def _unit(cfg) -> int:
+    return cfg.hybrid_attn_every if cfg.family == "hybrid" and \
+        cfg.hybrid_attn_every else 1
+
+
+def roofline_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+                  rule_overrides: dict | None = None,
+                  cfg_overrides: dict | None = None,
+                  attn_impl: str = "xla_unrolled") -> Roofline | None:
+    """Two-point unrolled lowering → affine per-layer cost → roofline."""
+    from repro.launch.dryrun import run_cell  # env flag set by caller/main
+    cfg = configs.get(arch)
+    shape_cfg = SHAPES[shape_name]
+    ok, reason = applicable(cfg, shape_cfg)
+    if not ok:
+        return None
+    u = _unit(cfg)
+    r1 = run_cell(arch, shape_name, multi_pod=multi_pod,
+                  layer_mode="unroll", n_layers=u, attn_impl=attn_impl,
+                  rule_overrides=rule_overrides,
+                  cfg_overrides=cfg_overrides)
+    r2 = run_cell(arch, shape_name, multi_pod=multi_pod,
+                  layer_mode="unroll", n_layers=2 * u, attn_impl=attn_impl,
+                  rule_overrides=rule_overrides,
+                  cfg_overrides=cfg_overrides)
+    if r1.status != "ok" or r2.status != "ok":
+        raise RuntimeError(
+            f"roofline lowering failed: {r1.reason} / {r2.reason}")
+    L = cfg.n_layers
+
+    def extrap(a, b):
+        per_layer = (b - a) / u
+        return a + per_layer * (L - u)
+
+    flops = extrap(r1.flops, r2.flops)
+    bytes_hbm = extrap(r1.bytes_accessed, r2.bytes_accessed)
+    coll = extrap(r1.collectives.get("total", 0.0),
+                  r2.collectives.get("total", 0.0))
+    cp = extrap(r1.collectives.get("cross_pod", 0.0),
+                r2.collectives.get("cross_pod", 0.0))
+    chips = 512 if multi_pod else 256
+    t_comp = flops / PEAK_FLOPS
+    t_mem = bytes_hbm / HBM_BW
+    t_coll = (coll - cp) / ICI_BW + cp / DCI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape_cfg)
+    useful = mf / max(flops * chips, 1e-9)
+    t_ideal = mf / chips / PEAK_FLOPS
+    frac = t_ideal / max(max(terms.values()), 1e-12)
+    return Roofline(
+        arch=arch, shape=shape_name,
+        mesh="2x16x16" if multi_pod else "16x16",
+        flops=flops, bytes_hbm=bytes_hbm, coll_bytes=coll,
+        coll_cross_pod=cp, t_compute=t_comp, t_memory=t_mem,
+        t_collective=t_coll, bottleneck=bottleneck, model_flops=mf,
+        useful_ratio=useful, roofline_frac=frac)
+
+
+def fmt_row(r: Roofline) -> str:
+    return (f"{r.arch:18s} {r.shape:12s} {r.mesh:8s} "
+            f"comp={r.t_compute*1e3:9.3f}ms mem={r.t_memory*1e3:9.3f}ms "
+            f"coll={r.t_collective*1e3:9.3f}ms -> {r.bottleneck:10s} "
+            f"useful={r.useful_ratio:6.3f} roofline={r.roofline_frac:6.3f}")
+
+
+def main() -> None:
+    # device-count override must precede jax init — dryrun sets it on
+    # import, so import it before anything touches jax.
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="experiments/roofline.json")
+    args = ap.parse_args()
+    cells = ([(a, s) for a in configs.ARCH_NAMES for s in SHAPES]
+             if args.all else [(args.arch, args.shape)])
+    rows = []
+    for arch, shape in cells:
+        try:
+            r = roofline_cell(arch, shape, multi_pod=args.multi_pod)
+        except RuntimeError as e:
+            print(f"{arch:18s} {shape:12s} FAIL {e}", flush=True)
+            continue
+        if r is None:
+            print(f"{arch:18s} {shape:12s} SKIP (inapplicable)", flush=True)
+            continue
+        print(fmt_row(r), flush=True)
+        rows.append(r.row())
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    import repro.launch.dryrun  # noqa: F401 — sets the device-count flag
+    main()

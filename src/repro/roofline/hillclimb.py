@@ -1,0 +1,93 @@
+"""§Perf hillclimb: hypothesis → change → re-lower → re-analyse.
+
+Runs the three selected cells through their iteration ladders (each
+rung toggles one optimization via cfg/rule overrides so the delta is
+attributable), printing before/after roofline terms and writing
+``experiments/perf_iterations.json``.
+
+    PYTHONPATH=src python -m repro.roofline.hillclimb
+"""
+from __future__ import annotations
+
+import json
+import os
+
+# --- each entry: (arch, shape, label, hypothesis, kwargs) ---------------
+RUNS = [
+    # ---- Cell 1: granite-20b decode_32k (collective-bound serving) ----
+    ("granite-20b", "decode_32k", "baseline",
+     "MQA kv=1 → cache seq-sharded over model; XLA materializes a "
+     "gathered f32 [B,H,S] score array per layer → 5 GB/step collectives "
+     "+ 30 GB/step HBM.",
+     dict(cfg_overrides={"flash_decode": False})),
+    ("granite-20b", "decode_32k", "+flash-decode",
+     "shard_map partial-softmax merge: scores stay local [B,H,S/16] "
+     "f32; combine = pmax(m)+psum(l,o) ≈ 200 KB/layer → collective "
+     "term ~30x down, memory term ~8x down.",
+     dict()),
+    # ---- Cell 2: deepseek-v2-236b decode_32k (worst cell) -------------
+    ("deepseek-v2-236b", "decode_32k", "baseline",
+     "Two pathologies: (a) FSDP weight layout forces a per-layer expert "
+     "weight all-gather (~28 GB/step — 26x what the 128 tokens need); "
+     "(b) MLA scores materialize gathered f32 [B,H,S] arrays.",
+     dict(cfg_overrides={"flash_decode": False},
+          rule_overrides={"fsdp": "data", "expert_ff": None})),
+    ("deepseek-v2-236b", "decode_32k", "+mla-flash-decode",
+     "latent-space partial softmax over the seq-sharded c_kv cache "
+     "(scores local, psum of [B,H,kv_lora]) → memory term down.",
+     dict(rule_overrides={"fsdp": "data", "expert_ff": None})),
+    ("deepseek-v2-236b", "decode_32k", "+serving-weight-layout",
+     "decode latency path must not FSDP-gather: shard expert ff dim "
+     "over 'data' instead (reads local, combine psum is [T,D]-sized) "
+     "→ collective term ~20x down.",
+     dict()),
+    # ---- Cell 3: qwen3-14b train_4k (collective-bound training) -------
+    ("qwen3-14b", "train_4k", "baseline",
+     "40 heads on 16-way TP: GSPMD 'involuntary full rematerialization' "
+     "replicates head-sharded tensors at every attention block "
+     "transition → 5.6 TB/step collectives.",
+     dict(cfg_overrides={"gqa_pad": False})),
+    ("qwen3-14b", "train_4k", "+gqa-pad",
+     "pad q heads 40→48 inside each KV group + replicate kv 8→16: all "
+     "head dims divide TP → pathological copies vanish; cost ≤1.2x "
+     "attention FLOPs.",
+     dict()),
+    ("qwen3-14b", "train_4k", "+remat-dots",
+     "full remat recomputes every matmul in backward (useful≈0.75); "
+     "checkpoint_dots keeps matmul outputs → HLO FLOPs ≈ model FLOPs.",
+     dict(cfg_overrides={"remat": "dots"})),
+]
+
+
+def main() -> None:
+    from repro.roofline.analysis import fmt_row, roofline_cell
+    from repro.roofline.report import enrich
+    rows = []
+    prev_key = None
+    prev = None
+    for arch, shape, label, hyp, kw in RUNS:
+        r = roofline_cell(arch, shape, **kw)
+        e = enrich(r.row())
+        key = (arch, shape)
+        print(f"\n=== {arch} / {shape} — {label} ===", flush=True)
+        print(f"hypothesis: {hyp}")
+        print(fmt_row(r))
+        print(f"  comp-frac={e['comp_frac']:.4f} bw-frac={e['bw_frac']:.4f}"
+              f" roofline={e['roofline_frac']:.4f}")
+        if prev is not None and prev_key == key:
+            for t in ("t_compute", "t_memory", "t_collective"):
+                b, a = prev[t], e[t]
+                print(f"  {t}: {b*1e3:10.2f} → {a*1e3:10.2f} ms  "
+                      f"({b/max(a,1e-12):5.1f}x)")
+        e.update(label=label, hypothesis=hyp)
+        rows.append(e)
+        prev, prev_key = e, key
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/perf_iterations.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    print("\nwrote experiments/perf_iterations.json")
+
+
+if __name__ == "__main__":
+    import repro.launch.dryrun  # noqa: F401 — device-count flag
+    main()

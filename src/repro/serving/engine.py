@@ -1,0 +1,273 @@
+"""Serving platform: Controller + Workers with Hermes as the dispatcher.
+
+This is the OpenWhisk analogue of the paper (§5) adapted to a model-
+serving cluster: "functions" are registered model entry points, a warm
+executor is a worker-resident compiled step + weights, a cold start pays
+the compile/residency cost, and each Worker timeshares its cores across
+active invocations (processor sharing — the serving runtime's CFS
+analogue).  On top of the paper's design it adds **straggler
+mitigation**: invocations stuck on a degraded worker past a deadline are
+re-dispatched (early binding's correction mechanism at scale).
+
+The engine is an event-driven virtual-time loop (the platform layer the
+paper implements in Scala); the *policy* math is shared with the
+simulator (``repro.core.policies``), and the controller can execute its
+dispatch decisions through the batched Pallas kernel
+(``repro.kernels.hermes_select``) — one cluster-state read per arrival
+batch, the TPU-native form of the §6.6 hot loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core.cluster import ClusterCfg
+from repro.core.policies import select_worker_np
+from repro.core.taxonomy import (Binding, LoadBalance, PolicySpec,
+                                 WorkerSched, HERMES)
+from repro.core.workload import Workload
+
+EPS = 1e-9
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeCfg:
+    cluster: ClusterCfg = ClusterCfg(n_workers=8, cores=12)
+    cold_start_s: float = 0.5          # executor spin-up (compile+weights)
+    ctrl_latency_s: float = 0.0005     # controller decision latency (§6.6)
+    # straggler mitigation: re-dispatch when a task on a degraded worker
+    # has completed < frac of its work after deadline_s of residence.
+    redispatch_deadline_s: float | None = None
+    redispatch_frac: float = 0.1
+    # failure detector: degraded workers (speed < health_threshold) are
+    # masked out of dispatch while healthy capacity exists — OpenWhisk's
+    # unhealthy-invoker handling.  Without this, Hermes's packing mode
+    # keeps refilling the straggler (it looks attractively non-empty).
+    health_aware: bool = False
+    health_threshold: float = 0.5
+    detect_after_s: float = 0.0     # failure-detector latency
+    # worker speed factors (1.0 = healthy); index → factor
+    speeds: tuple = ()
+
+    def speed(self, w: int) -> float:
+        return self.speeds[w] if w < len(self.speeds) else 1.0
+
+
+@dataclasses.dataclass
+class _Task:
+    arr_idx: int
+    func: int
+    arrival: float
+    placed_at: float
+    work: float               # total work (incl. cold start)
+    remaining: float
+    seq: int
+    rate: float = 0.0
+    migrations: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeResult:
+    response: np.ndarray      # [N] seconds (NaN = rejected)
+    cold: np.ndarray          # [N] bool
+    rejected: np.ndarray      # [N] bool
+    worker: np.ndarray        # [N] final worker
+    redispatched: np.ndarray  # [N] bool
+    server_time: float
+    core_time: float
+    end_time: float
+    n_cold: int
+    n_redispatch: int
+
+
+class ServingCluster:
+    """Event-driven serving cluster under a scheduling policy."""
+
+    def __init__(self, cfg: ServeCfg, policy: PolicySpec = HERMES,
+                 use_kernel: bool = False):
+        self.cfg = cfg
+        self.policy = policy
+        self.use_kernel = use_kernel
+        if use_kernel:
+            from repro.kernels.hermes_select.ops import hermes_select
+            self._kernel = hermes_select
+
+    # ------------------------------------------------------------------
+    def run(self, wl: Workload) -> ServeResult:
+        cfg, policy = self.cfg, self.policy
+        cl = cfg.cluster
+        W, C, S = cl.n_workers, cl.cores, cl.slots
+        F = wl.n_functions
+        N = wl.n
+        late = policy.binding == Binding.LATE
+
+        tasks: list[list[_Task]] = [[] for _ in range(W)]
+        warm = np.zeros((W, F), dtype=np.int64)
+        queue: list[int] = []
+        response = np.full(N, np.nan)
+        cold = np.zeros(N, dtype=bool)
+        rejected = np.zeros(N, dtype=bool)
+        redisp = np.zeros(N, dtype=bool)
+        worker_of = np.full(N, -1, dtype=np.int32)
+        server_time = core_time = 0.0
+        now = 0.0
+
+        def set_rates(w: int) -> None:
+            ts = tasks[w]
+            n = len(ts)
+            if n == 0:
+                return
+            spd = cfg.speed(w)
+            if late:
+                for t in ts:
+                    t.rate = spd
+                return
+            if policy.sched == WorkerSched.PS:
+                r = min(1.0, C / n) * spd
+                for t in ts:
+                    t.rate = r
+            else:  # FCFS
+                order = sorted(range(n), key=lambda i: ts[i].seq)
+                for k, i in enumerate(order):
+                    ts[i].rate = spd if k < C else 0.0
+
+        def place(w: int, arr_idx: int, work: float | None = None,
+                  migration: bool = False) -> None:
+            f = int(wl.func[arr_idx])
+            if warm[w, f] > 0 and work is None:
+                warm[w, f] -= 1
+                is_cold = False
+            else:
+                is_cold = True
+                idle = int(warm[w].sum())
+                if len(tasks[w]) + idle >= S:
+                    warm[w, int(np.argmax(warm[w]))] -= 1
+            if not migration:
+                cold[arr_idx] = is_cold
+            worker_of[arr_idx] = w
+            if work is None:
+                work = float(wl.service[arr_idx]) + \
+                    (cfg.cold_start_s if is_cold else 0.0)
+            elif is_cold:
+                work += cfg.cold_start_s
+            tasks[w].append(_Task(
+                arr_idx=arr_idx, func=f, arrival=float(wl.arrival[arr_idx]),
+                placed_at=now, work=work, remaining=work, seq=arr_idx))
+
+        def pop_queue() -> None:
+            while queue:
+                loads = [len(tasks[w]) for w in range(W)]
+                w = int(np.argmin(loads))
+                if loads[w] >= C:
+                    break
+                place(w, queue.pop(0))
+
+        def maybe_redispatch() -> None:
+            if cfg.redispatch_deadline_s is None:
+                return
+            active = np.array([len(tasks[w]) for w in range(W)])
+            for w in range(W):
+                if cfg.speed(w) >= 1.0:
+                    continue
+                for t in list(tasks[w]):
+                    resident = now - t.placed_at
+                    done_frac = 1.0 - t.remaining / max(t.work, EPS)
+                    if resident >= cfg.redispatch_deadline_s and \
+                            done_frac < cfg.redispatch_frac:
+                        key = np.array([active[x] / cfg.speed(x)
+                                        if x != w else np.inf
+                                        for x in range(W)])
+                        tgt = int(np.argmin(key))
+                        if active[tgt] >= S:
+                            continue
+                        tasks[w].remove(t)
+                        active[w] -= 1
+                        redisp[t.arr_idx] = True
+                        place(tgt, t.arr_idx, work=t.remaining,
+                              migration=True)
+                        active[tgt] += 1
+
+        def advance(dt: float) -> None:
+            nonlocal now, server_time, core_time
+            dt_left = dt
+            while True:
+                if late:
+                    pop_queue()
+                if not any(tasks[w] for w in range(W)):
+                    break
+                for w in range(W):
+                    set_rates(w)
+                tau = dt_left
+                for w in range(W):
+                    for t in tasks[w]:
+                        if t.rate > 0:
+                            tau = min(tau, t.remaining / t.rate)
+                if tau <= 0 and dt_left <= 0:
+                    break
+                tau = max(tau, 0.0)
+                server_time += tau * sum(1 for w in range(W) if tasks[w])
+                core_time += tau * sum(min(len(tasks[w]), C)
+                                       for w in range(W))
+                now += tau
+                dt_left -= tau
+                for w in range(W):
+                    survivors = []
+                    for t in tasks[w]:
+                        t.remaining -= t.rate * tau
+                        if t.remaining <= EPS:
+                            response[t.arr_idx] = now - t.arrival + \
+                                self.cfg.ctrl_latency_s
+                            warm[w, t.func] += 1
+                        else:
+                            survivors.append(t)
+                    tasks[w] = survivors
+                maybe_redispatch()
+                if dt_left <= 0:
+                    break
+
+        unhealthy = np.array([cfg.speed(w) < cfg.health_threshold
+                              for w in range(W)]) if cfg.health_aware \
+            else np.zeros(W, dtype=bool)
+
+        # pre-gather warm columns when using the kernel path
+        for i in range(N):
+            advance(float(wl.arrival[i]) - now)
+            now = float(wl.arrival[i])
+            active = np.array([len(tasks[w]) for w in range(W)])
+            if cfg.health_aware and unhealthy.any() and \
+                    now >= cfg.detect_after_s:
+                healthy_free = (~unhealthy) & (active < S)
+                if healthy_free.any():      # mask stragglers out
+                    active = np.where(unhealthy, S, active)
+            if late:
+                if active.min() < C:
+                    place(int(np.argmin(active)), i)
+                else:
+                    queue.append(i)
+                continue
+            if self.use_kernel and policy == HERMES:
+                import jax.numpy as jnp
+                ws, _ = self._kernel(
+                    jnp.asarray(active, jnp.int32),
+                    jnp.asarray(warm, jnp.int32),
+                    jnp.asarray([int(wl.func[i])], jnp.int32),
+                    cores=C, slots=S)
+                w = int(ws[0])
+            else:
+                w = select_worker_np(policy.balance, active, warm,
+                                     int(wl.func[i]), wl.func_home,
+                                     float(wl.u_lb[i]), C, S)
+            if w < 0:
+                rejected[i] = True
+            else:
+                place(w, i)
+
+        advance(math.inf)
+        return ServeResult(
+            response=response, cold=cold, rejected=rejected,
+            worker=worker_of, redispatched=redisp,
+            server_time=server_time, core_time=core_time, end_time=now,
+            n_cold=int(cold[~rejected].sum()),
+            n_redispatch=int(redisp.sum()))

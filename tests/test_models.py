@@ -1,0 +1,172 @@
+"""Per-architecture smoke tests (reduced configs, CPU) + model math."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models.common import MoECfg
+from repro.models.transformer import build_model
+
+RNG = jax.random.key(0)
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_NAMES)
+def test_arch_smoke(arch):
+    """One forward + one train-grad step: shapes right, finite values."""
+    cfg = configs.get_smoke(arch)
+    model = build_model(cfg)
+    params = model.init(RNG)
+    B, S = 2, 32
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab)
+    logits, aux = jax.jit(model.forward)(params, toks)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert not np.isnan(np.asarray(logits, np.float32)).any()
+    loss, grads = jax.jit(jax.value_and_grad(model.loss))(
+        params, toks, jnp.roll(toks, -1, 1))
+    assert np.isfinite(float(loss))
+    for g in jax.tree.leaves(grads):
+        assert np.isfinite(np.asarray(g, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_NAMES)
+def test_prefill_decode_consistency(arch):
+    """prefill(t[:n]) then decode one-by-one ≡ forward(t) logits.
+
+    Run in f32 so this checks *mathematical* equivalence of the serving
+    path (incl. MLA weight absorption, WKV/SSD chunked-vs-step scans)
+    rather than bf16 noise between the two orderings.
+    """
+    cfg = dataclasses.replace(configs.get_smoke(arch), dtype="float32")
+    model = build_model(cfg)
+    params = model.init(RNG)
+    B, S, n_dec = 1, 24, 4
+    toks = jax.random.randint(jax.random.key(2), (B, S), 0, cfg.vocab)
+    full_logits, _ = jax.jit(model.forward)(params, toks)
+
+    pre = S - n_dec
+    cache = model.init_cache(B, S + 1)
+    lg, cache = jax.jit(model.prefill)(params, toks[:, :pre], cache)
+    np.testing.assert_allclose(
+        np.asarray(lg[:, -1], np.float32),
+        np.asarray(full_logits[:, pre - 1], np.float32),
+        rtol=2e-4, atol=2e-4)
+    decode = jax.jit(model.decode_step)
+    for i in range(n_dec):
+        pos = jnp.full((B,), pre + i, jnp.int32)
+        lg, cache = decode(params, toks[:, pre + i:pre + i + 1], cache, pos)
+        np.testing.assert_allclose(
+            np.asarray(lg[:, 0], np.float32),
+            np.asarray(full_logits[:, pre + i], np.float32),
+            rtol=2e-4, atol=2e-4, err_msg=f"{arch} decode step {i}")
+
+
+def test_full_configs_match_assignment():
+    """The exact numbers from the assignment table."""
+    t = {n: configs.get(n) for n in configs.ARCH_NAMES}
+    a = t["rwkv6-3b"]
+    assert (a.n_layers, a.d_model, a.d_ff, a.vocab) == \
+        (32, 2560, 8960, 65536)
+    a = t["qwen3-14b"]
+    assert (a.n_layers, a.d_model, a.n_heads, a.n_kv_heads, a.d_ff,
+            a.vocab) == (40, 5120, 40, 8, 17408, 151936)
+    assert a.qk_norm
+    a = t["olmo-1b"]
+    assert (a.n_layers, a.d_model, a.n_heads, a.d_ff, a.vocab) == \
+        (16, 2048, 16, 8192, 50304)
+    assert a.norm == "layernorm_np"
+    a = t["granite-20b"]
+    assert (a.n_layers, a.d_model, a.n_heads, a.n_kv_heads, a.d_ff,
+            a.vocab) == (52, 6144, 48, 1, 24576, 49152)
+    a = t["gemma-2b"]
+    assert (a.n_layers, a.d_model, a.n_heads, a.n_kv_heads, a.head_dim,
+            a.d_ff, a.vocab) == (18, 2048, 8, 1, 256, 16384, 256000)
+    assert a.mlp == "geglu"
+    a = t["zamba2-2.7b"]
+    assert (a.n_layers, a.d_model, a.n_heads, a.d_ff, a.vocab,
+            a.ssm.d_state) == (54, 2560, 32, 10240, 32000, 64)
+    a = t["musicgen-large"]
+    assert (a.n_layers, a.d_model, a.n_heads, a.d_ff, a.vocab) == \
+        (48, 2048, 32, 8192, 2048)
+    a = t["deepseek-v2-236b"]
+    assert (a.n_layers, a.d_model, a.n_heads, a.vocab) == \
+        (60, 5120, 128, 102400)
+    assert (a.moe.n_experts, a.moe.top_k, a.moe.d_ff_expert,
+            a.moe.n_shared) == (160, 6, 1536, 2)
+    assert (a.mla.kv_lora, a.mla.qk_rope) == (512, 64)
+    a = t["dbrx-132b"]
+    assert (a.n_layers, a.d_model, a.n_heads, a.n_kv_heads, a.vocab) == \
+        (40, 6144, 48, 8, 100352)
+    assert (a.moe.n_experts, a.moe.top_k) == (16, 4)
+    a = t["chameleon-34b"]
+    assert (a.n_layers, a.d_model, a.n_heads, a.n_kv_heads, a.d_ff,
+            a.vocab) == (48, 8192, 64, 8, 22016, 65536)
+
+
+def test_param_counts_plausible():
+    """n_params() bookkeeping lands near the advertised sizes."""
+    expect = {"rwkv6-3b": (2.5e9, 4.5e9), "qwen3-14b": (12e9, 16e9),
+              "olmo-1b": (0.9e9, 1.6e9), "granite-20b": (17e9, 23e9),
+              "gemma-2b": (2.0e9, 3.3e9), "zamba2-2.7b": (2.2e9, 3.4e9),
+              "musicgen-large": (2.2e9, 4e9),
+              "deepseek-v2-236b": (200e9, 260e9),
+              "dbrx-132b": (110e9, 150e9), "chameleon-34b": (28e9, 40e9)}
+    for name, (lo, hi) in expect.items():
+        n = configs.get(name).n_params()
+        assert lo < n < hi, f"{name}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"
+
+
+def test_active_params_moe():
+    c = configs.get("deepseek-v2-236b")
+    assert c.active_params() < 0.15 * c.n_params()
+
+
+def test_moe_ep_capacity_dense_parity():
+    """EP (sorted dispatch) ≡ dense oracle when capacity never binds —
+    single-device path (no mesh ctx → falls back to dense); the sharded
+    parity is covered in test_distributed.py."""
+    from repro.models import moe as moe_mod
+    cfg = dataclasses.replace(
+        configs.get_smoke("dbrx-132b"),
+        moe=MoECfg(n_experts=4, top_k=2, d_ff_expert=64,
+                   capacity_factor=8.0))
+    p = moe_mod.init_moe(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 16, cfg.d_model),
+                          jnp.float32)
+    y1, a1 = moe_mod.moe_dense(cfg, p, x)
+    y2, a2 = moe_mod.moe_ep(cfg, p, x)       # no ctx → dense fallback
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_smoke_unroll_matches_scan():
+    cfg = configs.get_smoke("olmo-1b")
+    m_scan = build_model(cfg, layer_mode="scan")
+    m_unroll = build_model(cfg, layer_mode="unroll")
+    params = m_scan.init(RNG)
+    toks = jax.random.randint(jax.random.key(3), (1, 16), 0, cfg.vocab)
+    l1, _ = jax.jit(m_scan.forward)(params, toks)
+    l2, _ = jax.jit(m_unroll.forward)(params, toks)
+    np.testing.assert_allclose(np.asarray(l1, np.float32),
+                               np.asarray(l2, np.float32),
+                               rtol=1e-2, atol=1e-2)
+
+
+def test_attn_impls_agree():
+    import dataclasses as dc
+    cfg = configs.get_smoke("qwen3-14b")
+    variants = {}
+    toks = jax.random.randint(jax.random.key(4), (1, 64), 0, cfg.vocab)
+    for impl in ("naive", "xla_chunked", "xla_unrolled", "pallas"):
+        c = dc.replace(cfg, attn_impl=impl, attn_chunk=16, head_dim=32)
+        m = build_model(c)
+        if impl == "naive":
+            params = m.init(RNG)
+            variants["params"] = params
+        logits, _ = jax.jit(m.forward)(variants["params"], toks)
+        variants[impl] = np.asarray(logits, np.float32)
+    for impl in ("xla_chunked", "xla_unrolled", "pallas"):
+        np.testing.assert_allclose(variants[impl], variants["naive"],
+                                   rtol=6e-2, atol=6e-2, err_msg=impl)

@@ -1,0 +1,104 @@
+"""Unit + property tests for the scheduling taxonomy and policies."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.policies import (hermes_score_np, make_select_worker_jax,
+                                 select_worker_np)
+from repro.core.taxonomy import (Binding, LoadBalance, PolicySpec,
+                                 WorkerSched, parse_policy, HERMES,
+                                 FIG2_POLICIES)
+
+
+def test_parse_roundtrip():
+    for text in ("E/LL/PS", "E/LOC/FCFS", "E/R/PS", "E/H/PS",
+                 "E/LL/SRPT"):
+        assert parse_policy(text).name == text
+    assert parse_policy("L/*/*").binding == Binding.LATE
+    assert HERMES.name == "E/H/PS"
+    assert len(FIG2_POLICIES) == 7
+
+
+state = st.integers(min_value=2, max_value=16).flatmap(
+    lambda w: st.tuples(
+        st.lists(st.integers(0, 100), min_size=w, max_size=w),
+        st.lists(st.integers(0, 3), min_size=w, max_size=w),
+        st.integers(1, 16),                 # cores
+        st.integers(1, 12),                 # capacity factor
+    ))
+
+
+@settings(max_examples=200, deadline=None)
+@given(state)
+def test_hermes_score_properties(sw):
+    active_l, warm_l, cores, capf = sw
+    slots = cores * capf
+    active = np.minimum(np.array(active_l, np.int64), slots)
+    warm = np.array(warm_l, np.int64)
+    score, low_load = hermes_score_np(active, warm, cores, slots)
+    w = int(np.argmax(score))
+    has_slot = active < slots
+    if not has_slot.any():
+        return                      # caller rejects in this case
+    assert low_load == bool((active < cores).any())
+    if low_load:
+        # chosen worker must have a free core (paper: pack up to N cores)
+        assert active[w] < cores
+        # lexicographic: no worker with a free core has a higher class,
+        # nor same class with more load
+        warm_b = warm > 0
+        cls = np.where(active > 0, 2 + warm_b, warm_b.astype(int))
+        eligible = active < cores
+        best = max((cls[i], active[i])
+                   for i in range(len(active)) if eligible[i])
+        assert (cls[w], active[w]) == best
+    else:
+        # least-loaded among free slots, warm tie-break
+        key = np.where(has_slot, 2 * active - (warm > 0), 1 << 40)
+        assert key[w] == key.min()
+        assert has_slot[w]
+
+
+@settings(max_examples=100, deadline=None)
+@given(state, st.integers(0, 1 << 30))
+def test_select_worker_np_always_valid(sw, seed):
+    active_l, warm_l, cores, capf = sw
+    slots = cores * capf
+    rng = np.random.default_rng(seed)
+    active = np.minimum(np.array(active_l, np.int64), slots)
+    W = len(active)
+    F = 4
+    warm = rng.integers(0, 2, (W, F))
+    func = int(rng.integers(0, F))
+    homes = rng.integers(0, W, F).astype(np.int32)
+    u = float(rng.uniform())
+    for bal in LoadBalance:
+        w = select_worker_np(bal, active, warm, func, homes, u, cores,
+                             slots)
+        if (active < slots).any():
+            assert 0 <= w < W and active[w] < slots, (bal, w, active)
+        else:
+            assert w == -1
+
+
+@settings(max_examples=50, deadline=None)
+@given(state, st.integers(0, 1 << 30))
+def test_select_worker_jax_matches_np(sw, seed):
+    import jax.numpy as jnp
+    active_l, warm_l, cores, capf = sw
+    slots = cores * capf
+    rng = np.random.default_rng(seed)
+    active = np.minimum(np.array(active_l, np.int64), slots).astype(np.int32)
+    W = len(active)
+    F = 4
+    warm = rng.integers(0, 2, (W, F)).astype(np.int32)
+    func = int(rng.integers(0, F))
+    homes = rng.integers(0, W, F).astype(np.int32)
+    u = float(rng.uniform())
+    for bal in LoadBalance:
+        w_np = select_worker_np(bal, active, warm, func, homes, u, cores,
+                                slots)
+        sel = make_select_worker_jax(bal, cores, slots)
+        w_j = int(sel(jnp.asarray(active), jnp.asarray(warm[:, func]),
+                      jnp.int32(func), jnp.asarray(homes), jnp.float64(u)))
+        assert w_np == w_j, (bal.name, active.tolist(), warm[:, func])

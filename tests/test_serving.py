@@ -1,0 +1,94 @@
+"""Serving platform: Hermes dispatch, cold starts, straggler mitigation."""
+import numpy as np
+import pytest
+
+from repro.core import (E_LL_PS, E_LOC_PS, HERMES, PAPER_TESTBED,
+                        ms_trace, summarize)
+from repro.core.cluster import ClusterCfg
+from repro.serving.engine import ServeCfg, ServingCluster
+
+
+def _summ(out, wl):
+    return summarize(out.response, wl.service, out.cold, out.rejected,
+                     out.server_time, out.core_time, out.end_time)
+
+
+def test_hermes_beats_vanilla_on_skewed():
+    cfg = ServeCfg(cluster=PAPER_TESTBED, cold_start_s=0.5)
+    wl = ms_trace(PAPER_TESTBED, 0.5, 1500, seed=0)
+    h = _summ(ServingCluster(cfg, HERMES).run(wl), wl)
+    v = _summ(ServingCluster(cfg, E_LOC_PS).run(wl), wl)
+    assert h.slow_p99 < v.slow_p99
+
+
+def test_hermes_fewer_cold_starts_than_ll():
+    cfg = ServeCfg(cluster=PAPER_TESTBED, cold_start_s=0.5)
+    wl = ms_trace(PAPER_TESTBED, 0.3, 1500, seed=1)
+    h = ServingCluster(cfg, HERMES).run(wl)
+    ll = ServingCluster(cfg, E_LL_PS).run(wl)
+    assert h.n_cold < ll.n_cold
+
+
+def test_hermes_consolidates_servers_at_low_load():
+    cfg = ServeCfg(cluster=PAPER_TESTBED, cold_start_s=0.0)
+    wl = ms_trace(PAPER_TESTBED, 0.25, 1500, seed=2)
+    h = _summ(ServingCluster(cfg, HERMES).run(wl), wl)
+    ll = _summ(ServingCluster(cfg, E_LL_PS).run(wl), wl)
+    assert h.mean_servers < ll.mean_servers
+
+
+def test_kernel_controller_matches_python():
+    cfg = ServeCfg(cluster=ClusterCfg(n_workers=4, cores=4),
+                   cold_start_s=0.2)
+    wl = ms_trace(cfg.cluster, 0.5, 400, seed=3)
+    a = ServingCluster(cfg, HERMES, use_kernel=False).run(wl)
+    b = ServingCluster(cfg, HERMES, use_kernel=True).run(wl)
+    np.testing.assert_allclose(np.nan_to_num(a.response, nan=-1),
+                               np.nan_to_num(b.response, nan=-1),
+                               rtol=1e-9, atol=1e-9)
+    np.testing.assert_array_equal(a.worker, b.worker)
+
+
+def test_straggler_redispatch_helps():
+    """One worker at 5% speed: deadline re-dispatch must cut tail."""
+    cl = ClusterCfg(n_workers=4, cores=4)
+    wl = ms_trace(cl, 0.5, 1200, seed=4)
+    base = ServeCfg(cluster=cl, cold_start_s=0.1, speeds=(0.05,))
+    # detector notices the degraded worker after 30s; invocations placed
+    # before that are rescued by deadline re-dispatch
+    mit = ServeCfg(cluster=cl, cold_start_s=0.1, speeds=(0.05,),
+                   redispatch_deadline_s=1.0, redispatch_frac=0.5,
+                   health_aware=True, detect_after_s=30.0)
+    r0 = ServingCluster(base, HERMES).run(wl)
+    r1 = ServingCluster(mit, HERMES).run(wl)
+    s0, s1 = _summ(r0, wl), _summ(r1, wl)
+    assert r1.n_redispatch > 0
+    assert s1.slow_p99 < s0.slow_p99 * 0.5, (s0.slow_p99, s1.slow_p99)
+
+
+@pytest.mark.slow
+def test_real_model_backend_end_to_end():
+    """Registered smoke models served through the Hermes frontend with
+    *measured* (compile-time) cold starts."""
+    from repro import configs
+    from repro.serving.backends import (HermesFrontend, Invocation,
+                                        ModelRegistry)
+    reg = ModelRegistry()
+    reg.register("olmo", configs.get_smoke("olmo-1b"))
+    reg.register("musicgen", configs.get_smoke("musicgen-large"))
+    fe = HermesFrontend(reg, n_workers=2, cores=2, max_len=64)
+    rng = np.random.default_rng(0)
+    lat = {"olmo": [], "musicgen": []}
+    for i in range(6):
+        fname = ("olmo", "musicgen")[i % 2]
+        inv = Invocation(func=fname,
+                         prompt=rng.integers(0, 100, 8), n_new=4)
+        out = fe.dispatch(inv)
+        assert out.tokens is not None and len(out.tokens) == 4
+        lat[fname].append((out.response_s, out.cold))
+    for fname, rs in lat.items():
+        colds = [r for r, c in rs if c]
+        warms = [r for r, c in rs if not c]
+        assert colds and warms
+        # a cold start pays real compile cost ≫ warm invocation
+        assert min(colds) > 3 * max(warms), (fname, rs)

@@ -1,0 +1,81 @@
+"""Simulator contract tests: JAX engine ≡ numpy oracle + invariants."""
+import numpy as np
+import pytest
+
+from repro.core import (ClusterCfg, FIG2_POLICIES, HERMES, E_LL_SRPT,
+                        synth_workload, summarize_sim)
+from repro.core.sim_ref import simulate_ref
+from repro.core.simulator import simulate
+
+POLICIES = list(FIG2_POLICIES) + [HERMES, E_LL_SRPT]
+CLUSTER = ClusterCfg(n_workers=4, cores=3, capacity_factor=2)
+
+
+def _wl(load, n=250, seed=0, **kw):
+    return synth_workload(CLUSTER, load, n, n_functions=5,
+                          hot_fraction=0.8, seed=seed, **kw)
+
+
+@pytest.mark.parametrize("policy", POLICIES, ids=lambda p: p.name)
+@pytest.mark.parametrize("load", [0.4, 0.9, 1.3])
+def test_jax_matches_oracle(policy, load):
+    wl = _wl(load)
+    ref = simulate_ref(policy, CLUSTER, wl)
+    out = simulate(policy, CLUSTER, wl)
+    np.testing.assert_allclose(
+        np.nan_to_num(out.response, nan=-1.0),
+        np.nan_to_num(ref.response, nan=-1.0), rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(out.cold, ref.cold)
+    np.testing.assert_array_equal(out.rejected, ref.rejected)
+    assert abs(out.server_time - ref.server_time) < 1e-3 * max(
+        1.0, ref.server_time)
+    assert abs(out.core_time - ref.core_time) < 1e-3 * max(
+        1.0, ref.core_time)
+
+
+@pytest.mark.parametrize("policy", POLICIES, ids=lambda p: p.name)
+def test_invariants(policy):
+    wl = _wl(0.8, n=400, seed=3)
+    out = simulate(policy, CLUSTER, wl)
+    done = ~out.rejected
+    # every accepted invocation completes after the drain
+    assert np.isfinite(out.response[done]).all()
+    # response ≥ service (can't finish faster than its work)
+    assert (out.response[done] >= wl.service[done] - 1e-6).all()
+    # work conservation: total core-time == total service of accepted
+    assert abs(out.core_time - wl.service[done].sum()) < 1e-3 * \
+        wl.service[done].sum()
+    # rejected only when genuinely full is possible
+    if out.rejected.any():
+        assert CLUSTER.slots * CLUSTER.n_workers <= 400
+    s = summarize_sim(out, wl)
+    assert s.slow_p50 >= 1.0 - 1e-9
+    assert s.slow_p99 >= s.slow_p50
+
+
+def test_seeds_differ():
+    a = _wl(0.5, seed=0)
+    b = _wl(0.5, seed=1)
+    assert not np.allclose(a.service, b.service)
+
+
+def test_service_cap():
+    wl = _wl(0.5, n=4000, max_service=100.0)
+    assert wl.service.max() <= 100.0
+
+
+def test_cold_start_penalty_increases_response():
+    wl = _wl(0.5, n=300)
+    cold_cluster = CLUSTER._replace(cold_start_penalty=0.7)
+    base = simulate_ref(HERMES, CLUSTER, wl)
+    pen = simulate_ref(HERMES, cold_cluster, wl)
+    assert np.nansum(pen.response) > np.nansum(base.response)
+
+
+def test_warm_reuse_reduces_cold_starts():
+    """A single-function workload should cold-start ~once per worker."""
+    wl = synth_workload(CLUSTER, 0.5, 300, n_functions=1,
+                        hot_fraction=1.0, seed=2)
+    out = simulate_ref(HERMES, CLUSTER, wl)
+    # far fewer cold starts than invocations
+    assert out.cold.sum() < 0.2 * wl.n

@@ -1,0 +1,140 @@
+"""Training substrate: optimizer, checkpointing, restart, compression."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.data.pipeline import lcg_batch, make_data_iter, random_batch
+from repro.models.transformer import build_model
+from repro.training.checkpoint import CheckpointManager
+from repro.training.compression import dequantize, quantize
+from repro.training.optimizer import OptCfg, adamw_update, init_opt_state, \
+    schedule
+from repro.training.train import (build_train_step, init_train_state,
+                                  run_with_restarts)
+
+
+def test_schedule_shape():
+    cfg = OptCfg(lr=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(schedule(cfg, jnp.int32(s))) for s in range(0, 101, 10)]
+    assert lrs[0] < lrs[1]                      # warmup
+    assert max(lrs) <= 1e-3 * (1 + 1e-5)
+    assert lrs[-1] == pytest.approx(1e-4, rel=1e-3)   # min_lr_frac
+
+
+def test_adamw_decreases_quadratic():
+    cfg = OptCfg(lr=0.1, warmup_steps=0, total_steps=100,
+                 weight_decay=0.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    opt = init_opt_state(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, opt, _ = adamw_update(cfg, params, grads, opt)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=1,
+                max_size=64))
+def test_quantize_roundtrip_bound(xs):
+    x = jnp.asarray(xs, jnp.float32)
+    q, scale = quantize(x)
+    err = np.abs(np.asarray(dequantize(q, scale) - x))
+    assert err.max() <= float(scale) * 0.5 + 1e-6
+
+
+def test_data_pipeline_deterministic():
+    t1, l1 = random_batch(7, 4, 16, 100)
+    t2, l2 = random_batch(7, 4, 16, 100)
+    np.testing.assert_array_equal(t1, t2)
+    t3, _ = random_batch(8, 4, 16, 100)
+    assert not np.array_equal(t1, t3)
+    t, l = lcg_batch(0, 4, 16, 97)
+    np.testing.assert_array_equal(t[:, 1:], l[:, :-1])
+
+
+def test_train_loss_decreases():
+    cfg = configs.get_smoke("olmo-1b")
+    model = build_model(cfg)
+    state = init_train_state(model, jax.random.key(0))
+    step = jax.jit(build_train_step(
+        model, OptCfg(lr=1e-2, warmup_steps=5, total_steps=100)))
+    data = make_data_iter("lcg", 4, 32, cfg.vocab, device=False)
+    losses = []
+    for i in range(60):
+        state, m = step(state, *data(i))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5, (losses[0], losses[-1])
+
+
+def test_checkpoint_atomic_and_restores():
+    cfg = configs.get_smoke("musicgen-large")
+    model = build_model(cfg)
+    state = init_train_state(model, jax.random.key(0))
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        mgr.save(state, 10, blocking=True)
+        mgr.save(state, 20, blocking=True)
+        mgr.save(state, 30, blocking=True)
+        assert mgr.latest_step() == 30
+        # keep=2 garbage-collects the oldest
+        assert not os.path.exists(os.path.join(d, "10"))
+        restored, step = mgr.restore(state)
+        assert step == 30
+        for a, b in zip(jax.tree.leaves(state.params),
+                        jax.tree.leaves(restored.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_run_with_restarts_recovers_and_replays():
+    cfg = configs.get_smoke("olmo-1b")
+    model = build_model(cfg)
+    ocfg = OptCfg(lr=1e-2, warmup_steps=2, total_steps=50)
+    data = make_data_iter("lcg", 4, 32, cfg.vocab, device=False)
+    step = jax.jit(build_train_step(model, ocfg))
+
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        fails = {7, 18}
+
+        def hook(s):
+            if s in fails:
+                fails.discard(s)
+                raise RuntimeError("injected node failure")
+
+        state = init_train_state(model, jax.random.key(0))
+        state, rep = run_with_restarts(step, state, data, n_steps=25,
+                                       ckpt_mgr=mgr, ckpt_every=5,
+                                       failure_hook=hook)
+        assert rep.steps_done == 25
+        assert rep.restarts == 2
+        # identical run without failures reaches the same final loss
+        state2 = init_train_state(model, jax.random.key(0))
+        with tempfile.TemporaryDirectory() as d2:
+            state2, rep2 = run_with_restarts(
+                step, state2, data, n_steps=25,
+                ckpt_mgr=CheckpointManager(d2), ckpt_every=5)
+        assert rep.final_loss == pytest.approx(rep2.final_loss, rel=1e-5)
+
+
+def test_restart_budget_exhaustion_raises():
+    cfg = configs.get_smoke("olmo-1b")
+    model = build_model(cfg)
+    step = jax.jit(build_train_step(
+        model, OptCfg(lr=1e-3, warmup_steps=2, total_steps=50)))
+    data = make_data_iter("lcg", 2, 16, cfg.vocab, device=False)
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        state = init_train_state(model, jax.random.key(0))
+
+        def hook(s):
+            raise RuntimeError("always failing")
+
+        with pytest.raises(RuntimeError):
+            run_with_restarts(step, state, data, n_steps=10, ckpt_mgr=mgr,
+                              max_restarts=2, failure_hook=hook)
