@@ -1,12 +1,25 @@
-"""Shared benchmark helpers: load sweeps → CSV rows."""
+"""Shared benchmark helpers: batched load sweeps → CSV rows.
+
+The sweep is the batched-engine fast path: all load points of a sweep
+share one ``(N, F)`` shape, so per policy they are stacked into a single
+:class:`~repro.core.workload.WorkloadBatch` and run through one
+``vmap``-ed compiled program (:func:`repro.core.simulator.simulate_many`).
+The engine compile cache keys on ``(policy, cluster, N, F)``, so repeated
+sweeps (e.g. fig7/8/9 re-deriving fig6 rows) re-use compiled programs.
+
+``reps > 1`` replicates every load point over consecutive seeds inside
+the same batch; rows then carry ``*_mean`` / ``*_ci95`` columns from
+:class:`~repro.core.metrics.BatchSummary`.
+"""
 from __future__ import annotations
 
 import csv
 import os
 import time
 
-from repro.core import ClusterCfg, PolicySpec, summarize_sim
-from repro.core.simulator import simulate
+from repro.core import (ClusterCfg, PolicySpec, replicate_workload,
+                        summarize_batch_sim, summarize_sim)
+from repro.core.simulator import simulate_many
 from repro.core.sim_ref import simulate_ref
 
 OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments")
@@ -14,21 +27,47 @@ OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments")
 
 def sweep_policies(policies, cluster: ClusterCfg, loads, n_arrivals,
                    workload_fn, *, seed: int = 0, engine: str = "jax",
-                   warmup_frac: float = 0.1):
-    """Run every (policy × load) cell; returns list of dict rows."""
-    rows = []
-    for load in loads:
-        wl = workload_fn(cluster, load, n_arrivals, seed)
-        for pol in policies:
-            t0 = time.time()
-            if engine == "jax":
-                out = simulate(pol, cluster, wl)
-            else:
+                   warmup_frac: float = 0.1, reps: int = 1):
+    """Run every (policy × load [× rep]) cell; returns list of dict rows.
+
+    ``engine="jax"`` batches all ``len(loads) × reps`` replications per
+    policy into one ``simulate_many`` call; ``engine="ref"`` falls back to
+    the per-cell numpy oracle (slow, for cross-checks).
+    """
+    if engine != "jax":
+        if reps > 1:
+            raise ValueError("reps > 1 is only supported by the batched "
+                             "jax engine")
+        rows = []
+        for load in loads:
+            wl = workload_fn(cluster, load, n_arrivals, seed)
+            for pol in policies:
+                t0 = time.time()
                 out = simulate_ref(pol, cluster, wl)
-            s = summarize_sim(out, wl, warmup_frac=warmup_frac)
-            row = {"policy": pol.name, "load": load,
-                   "wall_s": round(time.time() - t0, 2), **s.row()}
-            rows.append(row)
+                s = summarize_sim(out, wl, warmup_frac=warmup_frac)
+                rows.append({"policy": pol.name, "load": load,
+                             "wall_s": round(time.time() - t0, 2),
+                             **s.row()})
+        return rows
+
+    seeds = tuple(range(seed, seed + reps))
+    wb = replicate_workload(workload_fn, cluster, loads, n_arrivals,
+                            seeds=seeds)
+    rows = []
+    for pol in policies:
+        t0 = time.time()
+        out = simulate_many(pol, cluster, wb)
+        cell_s = (time.time() - t0) / len(loads)
+        for li, load in enumerate(loads):
+            sl = slice(li * reps, (li + 1) * reps)
+            bs = summarize_batch_sim(out[sl], wb[sl],
+                                     warmup_frac=warmup_frac)
+            # reps>1 adds the *_mean/*_ci95 columns of BatchSummary.row()
+            cols = bs.row() if reps > 1 else bs.pooled.row()
+            rows.append({"policy": pol.name, "load": load,
+                         "wall_s": round(cell_s, 3), **cols})
+    # interleave back to the historical (load-major) row order
+    rows.sort(key=lambda r: loads.index(r["load"]))
     return rows
 
 

@@ -4,6 +4,9 @@ policy taxonomy, 4 workers × 12 cores, Azure-shaped workload.
 Expected reproduction: all policies look similar on p99 *latency*; on
 p99 *slowdown* Late Binding and E/*/FCFS blow up early (head-of-line
 blocking), PS-based policies survive, E/LL/PS is best (Lessons 1-2).
+
+All load points run as one stacked batch per policy through the
+``simulate_many`` engine (see :mod:`benchmarks.common`).
 """
 from __future__ import annotations
 

@@ -3,6 +3,9 @@
 Expected reproduction (Lesson 3): E/LL/SRPT beats E/LL/PS on *median*
 slowdown at high load but loses on the 99% tail (long-request
 starvation).
+
+All load points run as one stacked batch per policy through the
+``simulate_many`` engine (see :mod:`benchmarks.common`).
 """
 from __future__ import annotations
 

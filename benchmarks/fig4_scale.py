@@ -3,6 +3,9 @@
 Expected reproduction (§3.5): E/R/PS and E/LOC/PS explode near 0.6 load;
 Late Binding improves with scale (less head-of-line blocking) but
 E/LL/PS still wins at very high load (>0.96).
+
+All load points run as one stacked batch per policy through the
+``simulate_many`` engine (see :mod:`benchmarks.common`).
 """
 from __future__ import annotations
 

@@ -1,19 +1,28 @@
 """Paper Fig. 6 — 99% slowdown of the §6 baselines on four workloads,
-run on the *serving platform* (cold starts modeled, 8 invokers × 12
-cores — the paper's testbed).
+with cold starts modeled (8 invokers × 12 cores — the paper's testbed).
 
 Expected reproduction: Vanilla OpenWhisk (E/LOC/PS) explodes early on
 skewed workloads; Late Binding saturates ~40% below Least-Loaded/Hermes;
 Hermes ≤ Least-Loaded everywhere (locality) and only on the zero-skew
 Multiple-Functions-Balanced workload does Vanilla look good.
+
+Engine note: this figure used to drive the event-driven
+``ServingCluster`` python loop per (workload × load × scheduler) cell.
+With no stragglers/re-dispatch configured that platform is semantically
+the simulator with ``cold_start_penalty=cold_start_s`` plus a constant
+controller decision latency added per response — so the sweep now runs
+on the batched JAX engine: one ``simulate_many`` call per (workload ×
+scheduler) covering every load point, with the compile cache shared
+across fig6/7/8/9.
 """
 from __future__ import annotations
 
 import time
 
 from repro.core import (E_LL_PS, E_LOC_PS, HERMES, LATE_BINDING,
-                        PAPER_TESTBED, WORKLOADS, summarize)
-from repro.serving.engine import ServeCfg, ServingCluster
+                        PAPER_TESTBED, WORKLOADS, stack_workloads,
+                        summarize)
+from repro.core.simulator import simulate_many
 
 from .common import write_csv
 
@@ -21,6 +30,9 @@ SCHEDULERS = {"vanilla-ow": E_LOC_PS, "late-binding": LATE_BINDING,
               "least-loaded": E_LL_PS, "hermes": HERMES}
 FIG6_WORKLOADS = ("ms-trace", "ms-representative", "single-function",
                   "multi-balanced")
+# Controller decision latency added to every completed response (§6.6,
+# matches ServeCfg.ctrl_latency_s).
+CTRL_LATENCY_S = 0.0005
 
 
 def run(quick: bool = True, *, workloads=FIG6_WORKLOADS,
@@ -28,23 +40,26 @@ def run(quick: bool = True, *, workloads=FIG6_WORKLOADS,
     loads = [0.3, 0.5, 0.7, 0.85] if quick else \
         [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9]
     n = 4000 if quick else 15000
-    cfg = ServeCfg(cluster=PAPER_TESTBED, cold_start_s=cold_start_s)
+    cl = PAPER_TESTBED._replace(cold_start_penalty=cold_start_s)
     rows = []
     for wname in workloads:
         wfn = WORKLOADS[wname]
-        for load in loads:
-            wl = wfn(PAPER_TESTBED, load, n, seed=1)
-            rps = wl.n / max(wl.horizon, 1e-9)
-            for sname, pol in SCHEDULERS.items():
-                t0 = time.time()
-                out = ServingCluster(cfg, pol).run(wl)
-                s = summarize(out.response, wl.service, out.cold,
-                              out.rejected, out.server_time, out.core_time,
-                              out.end_time)
+        wb = stack_workloads(
+            [wfn(PAPER_TESTBED, load, n, seed=1) for load in loads])
+        for sname, pol in SCHEDULERS.items():
+            t0 = time.time()
+            out = simulate_many(pol, cl, wb)
+            cell_s = (time.time() - t0) / len(loads)
+            for r, load in enumerate(loads):
+                rps = wb.n / max(float(wb.arrival[r, -1]), 1e-9)
+                s = summarize(out.response[r] + CTRL_LATENCY_S,
+                              wb.service[r], out.cold[r], out.rejected[r],
+                              float(out.server_time[r]),
+                              float(out.core_time[r]),
+                              float(out.end_time[r]))
                 rows.append({"workload": wname, "scheduler": sname,
                              "load": load, "rps": round(rps, 2),
-                             "wall_s": round(time.time() - t0, 2),
-                             **s.row()})
+                             "wall_s": round(cell_s, 3), **s.row()})
     write_csv("fig6_slowdown.csv", rows)
     return rows
 

@@ -3,6 +3,9 @@
 Expected reproduction: Hermes lowest on skewed workloads (locality-aware
 packing); Least-Loaded highest at low load (spreads 50 functions over
 all 8 invokers); Vanilla lowest only on the balanced workload.
+
+Derives from fig6's batched sweep; the engine compile cache makes the
+re-run nearly free.
 """
 from __future__ import annotations
 

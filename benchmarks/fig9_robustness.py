@@ -3,6 +3,9 @@
 Expected reproduction: with homogeneous execution times all load-aware
 schedulers converge; Hermes matches Least-Loaded / Late Binding, and
 Vanilla OpenWhisk still suffers from skew.
+
+Derives from fig6's batched sweep; the engine compile cache makes the
+re-run nearly free.
 """
 from __future__ import annotations
 

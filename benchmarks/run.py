@@ -4,6 +4,11 @@
 mode (sized for a single-core CPU container), writes one CSV per figure
 under ``experiments/``, prints a compact summary, and checks the
 paper's headline claims (printed as REPRO-CHECK lines).
+
+Every figure sweep runs on the batched engine: per policy, all load
+points are stacked into one ``simulate_many`` call, and the process-wide
+compile cache (keyed on ``(policy, cluster, N, F)``) means each distinct
+engine is traced + compiled exactly once across the whole harness.
 """
 from __future__ import annotations
 
@@ -148,8 +153,10 @@ def main() -> None:
         print(f"  {r['scheduler']:16s} {r['impl']:14s} "
               f"{r['decisions_per_s']:12.0f} dec/s")
 
+    from repro.core.simulator import engine_cache_stats
     print(f"\nbenchmarks done in {time.time()-t_start:.0f}s; CSVs in "
-          f"experiments/; overall: {'PASS' if ok else 'FAIL'}")
+          f"experiments/; compiled engines: {engine_cache_stats()}; "
+          f"overall: {'PASS' if ok else 'FAIL'}")
     sys.exit(0 if ok else 1)
 
 

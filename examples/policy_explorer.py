@@ -6,6 +6,23 @@ slowdown/latency/efficiency table.  Examples::
     PYTHONPATH=src python examples/policy_explorer.py \
         --policies E/H/PS E/LL/PS L/*/* --loads 0.3 0.6 0.9 \
         --workload ms-trace --workers 8 --cores 12
+
+Batched sweeps
+--------------
+With ``--engine sim`` (the default) the whole ``loads × reps`` grid is
+stacked into one :class:`~repro.core.workload.WorkloadBatch` per policy
+and run through a single ``jax.vmap``-ed compiled program
+(:func:`repro.core.simulator.simulate_many`) — one XLA compile per
+policy regardless of how many load points or seed replications you
+sweep.  ``--reps R`` replicates every load point over ``R`` consecutive
+seeds inside the same batch and reports the across-replication mean
+± 95 % confidence half-width of each metric::
+
+    PYTHONPATH=src python examples/policy_explorer.py \
+        --policies E/H/PS E/LL/PS --loads 0.3 0.5 0.7 0.9 --reps 5
+
+The ``--engine serve`` path (cold-start platform with straggler
+mitigation hooks) remains per-cell and ignores ``--reps``.
 """
 import argparse
 
@@ -26,28 +43,51 @@ def main() -> None:
     ap.add_argument("--engine", choices=["sim", "serve"], default="sim",
                     help="pure simulator vs serving platform (cold starts)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--reps", type=int, default=1,
+                    help="seed replications per load point (sim engine); "
+                         ">1 adds ±95%% CI columns")
     args = ap.parse_args()
 
-    from repro.core import (ClusterCfg, WORKLOADS, parse_policy, summarize,
-                            summarize_sim)
-    from repro.core.simulator import simulate
+    from repro.core import (ClusterCfg, WORKLOADS, parse_policy,
+                            replicate_workload, summarize,
+                            summarize_batch_sim)
+    from repro.core.simulator import simulate_many
     from repro.serving.engine import ServeCfg, ServingCluster
 
     cl = ClusterCfg(n_workers=args.workers, cores=args.cores)
     wfn = WORKLOADS[args.workload]
-    print(f"{'policy':10s} {'load':>5s} {'slow50':>8s} {'slow99':>10s} "
-          f"{'lat99':>9s} {'cold%':>6s} {'servers':>8s}")
+    ci = " ±ci95" if args.reps > 1 and args.engine == "sim" else ""
+    print(f"{'policy':10s} {'load':>5s} {'slow50':>8s} "
+          f"{'slow99':>10s}{ci} {'lat99':>9s} {'cold%':>6s} "
+          f"{'servers':>8s}")
+
+    if args.engine == "sim":
+        seeds = tuple(range(args.seed, args.seed + args.reps))
+        wb = replicate_workload(wfn, cl, args.loads, args.n, seeds=seeds)
+        results = {}
+        for ptext in args.policies:
+            pol = parse_policy(ptext)
+            results[pol.name] = (pol, simulate_many(pol, cl, wb))
+        for li, load in enumerate(args.loads):
+            sl = slice(li * args.reps, (li + 1) * args.reps)
+            for pname, (pol, out) in results.items():
+                bs = summarize_batch_sim(out[sl], wb[sl])
+                s = bs.pooled
+                ci_txt = (f" ±{bs.stats['slow_p99'].ci95:6.1f}"
+                          if args.reps > 1 else "")
+                print(f"{pname:10s} {load:5.2f} {s.slow_p50:8.2f} "
+                      f"{s.slow_p99:10.1f}{ci_txt} {s.lat_p99:9.2f} "
+                      f"{100*s.cold_frac:6.1f} {s.mean_servers:8.2f}")
+        return
+
     for load in args.loads:
         wl = wfn(cl, load, args.n, seed=args.seed)
         for ptext in args.policies:
             pol = parse_policy(ptext)
-            if args.engine == "sim":
-                s = summarize_sim(simulate(pol, cl, wl), wl)
-            else:
-                out = ServingCluster(ServeCfg(cluster=cl), pol).run(wl)
-                s = summarize(out.response, wl.service, out.cold,
-                              out.rejected, out.server_time, out.core_time,
-                              out.end_time)
+            out = ServingCluster(ServeCfg(cluster=cl), pol).run(wl)
+            s = summarize(out.response, wl.service, out.cold,
+                          out.rejected, out.server_time, out.core_time,
+                          out.end_time)
             print(f"{pol.name:10s} {load:5.2f} {s.slow_p50:8.2f} "
                   f"{s.slow_p99:10.1f} {s.lat_p99:9.2f} "
                   f"{100*s.cold_frac:6.1f} {s.mean_servers:8.2f}")

@@ -9,19 +9,23 @@ from .taxonomy import (Binding, LoadBalance, PolicySpec, WorkerSched,
                        parse_policy, FIG2_POLICIES, EVAL_POLICIES, HERMES,
                        LATE_BINDING, E_LL_PS, E_LL_FCFS, E_LL_SRPT, E_LOC_PS,
                        E_LOC_FCFS, E_R_PS, E_R_FCFS)
-from .workload import (Workload, WORKLOADS, synth_workload, ms_trace,
+from .workload import (Workload, WorkloadBatch, WORKLOADS, synth_workload,
+                       stack_workloads, replicate_workload, ms_trace,
                        ms_representative, single_function, multi_balanced,
                        homogeneous_exec, lognormal_mean,
                        AZURE_MU, AZURE_SIGMA)
-from .metrics import Summary, summarize, summarize_sim
+from .metrics import (Summary, BatchSummary, Stat, summarize, summarize_sim,
+                      summarize_batch, summarize_batch_sim)
 
 __all__ = [
     "ClusterCfg", "PAPER_LARGE", "PAPER_SMALL", "PAPER_TESTBED",
     "Binding", "LoadBalance", "PolicySpec", "WorkerSched", "parse_policy",
     "FIG2_POLICIES", "EVAL_POLICIES", "HERMES", "LATE_BINDING", "E_LL_PS",
     "E_LL_FCFS", "E_LL_SRPT", "E_LOC_PS", "E_LOC_FCFS", "E_R_PS", "E_R_FCFS",
-    "Workload", "WORKLOADS", "synth_workload", "ms_trace",
+    "Workload", "WorkloadBatch", "WORKLOADS", "synth_workload",
+    "stack_workloads", "replicate_workload", "ms_trace",
     "ms_representative", "single_function", "multi_balanced",
     "homogeneous_exec", "lognormal_mean", "AZURE_MU", "AZURE_SIGMA",
-    "Summary", "summarize", "summarize_sim",
+    "Summary", "BatchSummary", "Stat", "summarize", "summarize_sim",
+    "summarize_batch", "summarize_batch_sim",
 ]

@@ -14,6 +14,13 @@ contract) as:
   the next completion in closed form over the whole ``[W, S]`` slot matrix,
 * branch-free load-balancing selection (:mod:`repro.core.policies`).
 
+Two entry points share the engine: :func:`simulate` runs one workload;
+:func:`simulate_many` runs ``R`` stacked replications (seeds / arrival-rate
+scales with a shared ``(N, F)`` shape) through a single :func:`jax.vmap`-ed
+program.  Compiled engines are memoized process-wide on
+``(policy, cluster, N, F)`` (see :func:`build_simulator`), so policy × load
+sweeps compile each engine exactly once.
+
 All event times are float64 (the simulator enables x64; model code in this
 repo always pins explicit dtypes so this is safe process-wide).
 
@@ -45,7 +52,7 @@ from jax import lax
 from .cluster import ClusterCfg
 from .policies import make_select_worker_jax
 from .taxonomy import Binding, PolicySpec, WorkerSched
-from .workload import Workload
+from .workload import Workload, WorkloadBatch, stack_workloads
 
 EPS = 1e-9
 _BIG_TIME = 1e18
@@ -79,6 +86,40 @@ class SimOutput:
     end_time: float
 
 
+@dataclasses.dataclass(frozen=True)
+class BatchSimOutput:
+    """Results of ``R`` stacked workload replications (leading axis R)."""
+
+    response: np.ndarray     # [R, N] f64
+    cold: np.ndarray         # [R, N] bool
+    rejected: np.ndarray     # [R, N] bool
+    worker: np.ndarray       # [R, N] i32
+    server_time: np.ndarray  # [R] f64
+    core_time: np.ndarray    # [R] f64
+    end_time: np.ndarray     # [R] f64
+
+    @property
+    def n_reps(self) -> int:
+        return int(self.response.shape[0])
+
+    def rep(self, r: int) -> SimOutput:
+        """The ``r``-th replication as a plain :class:`SimOutput`."""
+        return SimOutput(
+            response=self.response[r], cold=self.cold[r],
+            rejected=self.rejected[r], worker=self.worker[r],
+            server_time=float(self.server_time[r]),
+            core_time=float(self.core_time[r]),
+            end_time=float(self.end_time[r]))
+
+    def __getitem__(self, sl: slice) -> "BatchSimOutput":
+        """A sub-batch over a slice of the replication axis."""
+        return BatchSimOutput(
+            response=self.response[sl], cold=self.cold[sl],
+            rejected=self.rejected[sl], worker=self.worker[sl],
+            server_time=self.server_time[sl], core_time=self.core_time[sl],
+            end_time=self.end_time[sl])
+
+
 def _rank_rows(key: jax.Array) -> jax.Array:
     """Per-row rank of each element (0 = smallest). Stable."""
     order = jnp.argsort(key, axis=1)
@@ -88,9 +129,15 @@ def _rank_rows(key: jax.Array) -> jax.Array:
         jnp.broadcast_to(jnp.arange(key.shape[1]), key.shape))
 
 
-def build_simulator(policy: PolicySpec, cluster: ClusterCfg, *,
-                    n_arrivals: int, n_functions: int):
-    """Compile a simulator for a fixed (policy, cluster, N, F)."""
+def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
+                  n_arrivals: int, n_functions: int):
+    """Build the raw (un-jitted) scan engine for (policy, cluster, N, F).
+
+    The returned ``run(arrivals, funcs, services, u_lb, homes) -> SimState``
+    is pure and rank-polymorphic under :func:`jax.vmap`: mapping every
+    argument over a leading replication axis yields the batched engine used
+    by :func:`simulate_many`.
+    """
     W, C, S = cluster.n_workers, cluster.cores, cluster.slots
     F = n_functions
     N = n_arrivals
@@ -155,15 +202,28 @@ def build_simulator(policy: PolicySpec, cluster: ClusterCfg, *,
         return lax.while_loop(cond, body, st)
 
     def advance(st: SimState, dt, funcs, services, arrivals) -> SimState:
-        """Fast-forward the cluster by ``dt`` seconds of wall time."""
+        """Fast-forward the cluster by ``dt`` seconds of wall time.
+
+        One completion is processed per iteration — the earliest-finishing
+        slot (the ``argmin`` of time-to-done).  Simultaneous completions
+        drain in successive zero-``tau`` iterations; their bookkeeping
+        (response writes to distinct indices, warm-pool increments)
+        commutes, so results are identical to batch-completing them while
+        the per-iteration update touches O(1) state instead of scattering
+        over the whole ``[W, S]`` matrix (the engine's hot path at large
+        ``W``).
+        """
 
         def cond(carry):
             st, dt_left = carry
-            any_task = (st.task_idx >= 0).any()
-            go = any_task & (dt_left > 0)
+            active = st.task_idx >= 0
+            # a tie can be left pending when a completion lands exactly on
+            # the window edge — drain it before yielding to the caller
+            pending = (active & (st.remaining <= EPS)).any()
+            go = active.any() & ((dt_left > 0) | pending)
             if late:
-                active = (st.task_idx >= 0).sum(axis=1)
-                can_pop = (st.q_tail > st.q_head) & (active.min() < C)
+                n_active = active.sum(axis=1)
+                can_pop = (st.q_tail > st.q_head) & (n_active.min() < C)
                 go = go | can_pop
             return go
 
@@ -174,7 +234,8 @@ def build_simulator(policy: PolicySpec, cluster: ClusterCfg, *,
             active = st.task_idx >= 0
             rates = rates_of(st)
             t_done = jnp.where(rates > 0, st.remaining / rates, jnp.inf)
-            tau = jnp.minimum(dt_left, t_done.min())
+            tmin = t_done.min()
+            tau = jnp.minimum(dt_left, tmin)
             tau = jnp.where(jnp.isfinite(tau) & (tau > 0), tau, 0.0)
             # integrate occupancy (constant over tau)
             n_w = active.sum(axis=1)
@@ -182,20 +243,29 @@ def build_simulator(policy: PolicySpec, cluster: ClusterCfg, *,
             core_time = st.core_time + tau * jnp.minimum(n_w, C).sum()
             now = st.now + tau
             remaining = st.remaining - rates * tau
-            done = active & (remaining <= EPS)
-            # record responses (idx N is a scratch slot for non-done)
-            idx = jnp.where(done, st.task_idx, N).reshape(-1)
-            val = jnp.where(done, now - st.task_arr, 0.0).reshape(-1)
-            resp = st.resp.at[idx].set(val)
-            # return executors to the warm pool (pad col F absorbs non-done)
-            w_ids = jnp.broadcast_to(jnp.arange(W)[:, None], (W, S))
-            f_ids = jnp.where(done, funcs[jnp.maximum(st.task_idx, 0)], F)
-            warm = st.warm.at[w_ids.reshape(-1), f_ids.reshape(-1)].add(
-                done.reshape(-1).astype(jnp.int32))
+            # complete the argmin slot only (idx N / col F are scratch);
+            # the remaining<=EPS clause matches cond's pending drain — a
+            # task left within EPS of done at the window edge completes
+            # here (as both the old batch-done engine and the oracle do)
+            # rather than stalling the loop
+            j = jnp.argmin(t_done.reshape(-1))
+            wj, sj = j // S, j % S
+            tid = st.task_idx[wj, sj]
+            completed = (tmin <= dt_left) | \
+                ((tid >= 0) & (st.remaining[wj, sj] <= EPS))
+            resp = st.resp.at[jnp.where(completed, tid, N)].set(
+                jnp.where(completed, now - st.task_arr[wj, sj], 0.0))
+            f_j = funcs[jnp.maximum(tid, 0)]
+            warm = st.warm.at[jnp.where(completed, wj, 0),
+                              jnp.where(completed, f_j, F)].add(
+                completed.astype(jnp.int32))
             warm = warm.at[:, F].set(0)
+            remaining = remaining.at[wj, sj].set(
+                jnp.where(completed, jnp.inf, remaining[wj, sj]))
+            task_idx = st.task_idx.at[wj, sj].set(
+                jnp.where(completed, jnp.int32(-1), tid))
             st = st._replace(
-                remaining=jnp.where(done, jnp.inf, remaining),
-                task_idx=jnp.where(done, -1, st.task_idx),
+                remaining=remaining, task_idx=task_idx,
                 warm=warm, now=now, resp=resp,
                 server_time=server_time, core_time=core_time)
             return st, dt_left - tau
@@ -227,7 +297,6 @@ def build_simulator(policy: PolicySpec, cluster: ClusterCfg, *,
                           lambda s: s, st)
         return st, ()
 
-    @jax.jit
     def run(arrivals, funcs, services, u_lb, homes):
         st = SimState(
             remaining=jnp.full((W, S), jnp.inf),
@@ -253,6 +322,72 @@ def build_simulator(policy: PolicySpec, cluster: ClusterCfg, *,
     return run
 
 
+# --------------------------------------------------------------------------
+# Process-wide compile cache.
+#
+# ``simulate()`` used to rebuild (and therefore re-trace + re-compile) the
+# whole scan program on every call — a policy × load sweep paid XLA
+# compilation per *cell*.  The engine is fully determined by
+# ``(policy, cluster, N, F)`` (``cluster`` folds in W/C/S and the cold-start
+# penalty), so compiled programs are memoized on that key; jit's own shape
+# cache then handles the batch axis, and a sweep over arrival-rate scale
+# reuses one compiled program per policy.
+# --------------------------------------------------------------------------
+
+_ENGINE_CACHE: dict[tuple, object] = {}
+
+
+def _cache_key(policy: PolicySpec, cluster: ClusterCfg,
+               n_arrivals: int, n_functions: int, batched: bool) -> tuple:
+    return (tuple(policy), tuple(cluster), int(n_arrivals),
+            int(n_functions), batched)
+
+
+def engine_cache_stats() -> dict:
+    """Introspection helper: number of distinct compiled engines."""
+    keys = list(_ENGINE_CACHE)
+    return {"entries": len(keys),
+            "batched": sum(1 for k in keys if k[-1]),
+            "single": sum(1 for k in keys if not k[-1])}
+
+
+def clear_engine_cache() -> None:
+    _ENGINE_CACHE.clear()
+
+
+def build_simulator(policy: PolicySpec, cluster: ClusterCfg, *,
+                    n_arrivals: int, n_functions: int):
+    """Jitted single-workload simulator, memoized on (policy, cluster, N, F).
+
+    Repeated calls with an equal key return the *same* compiled callable, so
+    sweeps over loads/seeds (which only change array values, not shapes)
+    compile exactly once per policy.
+    """
+    key = _cache_key(policy, cluster, n_arrivals, n_functions, False)
+    fn = _ENGINE_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(_build_engine(policy, cluster, n_arrivals, n_functions))
+        _ENGINE_CACHE[key] = fn
+    return fn
+
+
+def build_batch_simulator(policy: PolicySpec, cluster: ClusterCfg, *,
+                          n_arrivals: int, n_functions: int):
+    """Jitted ``vmap``-ed simulator over a leading replication axis.
+
+    All five inputs carry a leading ``R`` axis (``arrivals/funcs/services/
+    u_lb`` are ``[R, N]``, ``homes`` is ``[R, F]``); one compiled program
+    advances all R replications in lockstep.
+    """
+    key = _cache_key(policy, cluster, n_arrivals, n_functions, True)
+    fn = _ENGINE_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(jax.vmap(
+            _build_engine(policy, cluster, n_arrivals, n_functions)))
+        _ENGINE_CACHE[key] = fn
+    return fn
+
+
 def simulate(policy: PolicySpec, cluster: ClusterCfg, wl: Workload
              ) -> SimOutput:
     """Run the JAX simulator on a workload; returns host-side results."""
@@ -269,4 +404,32 @@ def simulate(policy: PolicySpec, cluster: ClusterCfg, wl: Workload
         server_time=float(st.server_time),
         core_time=float(st.core_time),
         end_time=float(st.now),
+    )
+
+
+def simulate_many(policy: PolicySpec, cluster: ClusterCfg,
+                  workloads) -> BatchSimOutput:
+    """Run ``R`` stacked workload replications through one compiled program.
+
+    ``workloads`` is a :class:`~repro.core.workload.WorkloadBatch` or a
+    sequence of :class:`Workload` sharing one ``(N, F)`` shape (stacked
+    here).  Semantically identical to ``R`` independent :func:`simulate`
+    calls — the batched engine is the same scan program under ``vmap`` —
+    but compiles once and advances every replication per XLA dispatch.
+    """
+    wb = workloads if isinstance(workloads, WorkloadBatch) \
+        else stack_workloads(workloads)
+    run = build_batch_simulator(policy, cluster, n_arrivals=wb.n,
+                                n_functions=wb.n_functions)
+    st = run(jnp.asarray(wb.arrival), jnp.asarray(wb.func),
+             jnp.asarray(wb.service), jnp.asarray(wb.u_lb),
+             jnp.asarray(wb.func_home))
+    return BatchSimOutput(
+        response=np.asarray(st.resp[:, :wb.n]),
+        cold=np.asarray(st.cold[:, :wb.n]),
+        rejected=np.asarray(st.rejected[:, :wb.n]),
+        worker=np.asarray(st.worker_of[:, :wb.n]),
+        server_time=np.asarray(st.server_time),
+        core_time=np.asarray(st.core_time),
+        end_time=np.asarray(st.now),
     )

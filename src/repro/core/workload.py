@@ -59,6 +59,87 @@ class Workload:
         return float(self.arrival[-1]) if self.n else 0.0
 
 
+@dataclasses.dataclass(frozen=True)
+class WorkloadBatch:
+    """``R`` stacked workload replications sharing one ``(N, F)`` shape.
+
+    The replication axis is the batch axis of the vmapped simulator
+    (:func:`repro.core.simulator.simulate_many`): replications may differ
+    in seed and offered load (arrival-rate scale) but must agree on the
+    number of arrivals and functions so they map onto one compiled program.
+    """
+
+    arrival: np.ndarray     # (R, N) float64
+    func: np.ndarray        # (R, N) int32
+    service: np.ndarray     # (R, N) float64
+    u_lb: np.ndarray        # (R, N) float64
+    func_home: np.ndarray   # (R, F) int32
+    n_functions: int
+    loads: tuple            # (R,) offered load per replication
+    names: tuple            # (R,) workload names
+
+    @property
+    def n_reps(self) -> int:
+        return int(self.arrival.shape[0])
+
+    @property
+    def n(self) -> int:
+        return int(self.arrival.shape[1])
+
+    def rep(self, r: int) -> Workload:
+        """The ``r``-th replication as a plain :class:`Workload`."""
+        return Workload(
+            arrival=self.arrival[r], func=self.func[r],
+            service=self.service[r], u_lb=self.u_lb[r],
+            func_home=self.func_home[r], n_functions=self.n_functions,
+            load=self.loads[r], name=self.names[r])
+
+    def __getitem__(self, sl: slice) -> "WorkloadBatch":
+        """A sub-batch over a slice of the replication axis."""
+        return WorkloadBatch(
+            arrival=self.arrival[sl], func=self.func[sl],
+            service=self.service[sl], u_lb=self.u_lb[sl],
+            func_home=self.func_home[sl], n_functions=self.n_functions,
+            loads=self.loads[sl], names=self.names[sl])
+
+
+def stack_workloads(wls) -> WorkloadBatch:
+    """Stack workloads with a shared ``(N, F)`` shape into a batch."""
+    wls = list(wls)
+    if not wls:
+        raise ValueError("stack_workloads needs at least one workload")
+    n, f = wls[0].n, wls[0].n_functions
+    for wl in wls[1:]:
+        if wl.n != n or wl.n_functions != f:
+            raise ValueError(
+                f"all replications must share (N, F)=({n}, {f}); got "
+                f"({wl.n}, {wl.n_functions}) for {wl.name!r}")
+    return WorkloadBatch(
+        arrival=np.stack([wl.arrival for wl in wls]),
+        func=np.stack([wl.func for wl in wls]),
+        service=np.stack([wl.service for wl in wls]),
+        u_lb=np.stack([wl.u_lb for wl in wls]),
+        func_home=np.stack([wl.func_home for wl in wls]),
+        n_functions=f,
+        loads=tuple(wl.load for wl in wls),
+        names=tuple(wl.name for wl in wls))
+
+
+def replicate_workload(workload_fn, cluster: ClusterCfg, loads, n_arrivals,
+                       *, seeds=(0,)) -> WorkloadBatch:
+    """Generate the ``loads × seeds`` grid of replications as one batch.
+
+    ``workload_fn`` is any of the §6.1 generators below (signature
+    ``(cluster, load, n, seed) -> Workload``).  Replication order is
+    load-major: ``[(l0, s0), (l0, s1), ..., (l1, s0), ...]`` — one
+    :func:`~repro.core.simulator.simulate_many` call then sweeps the whole
+    grid through a single compiled program.
+    """
+    return stack_workloads(
+        workload_fn(cluster, load, n_arrivals, seed)
+        for load in loads for seed in seeds)
+
+
 def _function_mix(rng: np.random.Generator, n: int, n_functions: int,
                   hot_fraction: float) -> np.ndarray:
     """Draw per-invocation function ids with a single hot function."""

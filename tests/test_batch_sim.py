@@ -1,0 +1,145 @@
+"""Batched engine contract: ``simulate_many`` ≡ R independent ``simulate``
+calls bit-for-bit, plus compile-cache identity and batch metrics."""
+import numpy as np
+import pytest
+
+from repro.core import (ClusterCfg, E_LL_SRPT, E_LOC_FCFS, E_R_PS, HERMES,
+                        LATE_BINDING, replicate_workload, stack_workloads,
+                        summarize_batch_sim, summarize_sim, synth_workload)
+from repro.core.simulator import (build_batch_simulator, build_simulator,
+                                  simulate, simulate_many)
+
+# One policy per binding/balance/sched family:
+#   L/LL/FCFS (late binding), E/LOC/FCFS (locality + FCFS),
+#   E/R/PS (random + PS), E/LL/SRPT (least-loaded + SRPT),
+#   E/H/PS (Hermes hybrid + PS).
+FAMILY_POLICIES = (LATE_BINDING, E_LOC_FCFS, E_R_PS, E_LL_SRPT, HERMES)
+CLUSTER = ClusterCfg(n_workers=4, cores=3, capacity_factor=2)
+
+
+def _wls(n=200):
+    """Replications differing in both load and seed (shared (N, F))."""
+    return [synth_workload(CLUSTER, load, n, n_functions=5,
+                           hot_fraction=0.8, seed=seed)
+            for load, seed in ((0.4, 0), (0.9, 1), (1.3, 2))]
+
+
+@pytest.mark.parametrize("policy", FAMILY_POLICIES, ids=lambda p: p.name)
+def test_simulate_many_matches_independent_runs(policy):
+    wls = _wls()
+    batch = simulate_many(policy, CLUSTER, wls)
+    assert batch.n_reps == len(wls)
+    for r, wl in enumerate(wls):
+        single = simulate(policy, CLUSTER, wl)
+        # bit-for-bit: the batched engine is the same program under vmap
+        np.testing.assert_array_equal(
+            np.nan_to_num(batch.response[r], nan=-1.0),
+            np.nan_to_num(single.response, nan=-1.0))
+        np.testing.assert_array_equal(batch.cold[r], single.cold)
+        np.testing.assert_array_equal(batch.rejected[r], single.rejected)
+        np.testing.assert_array_equal(batch.worker[r], single.worker)
+        assert float(batch.server_time[r]) == single.server_time
+        assert float(batch.core_time[r]) == single.core_time
+        assert float(batch.end_time[r]) == single.end_time
+        # rep() view round-trips
+        rep = batch.rep(r)
+        np.testing.assert_array_equal(
+            np.nan_to_num(rep.response, nan=-1.0),
+            np.nan_to_num(single.response, nan=-1.0))
+
+
+def test_completion_within_eps_of_arrival_edge_terminates():
+    """Regression: a task finishing EPS-close past an arrival boundary
+    must complete in the pending-drain iteration, not livelock the
+    while_loop (remaining in (0, EPS] with the window exhausted)."""
+    import numpy as np
+    from repro.core import Workload, E_LL_FCFS
+    from repro.core.sim_ref import simulate_ref
+    cl = ClusterCfg(n_workers=1, cores=2, capacity_factor=2)
+    wl = Workload(
+        arrival=np.array([0.0, 1.0]),
+        func=np.zeros(2, dtype=np.int32),
+        service=np.array([1.0 + 5e-10, 1.0]),   # done 5e-10 past arrival 2
+        u_lb=np.zeros(2),
+        func_home=np.zeros(1, dtype=np.int32),
+        n_functions=1, load=0.5, name="eps-edge")
+    out = simulate(E_LL_FCFS, cl, wl)
+    ref = simulate_ref(E_LL_FCFS, cl, wl)
+    np.testing.assert_allclose(out.response, ref.response, atol=1e-6)
+    batch = simulate_many(E_LL_FCFS, cl, [wl, wl])
+    np.testing.assert_array_equal(batch.response[0], out.response)
+
+
+def test_compile_cache_returns_same_fn():
+    kw = dict(n_arrivals=200, n_functions=5)
+    a = build_simulator(HERMES, CLUSTER, **kw)
+    b = build_simulator(HERMES, CLUSTER, **kw)
+    assert a is b
+    ab = build_batch_simulator(HERMES, CLUSTER, **kw)
+    bb = build_batch_simulator(HERMES, CLUSTER, **kw)
+    assert ab is bb
+    assert ab is not a
+    # any key component change misses the cache
+    assert build_simulator(E_R_PS, CLUSTER, **kw) is not a
+    assert build_simulator(
+        HERMES, CLUSTER._replace(cold_start_penalty=0.5), **kw) is not a
+    assert build_simulator(HERMES, CLUSTER, n_arrivals=201,
+                           n_functions=5) is not a
+
+
+def test_stack_workloads_validates_shape():
+    a = synth_workload(CLUSTER, 0.5, 100, n_functions=5, seed=0)
+    b = synth_workload(CLUSTER, 0.5, 101, n_functions=5, seed=0)
+    c = synth_workload(CLUSTER, 0.5, 100, n_functions=6, seed=0)
+    with pytest.raises(ValueError):
+        stack_workloads([a, b])
+    with pytest.raises(ValueError):
+        stack_workloads([a, c])
+    with pytest.raises(ValueError):
+        stack_workloads([])
+    wb = stack_workloads([a])
+    assert wb.n_reps == 1 and wb.n == 100
+
+
+def test_replicate_workload_grid_order():
+    def wfn(cluster, load, n, seed):
+        return synth_workload(cluster, load, n, n_functions=3, seed=seed,
+                              name=f"l{load}-s{seed}")
+    wb = replicate_workload(wfn, CLUSTER, [0.3, 0.8], 50, seeds=(0, 1, 2))
+    assert wb.n_reps == 6
+    # load-major: loads change slowest, seeds fastest
+    assert wb.names == ("l0.3-s0", "l0.3-s1", "l0.3-s2",
+                        "l0.8-s0", "l0.8-s1", "l0.8-s2")
+    assert wb.loads == (0.3, 0.3, 0.3, 0.8, 0.8, 0.8)
+    # distinct seeds produce distinct traces
+    assert not np.allclose(wb.service[0], wb.service[1])
+
+
+def test_summarize_batch_single_rep_matches_summarize():
+    wl = synth_workload(CLUSTER, 0.8, 300, n_functions=5, seed=3)
+    out = simulate(HERMES, CLUSTER, wl)
+    bout = simulate_many(HERMES, CLUSTER, [wl])
+    wb = stack_workloads([wl])
+    bs = summarize_batch_sim(bout, wb)
+    s = summarize_sim(out, wl)
+    assert bs.n_reps == 1
+    assert bs.per_rep[0] == s
+    assert bs.pooled == s
+    # no spread estimate from a single replication
+    assert all(st.ci95 == 0.0 for st in bs.stats.values()
+               if np.isfinite(st.ci95))
+
+
+def test_summarize_batch_confidence_intervals():
+    wls = [synth_workload(CLUSTER, 0.8, 300, n_functions=5, seed=s)
+           for s in range(4)]
+    bout = simulate_many(HERMES, CLUSTER, wls)
+    bs = summarize_batch_sim(bout, stack_workloads(wls))
+    assert bs.n_reps == 4
+    st = bs.stats["slow_p50"]
+    per = [s.slow_p50 for s in bs.per_rep]
+    assert min(per) <= st.mean <= max(per)
+    assert st.ci95 >= 0.0 and st.lo <= st.mean <= st.hi
+    row = bs.row()
+    assert row["slow_p50_mean"] == st.mean
+    assert row["slow_p50_ci95"] == st.ci95

@@ -1,13 +1,23 @@
-"""Unit + property tests for the scheduling taxonomy and policies."""
+"""Unit + property tests for the scheduling taxonomy and policies.
+
+``hypothesis`` is optional: when installed, the property tests fuzz the
+policy contracts; without it, seeded random examples exercise the same
+deterministic assertions (the checkers below are shared by both lanes).
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.policies import (hermes_score_np, make_select_worker_jax,
                                  select_worker_np)
 from repro.core.taxonomy import (Binding, LoadBalance, PolicySpec,
                                  WorkerSched, parse_policy, HERMES,
                                  FIG2_POLICIES)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 
 
 def test_parse_roundtrip():
@@ -19,22 +29,11 @@ def test_parse_roundtrip():
     assert len(FIG2_POLICIES) == 7
 
 
-state = st.integers(min_value=2, max_value=16).flatmap(
-    lambda w: st.tuples(
-        st.lists(st.integers(0, 100), min_size=w, max_size=w),
-        st.lists(st.integers(0, 3), min_size=w, max_size=w),
-        st.integers(1, 16),                 # cores
-        st.integers(1, 12),                 # capacity factor
-    ))
+# --------------------------------------------------------------------------
+# Shared contract checkers (used by the hypothesis lane and the seeded lane)
+# --------------------------------------------------------------------------
 
-
-@settings(max_examples=200, deadline=None)
-@given(state)
-def test_hermes_score_properties(sw):
-    active_l, warm_l, cores, capf = sw
-    slots = cores * capf
-    active = np.minimum(np.array(active_l, np.int64), slots)
-    warm = np.array(warm_l, np.int64)
+def _check_hermes_score(active, warm, cores, slots):
     score, low_load = hermes_score_np(active, warm, cores, slots)
     w = int(np.argmax(score))
     has_slot = active < slots
@@ -59,13 +58,8 @@ def test_hermes_score_properties(sw):
         assert has_slot[w]
 
 
-@settings(max_examples=100, deadline=None)
-@given(state, st.integers(0, 1 << 30))
-def test_select_worker_np_always_valid(sw, seed):
-    active_l, warm_l, cores, capf = sw
-    slots = cores * capf
+def _check_select_np_valid(active, cores, slots, seed):
     rng = np.random.default_rng(seed)
-    active = np.minimum(np.array(active_l, np.int64), slots)
     W = len(active)
     F = 4
     warm = rng.integers(0, 2, (W, F))
@@ -81,14 +75,10 @@ def test_select_worker_np_always_valid(sw, seed):
             assert w == -1
 
 
-@settings(max_examples=50, deadline=None)
-@given(state, st.integers(0, 1 << 30))
-def test_select_worker_jax_matches_np(sw, seed):
+def _check_jax_matches_np(active, cores, slots, seed):
     import jax.numpy as jnp
-    active_l, warm_l, cores, capf = sw
-    slots = cores * capf
     rng = np.random.default_rng(seed)
-    active = np.minimum(np.array(active_l, np.int64), slots).astype(np.int32)
+    active = active.astype(np.int32)
     W = len(active)
     F = 4
     warm = rng.integers(0, 2, (W, F)).astype(np.int32)
@@ -102,3 +92,81 @@ def test_select_worker_jax_matches_np(sw, seed):
         w_j = int(sel(jnp.asarray(active), jnp.asarray(warm[:, func]),
                       jnp.int32(func), jnp.asarray(homes), jnp.float64(u)))
         assert w_np == w_j, (bal.name, active.tolist(), warm[:, func])
+
+
+def _random_state(seed):
+    """Seeded analogue of the hypothesis ``state`` strategy below."""
+    rng = np.random.default_rng(seed)
+    W = int(rng.integers(2, 17))
+    cores = int(rng.integers(1, 17))
+    capf = int(rng.integers(1, 13))
+    slots = cores * capf
+    active = np.minimum(rng.integers(0, 101, W).astype(np.int64), slots)
+    warm = rng.integers(0, 4, W).astype(np.int64)
+    return active, warm, cores, slots
+
+
+# --------------------------------------------------------------------------
+# Seeded lane — always runs, hypothesis not required
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(50))
+def test_hermes_score_properties_seeded(seed):
+    active, warm, cores, slots = _random_state(seed)
+    _check_hermes_score(active, warm, cores, slots)
+    # also cover the all-full high-load corner deterministically
+    _check_hermes_score(np.full_like(active, slots), warm, cores, slots)
+
+
+@pytest.mark.parametrize("seed", range(30))
+def test_select_worker_np_always_valid_seeded(seed):
+    active, _, cores, slots = _random_state(seed)
+    _check_select_np_valid(active, cores, slots, seed + 1000)
+    # cluster-full corner: every balance policy must reject (-1)
+    _check_select_np_valid(np.full_like(active, slots), cores, slots,
+                           seed + 1000)
+
+
+@pytest.mark.parametrize("seed", range(15))
+def test_select_worker_jax_matches_np_seeded(seed):
+    active, _, cores, slots = _random_state(seed)
+    _check_jax_matches_np(active, cores, slots, seed + 2000)
+
+
+# --------------------------------------------------------------------------
+# Property lane — fuzzing on top of the seeded lane when hypothesis exists
+# --------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    state = st.integers(min_value=2, max_value=16).flatmap(
+        lambda w: st.tuples(
+            st.lists(st.integers(0, 100), min_size=w, max_size=w),
+            st.lists(st.integers(0, 3), min_size=w, max_size=w),
+            st.integers(1, 16),                 # cores
+            st.integers(1, 12),                 # capacity factor
+        ))
+
+    @settings(max_examples=200, deadline=None)
+    @given(state)
+    def test_hermes_score_properties(sw):
+        active_l, warm_l, cores, capf = sw
+        slots = cores * capf
+        active = np.minimum(np.array(active_l, np.int64), slots)
+        warm = np.array(warm_l, np.int64)
+        _check_hermes_score(active, warm, cores, slots)
+
+    @settings(max_examples=100, deadline=None)
+    @given(state, st.integers(0, 1 << 30))
+    def test_select_worker_np_always_valid(sw, seed):
+        active_l, _, cores, capf = sw
+        slots = cores * capf
+        active = np.minimum(np.array(active_l, np.int64), slots)
+        _check_select_np_valid(active, cores, slots, seed)
+
+    @settings(max_examples=50, deadline=None)
+    @given(state, st.integers(0, 1 << 30))
+    def test_select_worker_jax_matches_np(sw, seed):
+        active_l, _, cores, capf = sw
+        slots = cores * capf
+        active = np.minimum(np.array(active_l, np.int64), slots)
+        _check_jax_matches_np(active, cores, slots, seed)

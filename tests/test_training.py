@@ -1,4 +1,8 @@
-"""Training substrate: optimizer, checkpointing, restart, compression."""
+"""Training substrate: optimizer, checkpointing, restart, compression.
+
+``hypothesis`` is optional — the quantize round-trip bound is always
+checked on seeded random vectors; hypothesis adds fuzzing when present.
+"""
 import os
 import tempfile
 
@@ -6,7 +10,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 
 from repro import configs
 from repro.data.pipeline import lcg_batch, make_data_iter, random_batch
@@ -38,14 +47,32 @@ def test_adamw_decreases_quadratic():
     assert float(jnp.abs(params["w"]).max()) < 0.05
 
 
-@settings(max_examples=50, deadline=None)
-@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=1,
-                max_size=64))
-def test_quantize_roundtrip_bound(xs):
+def _check_quantize_roundtrip(xs):
     x = jnp.asarray(xs, jnp.float32)
     q, scale = quantize(x)
     err = np.abs(np.asarray(dequantize(q, scale) - x))
     assert err.max() <= float(scale) * 0.5 + 1e-6
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_quantize_roundtrip_bound_seeded(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 65))
+    _check_quantize_roundtrip(rng.uniform(-100, 100, n).tolist())
+
+
+def test_quantize_roundtrip_bound_corners():
+    _check_quantize_roundtrip([0.0])
+    _check_quantize_roundtrip([100.0, -100.0])
+    _check_quantize_roundtrip([1e-30] * 8)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=1,
+                    max_size=64))
+    def test_quantize_roundtrip_bound(xs):
+        _check_quantize_roundtrip(xs)
 
 
 def test_data_pipeline_deterministic():
