@@ -39,7 +39,7 @@ def main() -> None:
 
     from . import (fig2_policy_space, fig3_srpt, fig4_scale, fig6_slowdown,
                    fig7_coldstarts, fig8_resources, fig9_robustness,
-                   tab_overhead)
+                   fig10_trace_replay, tab_overhead)
 
     print("== fig2: policy space (4x12 cores, Azure workload) ==",
           flush=True)
@@ -140,6 +140,33 @@ def main() -> None:
     ok &= _claim("§6.5: Hermes ≈ least-loaded on light-tailed workload",
                  h9["slow_p99"] <= l9["slow_p99"] * 1.5 + 5,
                  f"hermes={h9['slow_p99']:.1f} vs LL={l9['slow_p99']:.1f}")
+
+    print("== fig10: non-stationary Azure-schema trace replay ==",
+          flush=True)
+    f10 = fig10_trace_replay.run(quick)
+    d10 = _by(f10, workload="azure-diurnal", load=0.5)
+    h10 = next(r for r in d10 if r["scheduler"] == "hermes")
+    v10 = next(r for r in d10 if r["scheduler"] == "vanilla-ow")
+    l10 = next(r for r in d10 if r["scheduler"] == "least-loaded")
+    ok &= _claim("Trace replay: Hermes ≥50% below vanilla OW p99 slowdown "
+                 "under diurnal load",
+                 h10["slow_p99_mean"] < 0.5 * v10["slow_p99_mean"],
+                 f"hermes={h10['slow_p99_mean']:.1f}"
+                 f"±{h10['slow_p99_ci95']:.1f} vs "
+                 f"vanilla={v10['slow_p99_mean']:.1f}"
+                 f"±{v10['slow_p99_ci95']:.1f}")
+    ok &= _claim("Trace replay: Hermes fewer cold starts than "
+                 "least-loaded under diurnal load",
+                 h10["cold_frac_mean"] < l10["cold_frac_mean"],
+                 f"{100 * h10['cold_frac_mean']:.1f}% < "
+                 f"{100 * l10['cold_frac_mean']:.1f}%")
+    b10 = _by(f10, workload="azure-bursty", load=0.7)
+    hb = next(r for r in b10 if r["scheduler"] == "hermes")
+    lb = next(r for r in b10 if r["scheduler"] == "least-loaded")
+    print(f"  [bursty @0.7 observation] hermes "
+          f"p99={hb['slow_p99_mean']:.1f}±{hb['slow_p99_ci95']:.1f} vs "
+          f"least-loaded p99={lb['slow_p99_mean']:.1f}"
+          f"±{lb['slow_p99_ci95']:.1f}")
 
     print("== §6.6: scheduler overhead ==", flush=True)
     tov = tab_overhead.run(quick)

@@ -23,6 +23,13 @@ seeds inside the same batch and reports the across-replication mean
 
 The ``--engine serve`` path (cold-start platform with straggler
 mitigation hooks) remains per-cell and ignores ``--reps``.
+
+``--workload`` accepts every ``repro.core.WORKLOADS`` entry, including
+the non-stationary ``azure-*`` trace-replay scenarios
+(:mod:`repro.trace`)::
+
+    PYTHONPATH=src python examples/policy_explorer.py \
+        --workload azure-bursty --loads 0.5 0.7 --reps 3
 """
 import argparse
 
@@ -34,9 +41,8 @@ def main() -> None:
     ap.add_argument("--loads", nargs="+", type=float,
                     default=[0.3, 0.6, 0.9])
     ap.add_argument("--workload", default="ms-trace",
-                    choices=["ms-trace", "ms-representative",
-                             "single-function", "multi-balanced",
-                             "homogeneous-exec"])
+                    help="any repro.core.WORKLOADS name, incl. azure-* "
+                         "trace-replay scenarios")
     ap.add_argument("--workers", type=int, default=8)
     ap.add_argument("--cores", type=int, default=12)
     ap.add_argument("-n", type=int, default=4000)
@@ -54,6 +60,9 @@ def main() -> None:
     from repro.core.simulator import simulate_many
     from repro.serving.engine import ServeCfg, ServingCluster
 
+    if args.workload not in WORKLOADS:
+        ap.error(f"unknown --workload {args.workload!r}; choose from "
+                 f"{', '.join(sorted(WORKLOADS))}")
     cl = ClusterCfg(n_workers=args.workers, cores=args.cores)
     wfn = WORKLOADS[args.workload]
     ci = " ±ci95" if args.reps > 1 and args.engine == "sim" else ""

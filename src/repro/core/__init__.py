@@ -10,6 +10,7 @@ from .taxonomy import (Binding, LoadBalance, PolicySpec, WorkerSched,
                        LATE_BINDING, E_LL_PS, E_LL_FCFS, E_LL_SRPT, E_LOC_PS,
                        E_LOC_FCFS, E_R_PS, E_R_FCFS)
 from .workload import (Workload, WorkloadBatch, WORKLOADS, synth_workload,
+                       validate_workload,
                        stack_workloads, replicate_workload, ms_trace,
                        ms_representative, single_function, multi_balanced,
                        homogeneous_exec, lognormal_mean,
@@ -17,13 +18,19 @@ from .workload import (Workload, WorkloadBatch, WORKLOADS, synth_workload,
 from .metrics import (Summary, BatchSummary, Stat, summarize, summarize_sim,
                       summarize_batch, summarize_batch_sim)
 
+# Trace-replay scenarios (repro.trace) join the synthetic §6.1 generators
+# so every --workload flag / sweep accepts them.  catalog is import-light
+# (no repro.core imports at module level), so this cannot cycle.
+from ..trace.catalog import TRACE_SCENARIOS
+WORKLOADS.update(TRACE_SCENARIOS)
+
 __all__ = [
     "ClusterCfg", "PAPER_LARGE", "PAPER_SMALL", "PAPER_TESTBED",
     "Binding", "LoadBalance", "PolicySpec", "WorkerSched", "parse_policy",
     "FIG2_POLICIES", "EVAL_POLICIES", "HERMES", "LATE_BINDING", "E_LL_PS",
     "E_LL_FCFS", "E_LL_SRPT", "E_LOC_PS", "E_LOC_FCFS", "E_R_PS", "E_R_FCFS",
     "Workload", "WorkloadBatch", "WORKLOADS", "synth_workload",
-    "stack_workloads", "replicate_workload", "ms_trace",
+    "validate_workload", "stack_workloads", "replicate_workload", "ms_trace",
     "ms_representative", "single_function", "multi_balanced",
     "homogeneous_exec", "lognormal_mean", "AZURE_MU", "AZURE_SIGMA",
     "Summary", "BatchSummary", "Stat", "summarize", "summarize_sim",

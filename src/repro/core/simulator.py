@@ -37,6 +37,7 @@ State layout (``W`` workers × ``S`` slots):
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from functools import partial
 from typing import NamedTuple
 
@@ -323,7 +324,7 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
 
 
 # --------------------------------------------------------------------------
-# Process-wide compile cache.
+# Process-wide compile cache (bounded LRU).
 #
 # ``simulate()`` used to rebuild (and therefore re-trace + re-compile) the
 # whole scan program on every call — a policy × load sweep paid XLA
@@ -332,9 +333,22 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
 # penalty), so compiled programs are memoized on that key; jit's own shape
 # cache then handles the batch axis, and a sweep over arrival-rate scale
 # reuses one compiled program per policy.
+#
+# The cache is LRU-bounded at ``ENGINE_CACHE_MAX`` entries: every distinct
+# (N, F) shape pins its jitted callable plus XLA executable, so an
+# unbounded dict grows without limit under long multi-shape sweeps
+# (trace replays with per-trace F, scale studies varying N).  64 covers
+# every in-repo sweep (the full benchmark harness compiles < 40 engines)
+# while evicting cold programs in recompile-on-miss fashion.
 # --------------------------------------------------------------------------
 
-_ENGINE_CACHE: dict[tuple, object] = {}
+#: Default max resident compiled engines; see note above.  This is only
+#: the *initial* bound — rebinding this name later has no effect; use
+#: :func:`set_engine_cache_capacity` to change the live limit.
+ENGINE_CACHE_MAX = 64
+
+_ENGINE_CACHE: "OrderedDict[tuple, object]" = OrderedDict()
+_ENGINE_CACHE_CAPACITY = ENGINE_CACHE_MAX
 
 
 def _cache_key(policy: PolicySpec, cluster: ClusterCfg,
@@ -343,12 +357,39 @@ def _cache_key(policy: PolicySpec, cluster: ClusterCfg,
             int(n_functions), batched)
 
 
+def _cache_get_or_build(key: tuple, build):
+    fn = _ENGINE_CACHE.get(key)
+    if fn is not None:
+        _ENGINE_CACHE.move_to_end(key)
+        return fn
+    fn = build()
+    _ENGINE_CACHE[key] = fn
+    while len(_ENGINE_CACHE) > _ENGINE_CACHE_CAPACITY:
+        _ENGINE_CACHE.popitem(last=False)
+    return fn
+
+
 def engine_cache_stats() -> dict:
     """Introspection helper: number of distinct compiled engines."""
     keys = list(_ENGINE_CACHE)
     return {"entries": len(keys),
             "batched": sum(1 for k in keys if k[-1]),
-            "single": sum(1 for k in keys if not k[-1])}
+            "single": sum(1 for k in keys if not k[-1]),
+            "capacity": _ENGINE_CACHE_CAPACITY}
+
+
+def engine_cache_capacity() -> int:
+    return _ENGINE_CACHE_CAPACITY
+
+
+def set_engine_cache_capacity(capacity: int) -> None:
+    """Re-bound the LRU (evicting oldest entries if shrinking)."""
+    global _ENGINE_CACHE_CAPACITY
+    if capacity < 1:
+        raise ValueError(f"capacity must be >= 1, got {capacity}")
+    _ENGINE_CACHE_CAPACITY = int(capacity)
+    while len(_ENGINE_CACHE) > _ENGINE_CACHE_CAPACITY:
+        _ENGINE_CACHE.popitem(last=False)
 
 
 def clear_engine_cache() -> None:
@@ -361,14 +402,14 @@ def build_simulator(policy: PolicySpec, cluster: ClusterCfg, *,
 
     Repeated calls with an equal key return the *same* compiled callable, so
     sweeps over loads/seeds (which only change array values, not shapes)
-    compile exactly once per policy.
+    compile exactly once per policy.  The memo is a bounded LRU
+    (``ENGINE_CACHE_MAX`` entries by default; resize with
+    :func:`set_engine_cache_capacity`); a key evicted by newer shapes is
+    transparently rebuilt on the next call.
     """
     key = _cache_key(policy, cluster, n_arrivals, n_functions, False)
-    fn = _ENGINE_CACHE.get(key)
-    if fn is None:
-        fn = jax.jit(_build_engine(policy, cluster, n_arrivals, n_functions))
-        _ENGINE_CACHE[key] = fn
-    return fn
+    return _cache_get_or_build(key, lambda: jax.jit(
+        _build_engine(policy, cluster, n_arrivals, n_functions)))
 
 
 def build_batch_simulator(policy: PolicySpec, cluster: ClusterCfg, *,
@@ -380,12 +421,8 @@ def build_batch_simulator(policy: PolicySpec, cluster: ClusterCfg, *,
     advances all R replications in lockstep.
     """
     key = _cache_key(policy, cluster, n_arrivals, n_functions, True)
-    fn = _ENGINE_CACHE.get(key)
-    if fn is None:
-        fn = jax.jit(jax.vmap(
-            _build_engine(policy, cluster, n_arrivals, n_functions)))
-        _ENGINE_CACHE[key] = fn
-    return fn
+    return _cache_get_or_build(key, lambda: jax.jit(jax.vmap(
+        _build_engine(policy, cluster, n_arrivals, n_functions))))
 
 
 def simulate(policy: PolicySpec, cluster: ClusterCfg, wl: Workload

@@ -103,11 +103,49 @@ class WorkloadBatch:
             loads=self.loads[sl], names=self.names[sl])
 
 
+def validate_workload(wl: Workload) -> None:
+    """Check a workload's internal shape consistency; raise ``ValueError``.
+
+    Catches malformed hand-built workloads (the trace-replay and test
+    paths construct ``Workload`` directly) *before* they reach
+    ``np.stack`` / the simulator, where they would surface as opaque
+    broadcast errors.
+    """
+    n = wl.arrival.shape[0] if wl.arrival.ndim == 1 else -1
+    for field in ("arrival", "func", "service", "u_lb"):
+        a = getattr(wl, field)
+        if a.ndim != 1 or a.shape[0] != n:
+            raise ValueError(
+                f"workload {wl.name!r}: {field} must be 1-D of length "
+                f"{max(n, 0)} (matching arrival); got shape {a.shape}")
+    if wl.func_home.ndim != 1 or wl.func_home.shape[0] != wl.n_functions:
+        raise ValueError(
+            f"workload {wl.name!r}: func_home must be 1-D of length "
+            f"n_functions={wl.n_functions}; got shape {wl.func_home.shape}")
+    if n and (int(wl.func.min()) < 0
+              or int(wl.func.max()) >= wl.n_functions):
+        raise ValueError(
+            f"workload {wl.name!r}: func ids must lie in "
+            f"[0, {wl.n_functions}); got range "
+            f"[{int(wl.func.min())}, {int(wl.func.max())}]")
+    if n > 1 and not (np.diff(wl.arrival) >= 0).all():
+        raise ValueError(
+            f"workload {wl.name!r}: arrival times must be "
+            f"non-decreasing (the simulators scan arrivals in order)")
+
+
 def stack_workloads(wls) -> WorkloadBatch:
-    """Stack workloads with a shared ``(N, F)`` shape into a batch."""
+    """Stack workloads with a shared ``(N, F)`` shape into a batch.
+
+    Every workload is validated (:func:`validate_workload`) and checked
+    for ``(N, F)`` agreement up front, so mismatches raise a named
+    ``ValueError`` here rather than a numpy broadcast error downstream.
+    """
     wls = list(wls)
     if not wls:
         raise ValueError("stack_workloads needs at least one workload")
+    for wl in wls:
+        validate_workload(wl)
     n, f = wls[0].n, wls[0].n_functions
     for wl in wls[1:]:
         if wl.n != n or wl.n_functions != f:

@@ -8,9 +8,16 @@ Two modes:
 * ``--backend models`` — real reduced-config JAX models behind the
   Hermes frontend with measured compile-time cold starts.
 
+Workloads are any ``repro.core.WORKLOADS`` entry — the synthetic §6.1
+generators *and* the ``azure-*`` trace-replay scenarios — or a real
+Azure-schema trace slice given as the two dataset CSVs.
+
 Examples::
 
     python -m repro.launch.serve --policy E/H/PS --load 0.6 -n 5000
+    python -m repro.launch.serve --workload azure-diurnal --load 0.7
+    python -m repro.launch.serve \
+        --trace-invocations inv.csv --trace-durations dur.csv
     python -m repro.launch.serve --backend models --requests 12
 """
 from __future__ import annotations
@@ -23,12 +30,21 @@ def main() -> None:
     ap.add_argument("--backend", choices=["platform", "models"],
                     default="platform")
     ap.add_argument("--policy", default="E/H/PS")
-    ap.add_argument("--workload", default="ms-trace")
+    ap.add_argument("--workload", default="ms-trace",
+                    help="any repro.core.WORKLOADS name, incl. azure-* "
+                         "trace-replay scenarios")
+    ap.add_argument("--trace-invocations", metavar="CSV",
+                    help="Azure-schema invocations-per-minute file; "
+                         "replayed instead of --workload")
+    ap.add_argument("--trace-durations", metavar="CSV",
+                    help="Azure-schema duration-percentiles file "
+                         "(required with --trace-invocations)")
     ap.add_argument("--load", type=float, default=0.6)
     ap.add_argument("-n", type=int, default=4000)
     ap.add_argument("--workers", type=int, default=8)
     ap.add_argument("--cores", type=int, default=12)
     ap.add_argument("--cold-start", type=float, default=0.5)
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--use-kernel", action="store_true",
                     help="dispatch through the Pallas controller kernel")
     ap.add_argument("--requests", type=int, default=12)
@@ -56,13 +72,28 @@ def main() -> None:
     from repro.core import (ClusterCfg, WORKLOADS, parse_policy, summarize)
     from repro.serving.engine import ServeCfg, ServingCluster
     cl = ClusterCfg(n_workers=args.workers, cores=args.cores)
-    wl = WORKLOADS[args.workload](cl, args.load, args.n, seed=0)
+    if args.trace_invocations or args.trace_durations:
+        if not (args.trace_invocations and args.trace_durations):
+            ap.error("--trace-invocations and --trace-durations "
+                     "must be given together")
+        from repro.trace.cache import load_trace_cached
+        from repro.trace.replay import replay_trace
+        trace = load_trace_cached(args.trace_invocations,
+                                  args.trace_durations,
+                                  allow_missing_durations=True)
+        wl = replay_trace(trace, cl, load=args.load, n_arrivals=args.n,
+                          seed=args.seed, name="trace-file")
+        wname = args.trace_invocations
+    else:
+        wl = WORKLOADS[args.workload](cl, args.load, args.n,
+                                      seed=args.seed)
+        wname = args.workload
     cfg = ServeCfg(cluster=cl, cold_start_s=args.cold_start)
     out = ServingCluster(cfg, parse_policy(args.policy),
                          use_kernel=args.use_kernel).run(wl)
     s = summarize(out.response, wl.service, out.cold, out.rejected,
                   out.server_time, out.core_time, out.end_time)
-    print(f"policy={args.policy} workload={args.workload} "
+    print(f"policy={args.policy} workload={wname} "
           f"load={args.load}")
     print(f"  slow p50/p99 = {s.slow_p50:.2f} / {s.slow_p99:.1f}")
     print(f"  lat  p50/p99 = {s.lat_p50:.2f}s / {s.lat_p99:.2f}s")

@@ -1,0 +1,61 @@
+"""Azure-schema trace ingestion & non-stationary replay.
+
+The paper's policy exploration (§3) and Hermes evaluation (§6) are driven
+by the 14-day Azure Functions 2019 trace.  This package makes trace-shaped
+load a first-class workload source for the batched simulator:
+
+* :mod:`repro.trace.schema` — parsing + validation of the released Azure
+  Functions 2019 dataset layout (per-function per-minute invocation
+  counts; per-function execution-duration percentiles).
+* :mod:`repro.trace.synth_trace` — a deterministic generator that *emits*
+  trace files in the Azure schema (diurnal / bursty / cold-start-heavy /
+  flash-crowd presets), so the repo is self-contained without shipping
+  the 1 GB+ dataset.  A small fixture slice lives under
+  ``repro/trace/data/``.
+* :mod:`repro.trace.replay` — per-minute-count-exact non-stationary
+  arrival reconstruction + Log-normal duration sampling fitted to the
+  trace percentiles, emitting :class:`~repro.core.workload.Workload`
+  arrays that slot directly into ``simulate`` / ``simulate_many``.
+* :mod:`repro.trace.catalog` — named scenario registry; merged into
+  ``repro.core.WORKLOADS`` so every ``--workload`` flag accepts trace
+  scenarios (``azure-diurnal``, ``azure-bursty``, ...).
+* :mod:`repro.trace.cache` — parsed-trace cache keyed by file digest.
+
+Import-order note: :mod:`repro.core` imports :mod:`repro.trace.catalog`
+to merge the scenario registry into ``WORKLOADS``, and
+:mod:`repro.trace.replay` imports workload dataclasses from
+:mod:`repro.core.workload` — so ``catalog`` (and this ``__init__``) stay
+import-light and everything heavier is loaded lazily via PEP 562.
+"""
+from __future__ import annotations
+
+from .catalog import TRACE_SCENARIOS, DATA_DIR  # noqa: F401  (core-free)
+
+_LAZY = {
+    "schema": ".schema",
+    "synth_trace": ".synth_trace",
+    "replay": ".replay",
+    "cache": ".cache",
+}
+
+_LAZY_SYMBOLS = {
+    "AzureTrace": "schema", "TraceFunction": "schema", "load_trace": "schema",
+    "synthesize_trace": "synth_trace", "write_trace_csvs": "synth_trace",
+    "SCENARIOS": "synth_trace",
+    "replay_trace": "replay", "resample_workloads": "replay",
+    "per_minute_counts": "replay", "fit_lognormal_from_percentiles": "replay",
+    "load_trace_cached": "cache", "file_digest": "cache",
+}
+
+__all__ = ["TRACE_SCENARIOS", "DATA_DIR", "catalog", *_LAZY,
+           *_LAZY_SYMBOLS]
+
+
+def __getattr__(name: str):
+    import importlib
+    if name in _LAZY:
+        return importlib.import_module(_LAZY[name], __name__)
+    if name in _LAZY_SYMBOLS:
+        mod = importlib.import_module("." + _LAZY_SYMBOLS[name], __name__)
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

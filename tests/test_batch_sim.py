@@ -87,6 +87,38 @@ def test_compile_cache_returns_same_fn():
                            n_functions=5) is not a
 
 
+def test_engine_cache_lru_bounded_and_evicts():
+    """The compile cache is a bounded LRU: recently-used engines survive,
+    the oldest are evicted once capacity is exceeded."""
+    from repro.core import simulator as sim
+    sim.clear_engine_cache()
+    old_cap = sim.engine_cache_capacity()
+    try:
+        sim.set_engine_cache_capacity(2)
+        kw = dict(n_functions=2)
+        a = sim.build_simulator(HERMES, CLUSTER, n_arrivals=10, **kw)
+        b = sim.build_simulator(HERMES, CLUSTER, n_arrivals=11, **kw)
+        # touching a makes b the LRU entry
+        assert sim.build_simulator(HERMES, CLUSTER, n_arrivals=10,
+                                   **kw) is a
+        sim.build_simulator(HERMES, CLUSTER, n_arrivals=12, **kw)
+        stats = sim.engine_cache_stats()
+        assert stats["entries"] == 2 and stats["capacity"] == 2
+        # a survived (was MRU), b was evicted and rebuilds fresh
+        assert sim.build_simulator(HERMES, CLUSTER, n_arrivals=10,
+                                   **kw) is a
+        assert sim.build_simulator(HERMES, CLUSTER, n_arrivals=11,
+                                   **kw) is not b
+        # shrinking the bound evicts immediately
+        sim.set_engine_cache_capacity(1)
+        assert sim.engine_cache_stats()["entries"] == 1
+        with pytest.raises(ValueError):
+            sim.set_engine_cache_capacity(0)
+    finally:
+        sim.set_engine_cache_capacity(old_cap)
+        sim.clear_engine_cache()
+
+
 def test_stack_workloads_validates_shape():
     a = synth_workload(CLUSTER, 0.5, 100, n_functions=5, seed=0)
     b = synth_workload(CLUSTER, 0.5, 101, n_functions=5, seed=0)

@@ -1,0 +1,277 @@
+"""repro.trace — Azure-schema ingestion & non-stationary replay.
+
+The acceptance contract: a workload synthesized via ``synth_trace`` →
+Azure-schema CSV → ``schema.py`` → ``replay.py`` reproduces the
+per-minute invocation counts *exactly* and the duration percentiles
+within statistical tolerance.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import ClusterCfg, HERMES, WORKLOADS, stack_workloads
+from repro.trace import catalog
+from repro.trace.cache import (clear_trace_cache, file_digest,
+                               load_trace_cached, trace_cache_stats)
+from repro.trace.replay import (fit_lognormal_from_percentiles,
+                                per_minute_counts, replay_trace,
+                                resample_workloads)
+from repro.trace.schema import (AZURE_MU, AZURE_SIGMA, DURATION_COLUMNS,
+                                load_trace, lognormal_percentiles_ms,
+                                norm_ppf)
+from repro.trace.synth_trace import (SCENARIOS, synthesize_trace,
+                                     write_trace_csvs)
+
+CLUSTER = ClusterCfg(n_workers=4, cores=12)
+
+
+def _csv_pair(tmp_path, trace):
+    inv = str(tmp_path / "inv.csv")
+    dur = str(tmp_path / "dur.csv")
+    write_trace_csvs(trace, inv, dur)
+    return inv, dur
+
+
+# ---------------------------------------------------------------- schema
+
+
+def test_norm_ppf_matches_known_quantiles():
+    # classic z-scores to 4 decimals
+    assert abs(norm_ppf(0.5)) < 1e-12
+    assert norm_ppf(0.975) == pytest.approx(1.959964, abs=1e-5)
+    assert norm_ppf(0.99) == pytest.approx(2.326348, abs=1e-5)
+    assert norm_ppf(0.01) == pytest.approx(-2.326348, abs=1e-5)
+
+
+def test_schema_round_trips_exactly(tmp_path):
+    trace = synthesize_trace("diurnal", n_functions=5, minutes=30,
+                             total_invocations=500, seed=11)
+    inv, dur = _csv_pair(tmp_path, trace)
+    loaded = load_trace(inv, dur)
+    assert loaded.minutes == trace.minutes
+    assert loaded.n_functions == trace.n_functions
+    np.testing.assert_array_equal(loaded.counts_matrix(),
+                                  trace.counts_matrix())
+    for a, b in zip(loaded.functions, trace.functions):
+        assert a.key == b.key and a.trigger == b.trigger
+        assert a.count == b.count
+        # repr round trip keeps floats bit-exact
+        assert a.duration_ms == b.duration_ms
+        assert a.average_ms == b.average_ms
+
+
+def _break_count_cell(line: str, value: str) -> str:
+    cells = line.split(",")
+    cells[-1] = value
+    return ",".join(cells)
+
+
+@pytest.mark.parametrize("breaker, match", [
+    (lambda l: [l[0].replace("Trigger", "Trigr")] + l[1:], "header"),
+    (lambda l: [l[0].replace(",3,", ",9,", 1)] + l[1:], "contiguous"),
+    (lambda l: [l[0], _break_count_cell(l[1], "-3")] + l[2:], "negative"),
+    (lambda l: [l[0], _break_count_cell(l[1], "x")] + l[2:],
+     "non-integer"),
+    (lambda l: l + [l[1]], "duplicate"),
+])
+def test_schema_rejects_malformed_invocations(tmp_path, breaker, match):
+    trace = synthesize_trace("diurnal", n_functions=3, minutes=10,
+                             total_invocations=200, seed=0)
+    inv, dur = _csv_pair(tmp_path, trace)
+    lines = open(inv).read().splitlines()
+    broken = tmp_path / "broken.csv"
+    broken.write_text("\n".join(breaker(lines)) + "\n")
+    with pytest.raises(ValueError, match=match):
+        load_trace(str(broken), dur)
+
+
+def test_schema_rejects_nonmonotone_percentiles(tmp_path):
+    trace = synthesize_trace("diurnal", n_functions=3, minutes=10,
+                             total_invocations=200, seed=0)
+    inv, dur = _csv_pair(tmp_path, trace)
+    lines = open(dur).read().splitlines()
+    cells = lines[1].split(",")
+    p50_col = DURATION_COLUMNS.index("percentile_Average_50")
+    p75_col = DURATION_COLUMNS.index("percentile_Average_75")
+    cells[p50_col], cells[p75_col] = cells[p75_col], cells[p50_col]
+    broken = tmp_path / "broken_dur.csv"
+    broken.write_text("\n".join([lines[0], ",".join(cells)] + lines[2:])
+                      + "\n")
+    with pytest.raises(ValueError, match="non-decreasing"):
+        load_trace(inv, str(broken))
+
+
+def test_schema_missing_durations_strict_vs_default(tmp_path):
+    trace = synthesize_trace("diurnal", n_functions=3, minutes=10,
+                             total_invocations=200, seed=0)
+    inv, dur = _csv_pair(tmp_path, trace)
+    lines = open(dur).read().splitlines()
+    short = tmp_path / "short_dur.csv"
+    short.write_text("\n".join(lines[:-1]) + "\n")   # drop last function
+    with pytest.raises(ValueError, match="no duration row"):
+        load_trace(inv, str(short))
+    loaded = load_trace(inv, str(short), allow_missing_durations=True)
+    assert loaded.n_functions == 3
+    filled = loaded.functions[-1]
+    expect = lognormal_percentiles_ms(AZURE_MU, AZURE_SIGMA)
+    assert filled.duration_ms == expect
+
+
+# ---------------------------------------------------------------- replay
+
+
+def test_replay_round_trip_counts_exact_and_percentiles_close(tmp_path):
+    trace = synthesize_trace("diurnal", n_functions=6, minutes=90,
+                             total_invocations=12000, seed=7)
+    inv, dur = _csv_pair(tmp_path, trace)
+    loaded = load_trace(inv, dur)
+    wl = replay_trace(loaded, CLUSTER, seed=3)   # load=None: real time
+
+    # per-minute invocation counts reproduce the trace EXACTLY
+    counts = per_minute_counts(wl, loaded.n_functions, loaded.minutes)
+    np.testing.assert_array_equal(counts, loaded.counts_matrix())
+    # arrivals are sorted and non-negative
+    assert (np.diff(wl.arrival) >= 0).all() and wl.arrival[0] >= 0
+
+    # fitted Log-normal recovers the generating parameters exactly
+    # (percentile columns were materialized analytically)
+    for fn in loaded.functions:
+        mu, sigma = fit_lognormal_from_percentiles(fn.duration_ms)
+        assert 1000 * math.exp(mu) == pytest.approx(fn.duration_ms[50],
+                                                    rel=1e-9)
+    # empirical duration percentiles within tolerance of the trace's
+    checked = 0
+    for i, fn in enumerate(loaded.functions):
+        svc_ms = wl.service[wl.func == i] * 1000.0
+        if len(svc_ms) < 1500:
+            continue
+        for q, rel in ((50, 0.10), (75, 0.12)):
+            assert np.percentile(svc_ms, q) == pytest.approx(
+                fn.duration_ms[q], rel=rel), f"fn{i} p{q}"
+        checked += 1
+    assert checked >= 2  # the Zipf-hot functions qualify
+
+
+def test_replay_load_targeting_and_tiling():
+    trace = synthesize_trace("bursty", n_functions=8, minutes=40,
+                             total_invocations=1000, seed=5)
+    # n_arrivals > trace total forces whole-trace tiling
+    wl = replay_trace(trace, CLUSTER, load=0.6, n_arrivals=3000, seed=1)
+    assert wl.n == 3000
+    realized = wl.service.sum() / (wl.horizon * CLUSTER.total_cores)
+    assert realized == pytest.approx(0.6, rel=1e-9)
+    assert (np.diff(wl.arrival) >= 0).all()
+    # same seed -> identical replay; different seed -> different jitter
+    wl2 = replay_trace(trace, CLUSTER, load=0.6, n_arrivals=3000, seed=1)
+    np.testing.assert_array_equal(wl.arrival, wl2.arrival)
+    wl3 = replay_trace(trace, CLUSTER, load=0.6, n_arrivals=3000, seed=2)
+    assert not np.array_equal(wl.arrival, wl3.arrival)
+
+
+def test_replay_rejects_empty_trace():
+    import dataclasses
+    trace = synthesize_trace("diurnal", n_functions=2, minutes=5,
+                             total_invocations=400, seed=0)
+    empty = dataclasses.replace(trace, functions=tuple(
+        dataclasses.replace(f, counts=np.zeros_like(f.counts))
+        for f in trace.functions))
+    with pytest.raises(ValueError, match="zero invocations"):
+        replay_trace(empty, CLUSTER)
+
+
+def test_replay_falls_back_on_zero_percentile_rows():
+    """Real Azure duration rows can be all-zero (Count=0 / sub-ms
+    functions); replay substitutes the trace-wide Azure default instead
+    of crashing."""
+    import dataclasses
+    trace = synthesize_trace("diurnal", n_functions=3, minutes=20,
+                             total_invocations=600, seed=6)
+    zeroed = dataclasses.replace(trace, functions=(
+        dataclasses.replace(
+            trace.functions[0], average_ms=0.0, minimum_ms=0.0,
+            maximum_ms=0.0,
+            duration_ms={p: 0.0 for p in trace.functions[0].duration_ms}),
+        *trace.functions[1:]))
+    wl = replay_trace(zeroed, CLUSTER, seed=1)
+    assert np.isfinite(wl.service).all() and (wl.service > 0).all()
+    # the zeroed function samples from the AZURE_MU/AZURE_SIGMA default
+    svc0 = wl.service[wl.func == 0]
+    assert len(svc0) > 0
+
+
+def test_resample_workloads_mixed_shapes():
+    t1 = synthesize_trace("diurnal", n_functions=4, minutes=30,
+                          total_invocations=900, seed=1)
+    t2 = synthesize_trace("bursty", n_functions=7, minutes=30,
+                          total_invocations=1400, seed=2)
+    w1 = replay_trace(t1, CLUSTER, seed=1)
+    w2 = replay_trace(t2, CLUSTER, seed=2)
+    assert w1.n != w2.n and w1.n_functions != w2.n_functions
+    wb = resample_workloads([w1, w2])
+    assert wb.n == min(w1.n, w2.n)
+    assert wb.n_functions == 7
+    # truncation preserves the prefix
+    np.testing.assert_array_equal(wb.arrival[0], w1.arrival[:wb.n])
+    with pytest.raises(ValueError, match="resample up"):
+        resample_workloads([w1, w2], n=max(w1.n, w2.n) + 1)
+
+
+# ---------------------------------------------------------------- cache
+
+
+def test_trace_cache_hits_on_digest(tmp_path):
+    clear_trace_cache()
+    trace = synthesize_trace("diurnal", n_functions=3, minutes=10,
+                             total_invocations=300, seed=4)
+    inv, dur = _csv_pair(tmp_path, trace)
+    a = load_trace_cached(inv, dur)
+    b = load_trace_cached(inv, dur)
+    assert a is b
+    assert trace_cache_stats()["hits"] == 1
+    # identical bytes under a different path still hit
+    inv2 = tmp_path / "copy.csv"
+    inv2.write_bytes(open(inv, "rb").read())
+    assert file_digest(str(inv2)) == file_digest(inv)
+    assert load_trace_cached(str(inv2), dur) is a
+    # rewritten content re-parses
+    other = synthesize_trace("diurnal", n_functions=3, minutes=10,
+                             total_invocations=300, seed=9)
+    write_trace_csvs(other, inv, dur)
+    c = load_trace_cached(inv, dur)
+    assert c is not a
+    clear_trace_cache()
+
+
+# --------------------------------------------------------------- catalog
+
+
+def test_trace_scenarios_merged_into_workloads():
+    for name in catalog.TRACE_SCENARIOS:
+        assert name in WORKLOADS
+    assert set(SCENARIOS) == {"diurnal", "bursty", "cold-heavy",
+                              "flash-crowd"}
+
+
+@pytest.mark.parametrize("name", sorted(catalog.TRACE_SCENARIOS))
+def test_catalog_scenarios_meet_workload_contract(name):
+    wl = WORKLOADS[name](CLUSTER, 0.7, 600, 1)
+    assert wl.n == 600
+    realized = wl.service.sum() / (wl.horizon * CLUSTER.total_cores)
+    assert realized == pytest.approx(0.7, rel=1e-9)
+    assert (np.diff(wl.arrival) >= 0).all()
+    # stackable across loads and seeds (shared (N, F))
+    wb = stack_workloads([wl, WORKLOADS[name](CLUSTER, 0.4, 600, 2)])
+    assert wb.n_reps == 2
+
+
+def test_trace_scenario_through_batched_engine():
+    from repro.core.simulator import simulate_many
+    cl = ClusterCfg(n_workers=4, cores=3, capacity_factor=2)
+    wls = [WORKLOADS["azure-diurnal"](cl, load, 250, seed)
+           for load, seed in ((0.5, 0), (0.8, 1))]
+    out = simulate_many(HERMES, cl, wls)
+    assert out.n_reps == 2
+    assert np.isfinite(out.response).all()
+    assert (out.response >= np.stack([wl.service for wl in wls])
+            - 1e-9).all()

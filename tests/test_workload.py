@@ -1,0 +1,92 @@
+"""Workload generators: load calibration, truncation, degenerate traces,
+and the up-front shape validation of ``stack_workloads``."""
+import numpy as np
+import pytest
+
+from repro.core import (ClusterCfg, Workload, WORKLOADS, stack_workloads,
+                        synth_workload, validate_workload)
+
+CLUSTER = ClusterCfg(n_workers=4, cores=12)
+
+
+def _realized_load(wl: Workload, cluster: ClusterCfg) -> float:
+    return float(wl.service.sum()) / (wl.horizon * cluster.total_cores)
+
+
+@pytest.mark.parametrize("exec_dist", ["lognormal", "exponential"])
+@pytest.mark.parametrize("load", [0.3, 0.9])
+def test_realized_offered_load_matches_request(exec_dist, load):
+    # λ is calibrated against the empirical mean service time, so the
+    # realized fraction of cluster capacity concentrates on `load` at
+    # ~1/sqrt(n); 5% tolerance is ~7 sigma at n=20000.
+    wl = synth_workload(CLUSTER, load, 20000, exec_dist=exec_dist, seed=3)
+    assert _realized_load(wl, CLUSTER) == pytest.approx(load, rel=0.05)
+
+
+@pytest.mark.parametrize("name", ["ms-trace", "ms-representative",
+                                  "single-function", "multi-balanced",
+                                  "homogeneous-exec"])
+def test_section61_generators_calibrated(name):
+    wl = WORKLOADS[name](CLUSTER, 0.6, 20000, 1)
+    assert wl.n == 20000
+    assert _realized_load(wl, CLUSTER) == pytest.approx(0.6, rel=0.05)
+    assert (np.diff(wl.arrival) >= 0).all()
+
+
+def test_max_service_truncation_honored():
+    wl = synth_workload(CLUSTER, 0.5, 5000, max_service=2.0, seed=0)
+    assert wl.service.max() <= 2.0
+    # σ=2.36 puts a large mass above 2s — truncation must have fired
+    assert (wl.service == 2.0).sum() > 100
+    # and the default 600s cap binds the Azure-shaped tail too
+    wl600 = synth_workload(CLUSTER, 0.5, 200000, seed=0)
+    assert wl600.service.max() <= 600.0
+
+
+def test_empty_trace_properties():
+    wl = Workload(
+        arrival=np.empty(0), func=np.empty(0, dtype=np.int32),
+        service=np.empty(0), u_lb=np.empty(0),
+        func_home=np.zeros(3, dtype=np.int32), n_functions=3,
+        load=0.0, name="empty")
+    assert wl.n == 0
+    assert wl.horizon == 0.0
+    validate_workload(wl)            # empty is structurally valid
+    wb = stack_workloads([wl, wl])
+    assert wb.n_reps == 2 and wb.n == 0
+
+
+def _valid(n=50, f=4):
+    rng = np.random.default_rng(0)
+    return Workload(
+        arrival=np.sort(rng.uniform(0, 100, n)),
+        func=rng.integers(0, f, n).astype(np.int32),
+        service=rng.uniform(0.1, 2.0, n),
+        u_lb=rng.uniform(size=n),
+        func_home=rng.integers(0, 4, f).astype(np.int32),
+        n_functions=f, load=0.5, name="hand-built")
+
+
+def test_stack_workloads_rejects_internal_mismatch():
+    import dataclasses
+    wl = _valid()
+    bad_len = dataclasses.replace(wl, service=wl.service[:-1])
+    with pytest.raises(ValueError, match="service"):
+        stack_workloads([bad_len])
+    bad_home = dataclasses.replace(
+        wl, func_home=np.zeros(2, dtype=np.int32))
+    with pytest.raises(ValueError, match="func_home"):
+        stack_workloads([bad_home])
+    bad_func = dataclasses.replace(
+        wl, func=np.full(wl.n, 99, dtype=np.int32))
+    with pytest.raises(ValueError, match="func ids"):
+        stack_workloads([bad_func])
+    bad_2d = dataclasses.replace(
+        wl, u_lb=np.stack([wl.u_lb, wl.u_lb]))
+    with pytest.raises(ValueError, match="u_lb"):
+        stack_workloads([bad_2d])
+    unsorted = dataclasses.replace(wl, arrival=wl.arrival[::-1].copy())
+    with pytest.raises(ValueError, match="non-decreasing"):
+        stack_workloads([unsorted])
+    # the valid one still stacks
+    assert stack_workloads([wl, _valid()]).n_reps == 2
