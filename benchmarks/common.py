@@ -17,7 +17,7 @@ import csv
 import os
 import time
 
-from repro.core import (ClusterCfg, PolicySpec, replicate_workload,
+from repro.core import (ClusterCfg, replicate_workload,
                         summarize_batch_sim, summarize_sim)
 from repro.core.simulator import simulate_many
 from repro.core.sim_ref import simulate_ref
@@ -66,8 +66,15 @@ def sweep_policies(policies, cluster: ClusterCfg, loads, n_arrivals,
             cols = bs.row() if reps > 1 else bs.pooled.row()
             rows.append({"policy": pol.name, "load": load,
                          "wall_s": round(cell_s, 3), **cols})
-    # interleave back to the historical (load-major) row order
-    rows.sort(key=lambda r: loads.index(r["load"]))
+    # interleave back to the historical (load-major) row order; the
+    # precomputed load → first-index map replaces the per-row
+    # list.index() scan (O(P·L²) overall → O(P·L·log(P·L))).  Duplicate
+    # load values share one key either way; the stable sort keeps their
+    # rows in generation order.
+    load_order = {}
+    for i, load in enumerate(loads):
+        load_order.setdefault(load, i)
+    rows.sort(key=lambda r: load_order[r["load"]])
     return rows
 
 

@@ -1,0 +1,36 @@
+"""Fig. 11 (extension) — the policy zoo: registry balancers swept together.
+
+The registry (:mod:`repro.policy`) makes the paper's policy space open:
+this sweep runs the §3 taxonomy balancers alongside the two registered
+extensions — ``JSQ2`` (power-of-two-choices sampling) and ``RR``
+(round-robin) — under the Azure-shaped workload on the paper's small
+cluster, all on the batched ``simulate_many`` engine.
+
+Expected shape of the result (classic balls-into-bins / the paper's
+Lesson 2): sampling *two* queues closes most of the gap between blind
+random/round-robin placement and full least-loaded information —
+``E/JSQ2/PS`` tracks ``E/LL/PS`` closely on p99 slowdown while ``E/R/PS``
+and ``E/RR/PS`` degrade at high load; Hermes adds its warm-executor /
+packing advantages on top.
+"""
+from __future__ import annotations
+
+from repro.core import PAPER_SMALL, ZOO_POLICIES, ms_trace
+
+from .common import sweep_policies, write_csv
+
+
+def run(quick: bool = True):
+    loads = [0.5, 0.7, 0.8, 0.9] if quick else \
+        [0.3, 0.4, 0.5, 0.6, 0.7, 0.75, 0.8, 0.85, 0.9, 0.95]
+    n = 6000 if quick else 20000
+    rows = sweep_policies(ZOO_POLICIES, PAPER_SMALL, loads, n, ms_trace)
+    write_csv("fig11_policy_zoo.csv", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['policy']:10s} load={r['load']:.2f} "
+              f"slow50={r['slow_p50']:8.2f} slow99={r['slow_p99']:10.1f} "
+              f"cold%={100 * r['cold_frac']:5.1f}")

@@ -39,7 +39,7 @@ def main() -> None:
 
     from . import (fig2_policy_space, fig3_srpt, fig4_scale, fig6_slowdown,
                    fig7_coldstarts, fig8_resources, fig9_robustness,
-                   fig10_trace_replay, tab_overhead)
+                   fig10_trace_replay, fig11_policy_zoo, tab_overhead)
 
     print("== fig2: policy space (4x12 cores, Azure workload) ==",
           flush=True)
@@ -167,6 +167,23 @@ def main() -> None:
           f"p99={hb['slow_p99_mean']:.1f}±{hb['slow_p99_ci95']:.1f} vs "
           f"least-loaded p99={lb['slow_p99_mean']:.1f}"
           f"±{lb['slow_p99_ci95']:.1f}")
+
+    print("== fig11: policy zoo (registry balancers: JSQ2, RR) ==",
+          flush=True)
+    f11 = fig11_policy_zoo.run(quick)
+    hi11 = [r for r in f11 if r["load"] == 0.9]
+    jsq2 = next(r for r in hi11 if r["policy"] == "E/JSQ2/PS")
+    r11 = next(r for r in hi11 if r["policy"] == "E/R/PS")
+    ll11 = next(r for r in hi11 if r["policy"] == "E/LL/PS")
+    rr11 = next(r for r in hi11 if r["policy"] == "E/RR/PS")
+    ok &= _claim("Zoo: two choices beat one — E/JSQ2/PS p99 < E/R/PS @0.9",
+                 jsq2["slow_p99"] < r11["slow_p99"],
+                 f"JSQ2={jsq2['slow_p99']:.1f} vs R={r11['slow_p99']:.1f}")
+    ok &= _claim("Zoo: JSQ2 tracks full-information LL (≤1.5x p99) @0.9",
+                 jsq2["slow_p99"] <= 1.5 * ll11["slow_p99"],
+                 f"JSQ2={jsq2['slow_p99']:.1f} vs LL={ll11['slow_p99']:.1f}")
+    print(f"  [zoo observation @0.9] RR p99={rr11['slow_p99']:.1f} "
+          f"(blind rotation, between R and JSQ2)")
 
     print("== §6.6: scheduler overhead ==", flush=True)
     tov = tab_overhead.run(quick)

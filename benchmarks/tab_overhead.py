@@ -23,7 +23,10 @@ from .common import write_csv
 POLICIES = {"vanilla-ow(LOC)": LoadBalance.LOCALITY,
             "random": LoadBalance.RANDOM,
             "least-loaded": LoadBalance.LEAST_LOADED,
-            "hermes(H)": LoadBalance.HYBRID}
+            "hermes(H)": LoadBalance.HYBRID,
+            # registry zoo balancers (any registered name works here)
+            "two-choices": "JSQ2",
+            "round-robin": "RR"}
 
 
 def run(quick: bool = True):

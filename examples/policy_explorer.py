@@ -1,10 +1,15 @@
 """Interactive policy-space exploration (paper §3 methodology).
 
 Sweep any ``T/LB/S`` policy over load and workload knobs; prints a
-slowdown/latency/efficiency table.  Examples::
+slowdown/latency/efficiency table.  ``LB`` and ``S`` accept every
+balancer/scheduler registered in :mod:`repro.policy` — the paper's
+``LOC``/``R``/``LL``/``H`` plus zoo extensions like ``JSQ2``
+(power-of-two-choices) and ``RR`` (round-robin), and anything you add
+via :func:`repro.policy.register_balancer` (``--list-policies`` shows
+what is registered).  Examples::
 
     PYTHONPATH=src python examples/policy_explorer.py \
-        --policies E/H/PS E/LL/PS L/*/* --loads 0.3 0.6 0.9 \
+        --policies E/H/PS E/JSQ2/PS E/LL/PS L/*/* --loads 0.3 0.6 0.9 \
         --workload ms-trace --workers 8 --cores 12
 
 Batched sweeps
@@ -52,7 +57,22 @@ def main() -> None:
     ap.add_argument("--reps", type=int, default=1,
                     help="seed replications per load point (sim engine); "
                          ">1 adds ±95%% CI columns")
+    ap.add_argument("--list-policies", action="store_true",
+                    help="print registered balancers/schedulers and exit")
     args = ap.parse_args()
+
+    if args.list_policies:
+        from repro.policy import (balancer_names, get_balancer, get_sched,
+                                  sched_names)
+        print("balancers (LB):")
+        for name in balancer_names():
+            bal = get_balancer(name)
+            print(f"  {name:6s} [{','.join(bal.backends())}]  {bal.doc}")
+        print("worker schedulers (S):")
+        for name in sched_names():
+            print(f"  {name:6s} {get_sched(name).doc}")
+        print("bindings (T): E (early), L (late; 'L/*/*' alias works)")
+        return
 
     from repro.core import (ClusterCfg, WORKLOADS, parse_policy,
                             replicate_workload, summarize,

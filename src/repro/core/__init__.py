@@ -8,7 +8,8 @@ from .cluster import ClusterCfg, PAPER_LARGE, PAPER_SMALL, PAPER_TESTBED
 from .taxonomy import (Binding, LoadBalance, PolicySpec, WorkerSched,
                        parse_policy, FIG2_POLICIES, EVAL_POLICIES, HERMES,
                        LATE_BINDING, E_LL_PS, E_LL_FCFS, E_LL_SRPT, E_LOC_PS,
-                       E_LOC_FCFS, E_R_PS, E_R_FCFS)
+                       E_LOC_FCFS, E_R_PS, E_R_FCFS, E_JSQ2_PS, E_RR_PS,
+                       ZOO_POLICIES)
 from .workload import (Workload, WorkloadBatch, WORKLOADS, synth_workload,
                        validate_workload,
                        stack_workloads, replicate_workload, ms_trace,
@@ -29,6 +30,7 @@ __all__ = [
     "Binding", "LoadBalance", "PolicySpec", "WorkerSched", "parse_policy",
     "FIG2_POLICIES", "EVAL_POLICIES", "HERMES", "LATE_BINDING", "E_LL_PS",
     "E_LL_FCFS", "E_LL_SRPT", "E_LOC_PS", "E_LOC_FCFS", "E_R_PS", "E_R_FCFS",
+    "E_JSQ2_PS", "E_RR_PS", "ZOO_POLICIES",
     "Workload", "WorkloadBatch", "WORKLOADS", "synth_workload",
     "validate_workload", "stack_workloads", "replicate_workload", "ms_trace",
     "ms_representative", "single_function", "multi_balanced",

@@ -1,130 +1,45 @@
-"""Load-balancing worker selection — numpy and JAX twins.
+"""Load-balancing worker selection — compatibility shims over the registry.
 
-Both implementations follow the identical deterministic contract documented
-in :mod:`repro.core.sim_ref` so the two simulators can be compared
-task-by-task.  Selection returns a worker index, or ``-1`` when every
-worker's slots (busy + local queue) are exhausted (OpenWhisk returns an
-error in that case; the simulators count a rejection).
+The implementations live in :mod:`repro.policy` (balancers registered by
+name, with ``np`` / ``jax`` / ``pallas`` backends sharing one
+deterministic contract — see :mod:`repro.policy.registry`).  This module
+keeps the historical call signatures used by tests, benchmarks and the
+kernels' oracles:
 
-The Hermes policy (§4.2) is scored lexicographically so it can run
-branch-free inside jitted code and inside the Pallas controller kernel:
-
-* low-load mode (some worker has a free core) — among workers with a free
-  core, prefer class ``3`` = non-empty with a warm executor for the
-  function, ``2`` = non-empty, ``1`` = empty with warm executor, ``0`` =
-  empty; within a class prefer the *most* loaded (packing / fill-up).
-* high-load mode (no free core anywhere) — least-loaded among workers with
-  a free slot, warm executor breaks ties.
+* :func:`select_worker_np` — per-arrival numpy selection taking the full
+  ``warm [W, F]`` matrix and a :class:`~repro.core.taxonomy.LoadBalance`
+  member (or any registered balancer name).
+* :func:`make_select_worker_jax` — jittable selection factory with the
+  pre-registry 5-argument closure signature.
+* :func:`hermes_score_np` — the Hermes lexicographic score (re-exported;
+  the Pallas kernel's oracle).
 """
 from __future__ import annotations
 
 import numpy as np
 
-from .taxonomy import LoadBalance
-
-_INT_INF = np.int64(1 << 40)
-
-
-# --------------------------------------------------------------------------
-# numpy implementations (oracle)
-# --------------------------------------------------------------------------
-
-def hermes_score_np(active: np.ndarray, warm_f: np.ndarray, cores: int,
-                    slots: int) -> tuple[np.ndarray, bool]:
-    """Return (score vector to maximize, low_load_mode)."""
-    has_core = active < cores
-    low_load = bool(has_core.any())
-    warm = warm_f > 0
-    if low_load:
-        nonempty = active > 0
-        cls = np.where(nonempty, 2 + warm.astype(np.int64),
-                       warm.astype(np.int64))
-        score = cls * (slots + 1) + active
-        score = np.where(has_core, score, -_INT_INF)
-    else:
-        has_slot = active < slots
-        key = active.astype(np.int64) * 2 - warm.astype(np.int64)
-        score = np.where(has_slot, -key, -_INT_INF)  # maximize = least loaded
-    return score, low_load
+from repro.policy import np_select, jax_select
+from repro.policy.balancers import hermes_score_np  # noqa: F401 (re-export)
 
 
-def select_worker_np(balance: LoadBalance, active: np.ndarray,
-                     warm: np.ndarray, func: int, func_home: np.ndarray,
-                     u: float, cores: int, slots: int) -> int:
-    W = active.shape[0]
-    has_slot = active < slots
-    if not has_slot.any():
-        return -1
-    if balance == LoadBalance.LOCALITY:
-        home = int(func_home[func])
-        ring = (home + np.arange(W)) % W
-        free = has_slot[ring]
-        return int(ring[int(np.argmax(free))])
-    if balance == LoadBalance.RANDOM:
-        free_idx = np.nonzero(has_slot)[0]
-        return int(free_idx[min(int(u * len(free_idx)), len(free_idx) - 1)])
-    if balance == LoadBalance.LEAST_LOADED:
-        key = np.where(has_slot, active, _INT_INF)
-        return int(np.argmin(key))
-    # HYBRID (Hermes)
-    score, _ = hermes_score_np(active, warm[:, func], cores, slots)
-    return int(np.argmax(score))
+def select_worker_np(balance, active: np.ndarray, warm: np.ndarray,
+                     func: int, func_home: np.ndarray, u: float, cores: int,
+                     slots: int, idx: int = 0) -> int:
+    """Select a worker with ``balance`` (name or enum); -1 when all full."""
+    sel = np_select(balance, cores, slots)
+    return sel(active, warm[:, func], func, func_home, u, idx)
 
 
-# --------------------------------------------------------------------------
-# JAX implementations — imported lazily so numpy-only users avoid jax init
-# --------------------------------------------------------------------------
-
-def make_select_worker_jax(balance: LoadBalance, cores: int, slots: int):
+def make_select_worker_jax(balance, cores: int, slots: int):
     """Build a jittable ``(active, warm_col, func, func_home, u) -> w``.
 
     ``warm_col`` is the ``warm[:, func]`` column; returns int32 worker id,
     -1 when all full.  Deterministic contract identical to numpy above.
+    (The registry's native closures additionally take the arrival index
+    ``idx``; this wrapper pins it to 0 for balancers that ignore it.)
     """
-    import jax.numpy as jnp
+    sel = jax_select(balance, cores, slots)
 
-    BIG = jnp.int32(1 << 30)
-
-    def _guard(w, has_slot):
-        return jnp.where(has_slot.any(), w, -1).astype(jnp.int32)
-
-    if balance == LoadBalance.LOCALITY:
-        def select(active, warm_col, func, func_home, u):
-            W = active.shape[0]
-            has_slot = active < slots
-            home = func_home[func]
-            ring = (home + jnp.arange(W, dtype=jnp.int32)) % W
-            free = has_slot[ring]
-            w = ring[jnp.argmax(free)]
-            return _guard(w, has_slot)
-    elif balance == LoadBalance.RANDOM:
-        def select(active, warm_col, func, func_home, u):
-            has_slot = active < slots
-            k = has_slot.sum()
-            target = jnp.minimum((u * k).astype(jnp.int32), k - 1)
-            # index of the (target+1)-th free worker
-            csum = jnp.cumsum(has_slot.astype(jnp.int32)) - 1
-            hit = has_slot & (csum == target)
-            w = jnp.argmax(hit)
-            return _guard(w, has_slot)
-    elif balance == LoadBalance.LEAST_LOADED:
-        def select(active, warm_col, func, func_home, u):
-            has_slot = active < slots
-            key = jnp.where(has_slot, active, BIG)
-            return _guard(jnp.argmin(key), has_slot)
-    elif balance == LoadBalance.HYBRID:
-        def select(active, warm_col, func, func_home, u):
-            active = active.astype(jnp.int32)
-            has_slot = active < slots
-            has_core = active < cores
-            warm = (warm_col > 0).astype(jnp.int32)
-            nonempty = (active > 0).astype(jnp.int32)
-            cls = jnp.where(nonempty > 0, 2 + warm, warm)
-            lo_score = jnp.where(has_core, cls * (slots + 1) + active, -BIG)
-            hi_key = active * 2 - warm
-            hi_score = jnp.where(has_slot, -hi_key, -BIG)
-            score = jnp.where(has_core.any(), lo_score, hi_score)
-            return _guard(jnp.argmax(score), has_slot)
-    else:  # pragma: no cover
-        raise ValueError(balance)
+    def select(active, warm_col, func, func_home, u):
+        return sel(active, warm_col, func, func_home, u, 0)
     return select

@@ -15,13 +15,13 @@ exactly):
     - Late binding: workers hold at most ``C`` tasks, all at rate 1; excess
       invocations queue FIFO at the controller.
 * Load-balancing selection is deterministic given the pre-drawn per-arrival
-  uniform ``u_lb`` (random policy) and the function-home table (locality):
-    - LOC: home worker, then linear probe to the next worker with a free
-      slot; reject if the whole ring is full.
-    - R:   the ``floor(u·k)``-th of the ``k`` workers with a free slot.
-    - LL:  least active invocations among workers with a free slot, ties to
-      the lowest index.
-    - H:   Hermes — see :func:`repro.core.policies.hermes_score`.
+  uniform ``u_lb`` (random policies), the function-home table (locality)
+  and the arrival sequence number (round-robin).  Selection and rate
+  assignment are resolved from the policy registry
+  (:func:`repro.policy.resolve` with ``backend="np"``), so any
+  registered balancer/scheduler runs through this oracle unchanged; see
+  :mod:`repro.policy.balancers` for the built-in contracts (LOC / R /
+  LL / H / JSQ2 / RR).
 * Warm executors: each completion leaves one idle warm executor for its
   function on its worker.  A placement consumes a matching warm executor
   (warm start) if present, else it is a cold start; if the worker's slots
@@ -39,9 +39,10 @@ import math
 
 import numpy as np
 
+from repro.policy import resolve
+
 from .cluster import ClusterCfg
-from .policies import select_worker_np
-from .taxonomy import Binding, PolicySpec, WorkerSched
+from .taxonomy import PolicySpec
 from .workload import Workload
 
 EPS = 1e-9
@@ -86,30 +87,22 @@ def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload
     server_time = 0.0
     core_time = 0.0
     now = 0.0
-    late = policy.binding == Binding.LATE
+    # numpy-backend resolution: select/rates are the oracle callables of
+    # the registered balancer/scheduler (None for late binding)
+    res = resolve(policy, backend="np", cluster=cluster)
+    late = res.late
 
     def set_rates(w: int) -> None:
         ts = tasks[w]
-        n = len(ts)
-        if n == 0:
+        if not ts:
             return
         if late:
             for t in ts:
                 t.rate = 1.0
             return
-        if policy.sched == WorkerSched.PS:
-            r = min(1.0, C / n)
-            for t in ts:
-                t.rate = r
-        elif policy.sched == WorkerSched.FCFS:
-            order = sorted(range(n), key=lambda i: ts[i].seq)
-            for k, i in enumerate(order):
-                ts[i].rate = 1.0 if k < C else 0.0
-        else:  # SRPT
-            order = sorted(range(n), key=lambda i: (ts[i].remaining,
-                                                    ts[i].seq))
-            for k, i in enumerate(order):
-                ts[i].rate = 1.0 if k < C else 0.0
+        rs = res.rates([t.remaining for t in ts], [t.seq for t in ts])
+        for t, r in zip(ts, rs):
+            t.rate = r
 
     def start_task(w: int, arr_idx: int, start_service: bool) -> None:
         """Place arrival ``arr_idx`` on worker ``w`` (slot already free)."""
@@ -192,9 +185,9 @@ def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload
             else:
                 queue.append(i)
         else:
-            w = select_worker_np(policy.balance, active, warm,
-                                 int(wl.func[i]), wl.func_home,
-                                 float(wl.u_lb[i]), C, S)
+            f = int(wl.func[i])
+            w = res.select(active, warm[:, f], f, wl.func_home,
+                           float(wl.u_lb[i]), i)
             if w < 0:
                 rejected[i] = True
             else:

@@ -12,7 +12,18 @@ contract) as:
   cluster through completion events between two arrivals — rates are
   piecewise constant between completions, so each iteration advances to
   the next completion in closed form over the whole ``[W, S]`` slot matrix,
-* branch-free load-balancing selection (:mod:`repro.core.policies`).
+* branch-free load-balancing selection and rate assignment resolved from
+  the policy registry (:func:`repro.policy.resolve`) — the engine never
+  branches on policy names, so registered balancers/schedulers are
+  sweepable without touching it.
+
+Selection dispatches through a *backend*: ``"jax"`` (pure jit/vmap
+closures) or ``"pallas"`` (the batched controller kernel — for ``H``
+this is :mod:`repro.kernels.hermes_select`, in interpret mode off-TPU).
+The default ``"auto"`` picks ``pallas`` whenever the policy's balancer
+ships a kernel, so ``simulate_many(HERMES, ...)`` shares one kernel
+dispatch across all stacked replications per arrival (the replication
+axis becomes the kernel batch under ``vmap``).
 
 Two entry points share the engine: :func:`simulate` runs one workload;
 :func:`simulate_many` runs ``R`` stacked replications (seeds / arrival-rate
@@ -50,9 +61,10 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 from jax import lax
 
+from repro.policy import default_backend, resolve
+
 from .cluster import ClusterCfg
-from .policies import make_select_worker_jax
-from .taxonomy import Binding, PolicySpec, WorkerSched
+from .taxonomy import PolicySpec
 from .workload import Workload, WorkloadBatch, stack_workloads
 
 EPS = 1e-9
@@ -121,48 +133,32 @@ class BatchSimOutput:
             end_time=self.end_time[sl])
 
 
-def _rank_rows(key: jax.Array) -> jax.Array:
-    """Per-row rank of each element (0 = smallest). Stable."""
-    order = jnp.argsort(key, axis=1)
-    ranks = jnp.zeros_like(order)
-    rows = jnp.arange(key.shape[0])[:, None]
-    return ranks.at[rows, order].set(
-        jnp.broadcast_to(jnp.arange(key.shape[1]), key.shape))
-
-
 def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
-                  n_arrivals: int, n_functions: int):
+                  n_arrivals: int, n_functions: int,
+                  backend: str = "jax"):
     """Build the raw (un-jitted) scan engine for (policy, cluster, N, F).
 
-    The returned ``run(arrivals, funcs, services, u_lb, homes) -> SimState``
-    is pure and rank-polymorphic under :func:`jax.vmap`: mapping every
-    argument over a leading replication axis yields the batched engine used
-    by :func:`simulate_many`.
+    ``backend`` selects how worker selection dispatches (``"jax"`` or
+    ``"pallas"``); rate assignment always uses the registry's jax
+    closures.  The returned ``run(arrivals, funcs, services, u_lb,
+    homes) -> SimState`` is pure and rank-polymorphic under
+    :func:`jax.vmap`: mapping every argument over a leading replication
+    axis yields the batched engine used by :func:`simulate_many`.
     """
     W, C, S = cluster.n_workers, cluster.cores, cluster.slots
     F = n_functions
     N = n_arrivals
     Q = N  # late-binding controller queue can hold every arrival
-    late = policy.binding == Binding.LATE
+    res = resolve(policy, backend=backend, cluster=cluster)
+    late = res.late
     penalty = float(cluster.cold_start_penalty)
-    select = None if late else make_select_worker_jax(policy.balance, C, S)
+    select = res.select        # None for late binding
 
     def rates_of(st: SimState) -> jax.Array:
         active = st.task_idx >= 0
         if late:
             return active.astype(jnp.float64)
-        if policy.sched == WorkerSched.PS:
-            n = active.sum(axis=1, keepdims=True)
-            r = jnp.minimum(1.0, C / jnp.maximum(n, 1))
-            return jnp.where(active, r, 0.0)
-        if policy.sched == WorkerSched.FCFS:
-            key = jnp.where(active, st.task_idx, jnp.int32(1 << 30))
-            rank = _rank_rows(key)
-            return jnp.where(active & (rank < C), 1.0, 0.0)
-        # SRPT — oracle remaining work; ties broken by slot (measure-zero)
-        key = jnp.where(active, st.remaining, jnp.inf)
-        rank = _rank_rows(key)
-        return jnp.where(active & (rank < C), 1.0, 0.0)
+        return res.rates(st.task_idx, st.remaining)
 
     def place(st: SimState, arr_idx, w, funcs, services, arrivals
               ) -> SimState:
@@ -290,7 +286,7 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
                     i.astype(jnp.int32)), q_tail=st.q_tail + 1)
             st = lax.cond(active.min() < C, do_place, do_queue, st)
         else:
-            w = select(active, st.warm[:, f_i], f_i, homes, u_i)
+            w = select(active, st.warm[:, f_i], f_i, homes, u_i, i)
             st = st._replace(rejected=st.rejected.at[i].set(w < 0))
             st = lax.cond(w >= 0,
                           lambda s: place(s, i, jnp.maximum(w, 0), funcs,
@@ -351,10 +347,18 @@ _ENGINE_CACHE: "OrderedDict[tuple, object]" = OrderedDict()
 _ENGINE_CACHE_CAPACITY = ENGINE_CACHE_MAX
 
 
+def _resolve_backend(policy: PolicySpec, backend: str) -> str:
+    """Normalize the user-facing backend choice (``"auto"`` dispatch)."""
+    if backend == "auto":
+        return default_backend(policy)
+    return backend
+
+
 def _cache_key(policy: PolicySpec, cluster: ClusterCfg,
-               n_arrivals: int, n_functions: int, batched: bool) -> tuple:
+               n_arrivals: int, n_functions: int, batched: bool,
+               backend: str) -> tuple:
     return (tuple(policy), tuple(cluster), int(n_arrivals),
-            int(n_functions), batched)
+            int(n_functions), batched, backend)
 
 
 def _cache_get_or_build(key: tuple, build):
@@ -373,8 +377,8 @@ def engine_cache_stats() -> dict:
     """Introspection helper: number of distinct compiled engines."""
     keys = list(_ENGINE_CACHE)
     return {"entries": len(keys),
-            "batched": sum(1 for k in keys if k[-1]),
-            "single": sum(1 for k in keys if not k[-1]),
+            "batched": sum(1 for k in keys if k[4]),
+            "single": sum(1 for k in keys if not k[4]),
             "capacity": _ENGINE_CACHE_CAPACITY}
 
 
@@ -397,39 +401,51 @@ def clear_engine_cache() -> None:
 
 
 def build_simulator(policy: PolicySpec, cluster: ClusterCfg, *,
-                    n_arrivals: int, n_functions: int):
+                    n_arrivals: int, n_functions: int,
+                    backend: str = "auto"):
     """Jitted single-workload simulator, memoized on (policy, cluster, N, F).
 
     Repeated calls with an equal key return the *same* compiled callable, so
     sweeps over loads/seeds (which only change array values, not shapes)
-    compile exactly once per policy.  The memo is a bounded LRU
-    (``ENGINE_CACHE_MAX`` entries by default; resize with
+    compile exactly once per policy.  ``backend`` is ``"jax"``,
+    ``"pallas"`` or ``"auto"`` (kernel dispatch whenever the balancer
+    ships one — see :func:`repro.policy.default_backend`).  The memo is a
+    bounded LRU (``ENGINE_CACHE_MAX`` entries by default; resize with
     :func:`set_engine_cache_capacity`); a key evicted by newer shapes is
     transparently rebuilt on the next call.
     """
-    key = _cache_key(policy, cluster, n_arrivals, n_functions, False)
+    backend = _resolve_backend(policy, backend)
+    key = _cache_key(policy, cluster, n_arrivals, n_functions, False,
+                     backend)
     return _cache_get_or_build(key, lambda: jax.jit(
-        _build_engine(policy, cluster, n_arrivals, n_functions)))
+        _build_engine(policy, cluster, n_arrivals, n_functions, backend)))
 
 
 def build_batch_simulator(policy: PolicySpec, cluster: ClusterCfg, *,
-                          n_arrivals: int, n_functions: int):
+                          n_arrivals: int, n_functions: int,
+                          backend: str = "auto"):
     """Jitted ``vmap``-ed simulator over a leading replication axis.
 
     All five inputs carry a leading ``R`` axis (``arrivals/funcs/services/
     u_lb`` are ``[R, N]``, ``homes`` is ``[R, F]``); one compiled program
-    advances all R replications in lockstep.
+    advances all R replications in lockstep.  With the ``pallas``
+    backend (the ``auto`` choice for Hermes), the replication axis maps
+    onto the controller kernel's batch dimension: one
+    :mod:`repro.kernels.hermes_select` dispatch serves every stacked
+    replication per arrival.
     """
-    key = _cache_key(policy, cluster, n_arrivals, n_functions, True)
+    backend = _resolve_backend(policy, backend)
+    key = _cache_key(policy, cluster, n_arrivals, n_functions, True,
+                     backend)
     return _cache_get_or_build(key, lambda: jax.jit(jax.vmap(
-        _build_engine(policy, cluster, n_arrivals, n_functions))))
+        _build_engine(policy, cluster, n_arrivals, n_functions, backend))))
 
 
-def simulate(policy: PolicySpec, cluster: ClusterCfg, wl: Workload
-             ) -> SimOutput:
+def simulate(policy: PolicySpec, cluster: ClusterCfg, wl: Workload,
+             *, backend: str = "auto") -> SimOutput:
     """Run the JAX simulator on a workload; returns host-side results."""
     run = build_simulator(policy, cluster, n_arrivals=wl.n,
-                          n_functions=wl.n_functions)
+                          n_functions=wl.n_functions, backend=backend)
     st = run(jnp.asarray(wl.arrival), jnp.asarray(wl.func),
              jnp.asarray(wl.service), jnp.asarray(wl.u_lb),
              jnp.asarray(wl.func_home))
@@ -445,7 +461,7 @@ def simulate(policy: PolicySpec, cluster: ClusterCfg, wl: Workload
 
 
 def simulate_many(policy: PolicySpec, cluster: ClusterCfg,
-                  workloads) -> BatchSimOutput:
+                  workloads, *, backend: str = "auto") -> BatchSimOutput:
     """Run ``R`` stacked workload replications through one compiled program.
 
     ``workloads`` is a :class:`~repro.core.workload.WorkloadBatch` or a
@@ -457,7 +473,8 @@ def simulate_many(policy: PolicySpec, cluster: ClusterCfg,
     wb = workloads if isinstance(workloads, WorkloadBatch) \
         else stack_workloads(workloads)
     run = build_batch_simulator(policy, cluster, n_arrivals=wb.n,
-                                n_functions=wb.n_functions)
+                                n_functions=wb.n_functions,
+                                backend=backend)
     st = run(jnp.asarray(wb.arrival), jnp.asarray(wb.func),
              jnp.asarray(wb.service), jnp.asarray(wb.u_lb),
              jnp.asarray(wb.func_home))

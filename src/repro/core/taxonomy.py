@@ -4,16 +4,27 @@ A policy is a triple ``T/LB/S``:
 
 * ``T``  — binding time: **E**\\ arly (dispatch on arrival, queue at workers)
            or **L**\\ ate (queue at the controller until a core frees).
-* ``LB`` — load balancing: ``LOC`` (locality/sticky hashing — OpenWhisk
-           default), ``R`` (random), ``LL`` (least-loaded / JSQ) or ``H``
-           (Hermes hybrid: packing at low load, least-loaded at high load,
-           locality-aware tie-breaking).
-* ``S``  — intra-worker scheduling: ``PS`` (processor sharing ≈ CFS),
-           ``FCFS`` or ``SRPT`` (oracle execution times; §3.4).
+* ``LB`` — load balancing: any balancer registered in
+           :mod:`repro.policy` — the paper's ``LOC`` (locality/sticky
+           hashing — OpenWhisk default), ``R`` (random), ``LL``
+           (least-loaded / JSQ) and ``H`` (Hermes hybrid), plus zoo
+           extensions such as ``JSQ2`` (power-of-two-choices) and ``RR``
+           (round-robin) and anything added via
+           :func:`repro.policy.register_balancer`.
+* ``S``  — intra-worker scheduling: any registered scheduler — ``PS``
+           (processor sharing ≈ CFS), ``FCFS`` or ``SRPT`` (oracle
+           execution times; §3.4).
 
-Policies are *data*: the simulator and the serving runtime both take a
-:class:`PolicySpec` and stay branch-free internally, so the entire space can
-be swept by a single jitted program per spec.
+Policies are *data*: a :class:`PolicySpec` is a triple of registry
+*names*; the simulators and the serving runtime resolve it against a
+backend (``np`` / ``jax`` / ``pallas``) through
+:func:`repro.policy.resolve` and stay branch-free internally, so the
+entire space can be swept by a single jitted program per spec.
+
+The :class:`Binding` / :class:`LoadBalance` / :class:`WorkerSched` enums
+remain as typed aliases of the built-in registry names (their values ARE
+the names, and compare/hash equal to plain strings), so pre-registry
+code and tests keep working unchanged.
 """
 from __future__ import annotations
 
@@ -21,80 +32,112 @@ import enum
 from typing import NamedTuple
 
 
-class Binding(enum.IntEnum):
-    EARLY = 0
-    LATE = 1
+class Binding(str, enum.Enum):
+    EARLY = "E"
+    LATE = "L"
 
 
-class LoadBalance(enum.IntEnum):
-    LOCALITY = 0      # OpenWhisk-style sticky hashing (LOC)
-    RANDOM = 1        # uniform over workers with free capacity (R)
-    LEAST_LOADED = 2  # join-shortest-queue by active invocations (LL)
-    HYBRID = 3        # Hermes (H): pack at low load, LL at high load
+class LoadBalance(str, enum.Enum):
+    LOCALITY = "LOC"      # OpenWhisk-style sticky hashing (LOC)
+    RANDOM = "R"          # uniform over workers with free capacity (R)
+    LEAST_LOADED = "LL"   # join-shortest-queue by active invocations (LL)
+    HYBRID = "H"          # Hermes (H): pack at low load, LL at high load
 
 
-class WorkerSched(enum.IntEnum):
-    PS = 0    # processor sharing: each active task gets min(1, C/n) cores
-    FCFS = 1  # first C tasks in arrival order run at rate 1
-    SRPT = 2  # C tasks with smallest remaining work run at rate 1 (oracle)
+class WorkerSched(str, enum.Enum):
+    PS = "PS"      # processor sharing: each active task gets min(1, C/n)
+    FCFS = "FCFS"  # first C tasks in arrival order run at rate 1
+    SRPT = "SRPT"  # C tasks with smallest remaining work run at rate 1
+
+
+def _value(x) -> str:
+    return x.value if isinstance(x, enum.Enum) else str(x)
 
 
 class PolicySpec(NamedTuple):
-    binding: Binding
-    balance: LoadBalance
-    sched: WorkerSched
+    """A policy as a triple of registry names.
+
+    Fields hold either the plain registry name (``"JSQ2"``) or the
+    equivalent built-in enum member (``LoadBalance.LEAST_LOADED``); the
+    two compare and hash equal, so specs built either way are
+    interchangeable (including as engine-cache keys).  Build specs with
+    :func:`parse_policy` for normalized fields.
+    """
+
+    binding: str
+    balance: str
+    sched: str
 
     @property
     def name(self) -> str:
-        t = "E" if self.binding == Binding.EARLY else "L"
-        lb = {
-            LoadBalance.LOCALITY: "LOC",
-            LoadBalance.RANDOM: "R",
-            LoadBalance.LEAST_LOADED: "LL",
-            LoadBalance.HYBRID: "H",
-        }[self.balance]
-        s = {WorkerSched.PS: "PS", WorkerSched.FCFS: "FCFS",
-             WorkerSched.SRPT: "SRPT"}[self.sched]
-        return f"{t}/{lb}/{s}"
+        return f"{_value(self.binding)}/{_value(self.balance)}/" \
+               f"{_value(self.sched)}"
 
     def __str__(self) -> str:  # pragma: no cover - cosmetic
         return self.name
 
 
-_LB = {"LOC": LoadBalance.LOCALITY, "R": LoadBalance.RANDOM,
-       "LL": LoadBalance.LEAST_LOADED, "H": LoadBalance.HYBRID}
-_S = {"PS": WorkerSched.PS, "FCFS": WorkerSched.FCFS,
-      "SRPT": WorkerSched.SRPT}
+# Built-in names → enum members, so parse_policy returns typed fields
+# for the paper's policies (and plain strings for registry extensions).
+_BINDING_ENUM = {b.value: b for b in Binding}
+_LB_ENUM = {lb.value: lb for lb in LoadBalance}
+_S_ENUM = {s.value: s for s in WorkerSched}
 
 
 def parse_policy(text: str) -> PolicySpec:
     """Parse ``"E/LL/PS"``-style notation (paper §3.1) into a PolicySpec.
 
+    Accepts any balancer/scheduler registered in :mod:`repro.policy`
+    (``"E/JSQ2/PS"`` works as soon as ``JSQ2`` is registered); unknown
+    tokens raise a ``ValueError`` naming the offending token and listing
+    the registered alternatives.
+
     For late binding the LB/S components are irrelevant (the simulator,
     like the paper's, runs dispatched tasks uninterruptedly at rate 1);
     ``"L/*/*"`` is accepted as an alias of ``"L/LL/FCFS"``.
     """
-    t, lb, s = text.strip().upper().split("/")
-    binding = Binding.EARLY if t == "E" else Binding.LATE
-    if binding == Binding.LATE and (lb == "*" or s == "*"):
+    from repro.policy import get_balancer, get_binding, get_sched
+
+    parts = text.strip().upper().split("/")
+    if len(parts) != 3:
+        raise ValueError(f"policy {text!r} is not of the form T/LB/S "
+                         f"(e.g. 'E/LL/PS')")
+    t, lb, s = parts
+    binding = get_binding(t)      # named ValueError on unknown token
+    if binding.late and (lb == "*" or s == "*"):
         return PolicySpec(Binding.LATE, LoadBalance.LEAST_LOADED,
                           WorkerSched.FCFS)
-    return PolicySpec(binding, _LB[lb], _S[s])
+    bal = get_balancer(lb)
+    sched = get_sched(s)
+    return PolicySpec(_BINDING_ENUM.get(binding.name, binding.name),
+                      _LB_ENUM.get(bal.name, bal.name),
+                      _S_ENUM.get(sched.name, sched.name))
 
 
 # The policy combinations explored in the paper's Fig. 2 (§3.3) plus the
-# SRPT study (§3.4) and Hermes itself (§4).
-LATE_BINDING = parse_policy("L/*/*")
-E_LL_PS = parse_policy("E/LL/PS")
-E_LL_FCFS = parse_policy("E/LL/FCFS")
-E_LOC_PS = parse_policy("E/LOC/PS")        # vanilla OpenWhisk
-E_LOC_FCFS = parse_policy("E/LOC/FCFS")
-E_R_PS = parse_policy("E/R/PS")
-E_R_FCFS = parse_policy("E/R/FCFS")
-E_LL_SRPT = parse_policy("E/LL/SRPT")
-HERMES = parse_policy("E/H/PS")
+# SRPT study (§3.4) and Hermes itself (§4).  Built directly (not via
+# parse_policy) so importing the taxonomy never touches the registry.
+LATE_BINDING = PolicySpec(Binding.LATE, LoadBalance.LEAST_LOADED,
+                          WorkerSched.FCFS)
+E_LL_PS = PolicySpec(Binding.EARLY, LoadBalance.LEAST_LOADED, WorkerSched.PS)
+E_LL_FCFS = PolicySpec(Binding.EARLY, LoadBalance.LEAST_LOADED,
+                       WorkerSched.FCFS)
+E_LOC_PS = PolicySpec(Binding.EARLY, LoadBalance.LOCALITY,
+                      WorkerSched.PS)           # vanilla OpenWhisk
+E_LOC_FCFS = PolicySpec(Binding.EARLY, LoadBalance.LOCALITY,
+                        WorkerSched.FCFS)
+E_R_PS = PolicySpec(Binding.EARLY, LoadBalance.RANDOM, WorkerSched.PS)
+E_R_FCFS = PolicySpec(Binding.EARLY, LoadBalance.RANDOM, WorkerSched.FCFS)
+E_LL_SRPT = PolicySpec(Binding.EARLY, LoadBalance.LEAST_LOADED,
+                       WorkerSched.SRPT)
+HERMES = PolicySpec(Binding.EARLY, LoadBalance.HYBRID, WorkerSched.PS)
 
 FIG2_POLICIES = (
     LATE_BINDING, E_LL_FCFS, E_LL_PS, E_LOC_FCFS, E_LOC_PS, E_R_FCFS, E_R_PS,
 )
 EVAL_POLICIES = (E_LOC_PS, LATE_BINDING, E_LL_PS, HERMES)  # paper §6 baselines
+
+# Registry extensions swept by benchmarks/fig11_policy_zoo.py.
+E_JSQ2_PS = PolicySpec(Binding.EARLY, "JSQ2", WorkerSched.PS)
+E_RR_PS = PolicySpec(Binding.EARLY, "RR", WorkerSched.PS)
+ZOO_POLICIES = (E_R_PS, E_RR_PS, E_JSQ2_PS, E_LL_PS, HERMES)

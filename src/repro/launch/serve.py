@@ -29,7 +29,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--backend", choices=["platform", "models"],
                     default="platform")
-    ap.add_argument("--policy", default="E/H/PS")
+    ap.add_argument("--policy", default="E/H/PS",
+                    help="T/LB/S triple over the repro.policy registry "
+                         "(e.g. E/H/PS, E/JSQ2/PS, L/*/*)")
     ap.add_argument("--workload", default="ms-trace",
                     help="any repro.core.WORKLOADS name, incl. azure-* "
                          "trace-replay scenarios")
@@ -46,7 +48,9 @@ def main() -> None:
     ap.add_argument("--cold-start", type=float, default=0.5)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--use-kernel", action="store_true",
-                    help="dispatch through the Pallas controller kernel")
+                    help="dispatch through the balancer's batched Pallas "
+                         "controller kernel (policies whose balancer "
+                         "ships one, e.g. E/H/*)")
     ap.add_argument("--requests", type=int, default=12)
     args = ap.parse_args()
 

@@ -1,0 +1,52 @@
+"""``repro.policy`` — composable policy registry, multi-backend dispatch.
+
+The policy space of the paper (§3.1) as an *open registry*: balancers
+(worker selection), worker schedulers (rate assignment) and bindings are
+registered by name, each carrying per-backend implementations (``np`` /
+``jax`` / optionally ``pallas``), and :func:`resolve` turns a policy +
+backend + cluster into ready callables.  The engines
+(:mod:`repro.core.simulator`, :mod:`repro.core.sim_ref`,
+:mod:`repro.serving.engine`) consume resolved callables and never branch
+on policy names — registering a balancer here makes it sweepable
+everywhere (``parse_policy``, ``sweep_policies``, ``policy_explorer``,
+``launch.serve``).
+
+Registering a custom balancer::
+
+    import numpy as np
+    from repro.policy import register_balancer
+
+    def make_np(cores, slots):
+        def select(active, warm_col, func, func_home, u, idx):
+            free = np.nonzero(active < slots)[0]
+            return int(free[0]) if len(free) else -1
+        return select
+
+    def make_jax(cores, slots):
+        import jax.numpy as jnp
+        def select(active, warm_col, func, func_home, u, idx):
+            has_slot = active < slots
+            w = jnp.argmax(has_slot).astype(jnp.int32)
+            return jnp.where(has_slot.any(), w, -1).astype(jnp.int32)
+        return select
+
+    register_balancer("FF", make_np=make_np, make_jax=make_jax,
+                      doc="first free worker")
+    # "E/FF/PS" now works in every sweep, CLI and engine.
+"""
+from .registry import (Balancer, BindingDef, ResolvedPolicy, SchedDef,
+                       balancer_names, binding_names, canonical_name,
+                       default_backend, get_balancer, get_binding,
+                       get_sched, jax_select, np_select,
+                       register_balancer, register_binding, register_sched,
+                       resolve, sched_names, unregister_balancer)
+from .balancers import hermes_score_np
+
+__all__ = [
+    "Balancer", "BindingDef", "ResolvedPolicy", "SchedDef",
+    "balancer_names", "binding_names", "canonical_name",
+    "default_backend", "get_balancer", "get_binding", "get_sched",
+    "hermes_score_np", "jax_select", "np_select", "register_balancer",
+    "register_binding", "register_sched", "resolve", "sched_names",
+    "unregister_balancer",
+]

@@ -1,0 +1,309 @@
+"""Built-in load balancers — numpy / jax (/ Pallas) triplets.
+
+Every backend of a balancer implements the identical deterministic
+contract (see :mod:`repro.policy.registry`) so the numpy oracle, the
+jitted scan engine, and the Pallas controller kernel can be compared
+task-by-task (``tests/test_policies.py`` asserts this for every
+registered balancer).
+
+Paper balancers (§3.1, §4.2): ``LOC`` (OpenWhisk sticky hashing), ``R``
+(uniform over free workers), ``LL`` (join-shortest-queue), ``H`` (Hermes
+hybrid — packing at low load, least-loaded at high load, warm-executor
+tie-breaks; its ``pallas`` backend is the batched controller kernel in
+:mod:`repro.kernels.hermes_select`).
+
+Registry extensions beyond the paper (the policy zoo):
+
+* ``JSQ2`` — power-of-two-choices: sample two workers from the single
+  pre-drawn uniform ``u``, join the shorter queue; falls back to the
+  global least-loaded worker when both candidates are slot-full (so it
+  only rejects when the whole cluster is full, like every balancer
+  here).
+* ``RR`` — round-robin: start at worker ``idx mod W`` (``idx`` is the
+  arrival sequence number) and linear-probe to the first worker with a
+  free slot — LOC's ring walk with a rotating home.
+
+The Hermes lexicographic score (shared by np / jax / Pallas):
+
+* low-load mode (some worker has a free core) — among workers with a
+  free core, prefer class ``3`` = non-empty with a warm executor for the
+  function, ``2`` = non-empty, ``1`` = empty with warm executor, ``0`` =
+  empty; within a class prefer the *most* loaded (packing / fill-up).
+* high-load mode (no free core anywhere) — least-loaded among workers
+  with a free slot, warm executor breaks ties.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .registry import register_balancer
+
+_INT_INF = np.int64(1 << 40)
+
+
+def hermes_score_np(active: np.ndarray, warm_f: np.ndarray, cores: int,
+                    slots: int) -> tuple[np.ndarray, bool]:
+    """Return (score vector to maximize, low_load_mode)."""
+    has_core = active < cores
+    low_load = bool(has_core.any())
+    warm = warm_f > 0
+    if low_load:
+        nonempty = active > 0
+        cls = np.where(nonempty, 2 + warm.astype(np.int64),
+                       warm.astype(np.int64))
+        score = cls * (slots + 1) + active
+        score = np.where(has_core, score, -_INT_INF)
+    else:
+        has_slot = active < slots
+        key = active.astype(np.int64) * 2 - warm.astype(np.int64)
+        score = np.where(has_slot, -key, -_INT_INF)  # maximize = least loaded
+    return score, low_load
+
+
+def _two_choices(u: float, n_workers: int) -> tuple[int, int]:
+    """Two candidate indices derived from one uniform draw.
+
+    Splits ``u`` into integer part (first candidate) and the fractional
+    remainder rescaled (second candidate) — float64 on every backend, so
+    numpy and jax truncate identically.
+    """
+    x = u * n_workers
+    a = min(int(x), n_workers - 1)
+    frac = x - np.floor(x)
+    b = min(int(frac * n_workers), n_workers - 1)
+    return a, b
+
+
+# --------------------------------------------------------------------------
+# numpy backends
+# --------------------------------------------------------------------------
+
+def _loc_np(cores: int, slots: int):
+    def select(active, warm_col, func, func_home, u, idx):
+        has_slot = active < slots
+        if not has_slot.any():
+            return -1
+        W = active.shape[0]
+        home = int(func_home[func])
+        ring = (home + np.arange(W)) % W
+        return int(ring[int(np.argmax(has_slot[ring]))])
+    return select
+
+
+def _random_np(cores: int, slots: int):
+    def select(active, warm_col, func, func_home, u, idx):
+        has_slot = active < slots
+        if not has_slot.any():
+            return -1
+        free_idx = np.nonzero(has_slot)[0]
+        return int(free_idx[min(int(u * len(free_idx)), len(free_idx) - 1)])
+    return select
+
+
+def _ll_np(cores: int, slots: int):
+    def select(active, warm_col, func, func_home, u, idx):
+        has_slot = active < slots
+        if not has_slot.any():
+            return -1
+        key = np.where(has_slot, active, _INT_INF)
+        return int(np.argmin(key))
+    return select
+
+
+def _hybrid_np(cores: int, slots: int):
+    def select(active, warm_col, func, func_home, u, idx):
+        if not (active < slots).any():
+            return -1
+        score, _ = hermes_score_np(active, warm_col, cores, slots)
+        return int(np.argmax(score))
+    return select
+
+
+def _jsq2_np(cores: int, slots: int):
+    def select(active, warm_col, func, func_home, u, idx):
+        has_slot = active < slots
+        if not has_slot.any():
+            return -1
+        W = active.shape[0]
+        a, b = _two_choices(float(u), W)
+        key = np.where(has_slot, active, _INT_INF)
+        w = b if key[b] < key[a] else a
+        if not has_slot[w]:            # both sampled workers full
+            w = int(np.argmin(key))
+        return int(w)
+    return select
+
+
+def _rr_np(cores: int, slots: int):
+    def select(active, warm_col, func, func_home, u, idx):
+        has_slot = active < slots
+        if not has_slot.any():
+            return -1
+        W = active.shape[0]
+        ring = (int(idx) % W + np.arange(W)) % W
+        return int(ring[int(np.argmax(has_slot[ring]))])
+    return select
+
+
+# --------------------------------------------------------------------------
+# jax backends — jax imported lazily so numpy-only users avoid jax init
+# --------------------------------------------------------------------------
+
+def _guarded(jnp):
+    def guard(w, has_slot):
+        return jnp.where(has_slot.any(), w, -1).astype(jnp.int32)
+    return guard
+
+
+def _loc_jax(cores: int, slots: int):
+    import jax.numpy as jnp
+    guard = _guarded(jnp)
+
+    def select(active, warm_col, func, func_home, u, idx):
+        W = active.shape[0]
+        has_slot = active < slots
+        home = func_home[func]
+        ring = (home + jnp.arange(W, dtype=jnp.int32)) % W
+        return guard(ring[jnp.argmax(has_slot[ring])], has_slot)
+    return select
+
+
+def _random_jax(cores: int, slots: int):
+    import jax.numpy as jnp
+    guard = _guarded(jnp)
+
+    def select(active, warm_col, func, func_home, u, idx):
+        has_slot = active < slots
+        k = has_slot.sum()
+        target = jnp.minimum((u * k).astype(jnp.int32), k - 1)
+        # index of the (target+1)-th free worker
+        csum = jnp.cumsum(has_slot.astype(jnp.int32)) - 1
+        hit = has_slot & (csum == target)
+        return guard(jnp.argmax(hit), has_slot)
+    return select
+
+
+def _ll_jax(cores: int, slots: int):
+    import jax.numpy as jnp
+    guard = _guarded(jnp)
+    BIG = jnp.int32(1 << 30)
+
+    def select(active, warm_col, func, func_home, u, idx):
+        has_slot = active < slots
+        key = jnp.where(has_slot, active, BIG)
+        return guard(jnp.argmin(key), has_slot)
+    return select
+
+
+def _hybrid_jax(cores: int, slots: int):
+    import jax.numpy as jnp
+    guard = _guarded(jnp)
+    BIG = jnp.int32(1 << 30)
+
+    def select(active, warm_col, func, func_home, u, idx):
+        active = active.astype(jnp.int32)
+        has_slot = active < slots
+        has_core = active < cores
+        warm = (warm_col > 0).astype(jnp.int32)
+        nonempty = (active > 0).astype(jnp.int32)
+        cls = jnp.where(nonempty > 0, 2 + warm, warm)
+        lo_score = jnp.where(has_core, cls * (slots + 1) + active, -BIG)
+        hi_key = active * 2 - warm
+        hi_score = jnp.where(has_slot, -hi_key, -BIG)
+        score = jnp.where(has_core.any(), lo_score, hi_score)
+        return guard(jnp.argmax(score), has_slot)
+    return select
+
+
+def _jsq2_jax(cores: int, slots: int):
+    import jax
+    import jax.numpy as jnp
+    # the two-choices derivation truncates u*W, so it matches the f64
+    # numpy oracle only under x64.  The engines enable x64 process-wide
+    # on import (repro.core.simulator); enforce the same here so a
+    # standalone jax_select("JSQ2", ...) keeps the cross-backend
+    # contract (model code in this repo pins explicit dtypes — safe).
+    jax.config.update("jax_enable_x64", True)
+    guard = _guarded(jnp)
+    BIG = jnp.int32(1 << 30)
+
+    def select(active, warm_col, func, func_home, u, idx):
+        W = active.shape[0]
+        has_slot = active < slots
+        x = jnp.asarray(u, jnp.float64) * W
+        a = jnp.minimum(x.astype(jnp.int32), W - 1)
+        frac = x - jnp.floor(x)
+        b = jnp.minimum((frac * W).astype(jnp.int32), W - 1)
+        key = jnp.where(has_slot, active.astype(jnp.int32), BIG)
+        w = jnp.where(key[b] < key[a], b, a)
+        w = jnp.where(has_slot[w], w, jnp.argmin(key).astype(jnp.int32))
+        return guard(w, has_slot)
+    return select
+
+
+def _rr_jax(cores: int, slots: int):
+    import jax.numpy as jnp
+    guard = _guarded(jnp)
+
+    def select(active, warm_col, func, func_home, u, idx):
+        W = active.shape[0]
+        has_slot = active < slots
+        home = jnp.asarray(idx, jnp.int32) % W
+        ring = (home + jnp.arange(W, dtype=jnp.int32)) % W
+        return guard(ring[jnp.argmax(has_slot[ring])], has_slot)
+    return select
+
+
+# --------------------------------------------------------------------------
+# Pallas backend (H) — the batched controller kernel as a per-arrival
+# select inside the scan engine, and as the batched dispatch for the
+# serving controller
+# --------------------------------------------------------------------------
+
+def _hybrid_pallas(cores: int, slots: int):
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.hermes_select.kernel import hermes_select_batch
+    interpret = jax.default_backend() != "tpu"
+
+    def select(active, warm_col, func, func_home, u, idx):
+        # N=1 batch: the sequential contract is preserved exactly — the
+        # engine applies completions between arrivals, so each decision
+        # sees fresh cluster state.  Under ``vmap`` (simulate_many) the
+        # replication axis becomes the kernel's batch dimension: one
+        # kernel dispatch serves every stacked replication per arrival.
+        out, _ = hermes_select_batch(
+            active.astype(jnp.int32), warm_col.astype(jnp.int32)[None, :],
+            cores=cores, slots=slots, interpret=interpret)
+        return out[0]
+    return select
+
+
+def _hybrid_batch(cores: int, slots: int):
+    from repro.kernels.hermes_select.ops import hermes_select
+
+    def batch(active, warm, funcs):
+        return hermes_select(active, warm, funcs, cores=cores, slots=slots)
+    return batch
+
+
+register_balancer(
+    "LOC", doc="locality/sticky hashing (OpenWhisk default)",
+    make_np=_loc_np, make_jax=_loc_jax)
+register_balancer(
+    "R", doc="uniform over workers with a free slot",
+    make_np=_random_np, make_jax=_random_jax)
+register_balancer(
+    "LL", doc="least-loaded / join-shortest-queue",
+    make_np=_ll_np, make_jax=_ll_jax)
+register_balancer(
+    "H", doc="Hermes hybrid: pack at low load, LL at high load",
+    make_np=_hybrid_np, make_jax=_hybrid_jax,
+    make_pallas=_hybrid_pallas, make_batch=_hybrid_batch)
+register_balancer(
+    "JSQ2", doc="power-of-two-choices: join the shorter of two sampled "
+                "queues",
+    make_np=_jsq2_np, make_jax=_jsq2_jax)
+register_balancer(
+    "RR", doc="round-robin ring probe from worker (idx mod W)",
+    make_np=_rr_np, make_jax=_rr_jax)

@@ -1,0 +1,405 @@
+"""Composable policy registry with multi-backend selection dispatch.
+
+The paper's contribution is a *policy space* (§3.1): binding × load
+balancing × worker scheduling.  This module makes that space an open
+registry instead of a closed enum triple.  Each axis is a small protocol
+carrying per-backend implementations:
+
+* :class:`Balancer` — worker selection.  Backends: ``np`` (the numpy
+  oracle used by :mod:`repro.core.sim_ref` and the serving platform),
+  ``jax`` (jit/vmap-able, used inside the scan engine), and optionally
+  ``pallas`` (the batched TPU controller kernel, e.g.
+  :mod:`repro.kernels.hermes_select` for ``H``).
+* :class:`SchedDef` — intra-worker rate assignment (PS / FCFS / SRPT).
+  Backends: ``np`` (per-worker task lists) and ``jax`` (the ``[W, S]``
+  slot matrix).
+* :class:`BindingDef` — binding time.  Structural (the engines own the
+  controller queue), so the registry only carries the ``late`` flag.
+
+All selection backends implement ONE deterministic contract::
+
+    select(active, warm_col, func, func_home, u, idx) -> worker | -1
+
+where ``active`` is the per-worker active-invocation count ``[W]``,
+``warm_col`` is ``warm[:, func]`` (idle warm executors of the arrival's
+function per worker), ``func`` the function id, ``func_home`` the
+locality hash table ``[F]``, ``u`` the pre-drawn per-arrival uniform,
+and ``idx`` the arrival sequence number (round-robin state lives in the
+workload, not the balancer — every backend stays pure).  ``-1`` means
+every worker's slots are exhausted (the caller counts a rejection).
+
+:func:`resolve` is the single entry point: it turns a
+:class:`~repro.core.taxonomy.PolicySpec` (or ``"E/LL/PS"`` text) plus a
+backend name plus a :class:`~repro.core.cluster.ClusterCfg` into ready
+callables; the engines consume those and never branch on policy names.
+:func:`register_balancer` / :func:`register_sched` are the extension
+hooks — a new balancer becomes sweepable by every engine, benchmark and
+CLI flag without touching any of them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import threading
+from functools import lru_cache
+from typing import Any, Callable, Optional
+
+_BACKENDS = ("np", "jax", "pallas")
+
+
+def canonical_name(x) -> str:
+    """Registry key of an axis value: enum member → value, else str."""
+    if isinstance(x, enum.Enum):
+        return str(x.value)
+    return str(x)
+
+
+@dataclasses.dataclass(frozen=True)
+class Balancer:
+    """A registered load balancer (worker selection strategy).
+
+    ``make_np`` / ``make_jax`` / ``make_pallas`` are factories
+    ``(cores, slots) -> select`` baking the cluster shape into a closure
+    (the jax/pallas ones must return jit-traceable functions).
+    ``make_batch`` optionally builds the batched controller dispatch
+    ``(active [W], warm [W, F], funcs [N]) -> (choices [N], active_out)``
+    — the one-HBM-read-per-arrival-batch form used by the serving
+    platform and ``tab_overhead``.
+    """
+
+    name: str
+    doc: str = ""
+    make_np: Optional[Callable[[int, int], Callable]] = None
+    make_jax: Optional[Callable[[int, int], Callable]] = None
+    make_pallas: Optional[Callable[[int, int], Callable]] = None
+    make_batch: Optional[Callable[[int, int], Callable]] = None
+
+    def backends(self) -> tuple[str, ...]:
+        return tuple(b for b, fn in zip(
+            _BACKENDS, (self.make_np, self.make_jax, self.make_pallas))
+            if fn is not None)
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedDef:
+    """A registered intra-worker scheduler (rate assignment).
+
+    ``make_np(cores) -> rates(remaining, seqs) -> list[float]`` assigns a
+    core rate to each task of ONE worker (lists are parallel; ``seqs``
+    are arrival sequence numbers, the FCFS key).  ``make_jax(cores) ->
+    rates(task_idx, remaining) -> [W, S]`` does the same over the whole
+    slot matrix (``task_idx < 0`` marks empty slots).
+    """
+
+    name: str
+    doc: str = ""
+    make_np: Optional[Callable[[int], Callable]] = None
+    make_jax: Optional[Callable[[int], Callable]] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class BindingDef:
+    name: str
+    late: bool
+    doc: str = ""
+
+
+BALANCERS: dict[str, Balancer] = {}
+SCHEDS: dict[str, SchedDef] = {}
+BINDINGS: dict[str, BindingDef] = {}
+
+_builtin_lock = threading.Lock()
+_builtins_loaded = False
+
+
+def _load_builtins() -> None:
+    """Idempotently register the built-in axes (import side effect)."""
+    global _builtins_loaded
+    if _builtins_loaded:
+        return
+    with _builtin_lock:
+        if _builtins_loaded:
+            return
+        if "E" not in BINDINGS:
+            register_binding("E", late=False,
+                             doc="early: dispatch on arrival, queue at "
+                                 "workers")
+            register_binding("L", late=True,
+                             doc="late: queue at the controller until a "
+                                 "core frees")
+        from . import balancers, scheds  # noqa: F401  (register on import)
+        _builtins_loaded = True
+
+
+# --------------------------------------------------------------------------
+# Registration hooks
+# --------------------------------------------------------------------------
+
+def register_balancer(name: str, *, make_np=None, make_jax=None,
+                      make_pallas=None, make_batch=None, doc: str = "",
+                      overwrite: bool = False) -> Balancer:
+    """Register a load balancer under ``name`` (upper-cased).
+
+    At least one of ``make_np`` / ``make_jax`` must be given; a balancer
+    with both is sweepable by every engine in the repo.  Returns the
+    :class:`Balancer` record.
+    """
+    name = name.strip().upper()
+    if "/" in name or "*" in name or not name:
+        raise ValueError(f"invalid balancer name {name!r}")
+    if make_np is None and make_jax is None:
+        raise ValueError(f"balancer {name!r} needs an np or jax backend")
+    if not overwrite and name in BALANCERS:
+        raise ValueError(f"balancer {name!r} already registered "
+                         f"(pass overwrite=True to replace)")
+    bal = Balancer(name=name, doc=doc, make_np=make_np, make_jax=make_jax,
+                   make_pallas=make_pallas, make_batch=make_batch)
+    BALANCERS[name] = bal
+    _factory_cache_clear()
+    return bal
+
+
+def unregister_balancer(name: str) -> None:
+    BALANCERS.pop(canonical_name(name).upper(), None)
+    _factory_cache_clear()
+
+
+def register_sched(name: str, *, make_np=None, make_jax=None, doc: str = "",
+                   overwrite: bool = False) -> SchedDef:
+    name = name.strip().upper()
+    if "/" in name or "*" in name or not name:
+        raise ValueError(f"invalid sched name {name!r}")
+    if not overwrite and name in SCHEDS:
+        raise ValueError(f"sched {name!r} already registered "
+                         f"(pass overwrite=True to replace)")
+    sd = SchedDef(name=name, doc=doc, make_np=make_np, make_jax=make_jax)
+    SCHEDS[name] = sd
+    _factory_cache_clear()
+    return sd
+
+
+def register_binding(name: str, *, late: bool, doc: str = "",
+                     overwrite: bool = False) -> BindingDef:
+    name = name.strip().upper()
+    if not overwrite and name in BINDINGS:
+        raise ValueError(f"binding {name!r} already registered")
+    bd = BindingDef(name=name, late=late, doc=doc)
+    BINDINGS[name] = bd
+    return bd
+
+
+def balancer_names() -> tuple[str, ...]:
+    _load_builtins()
+    return tuple(BALANCERS)
+
+
+def sched_names() -> tuple[str, ...]:
+    _load_builtins()
+    return tuple(SCHEDS)
+
+
+def binding_names() -> tuple[str, ...]:
+    _load_builtins()
+    return tuple(BINDINGS)
+
+
+def get_balancer(name) -> Balancer:
+    _load_builtins()
+    key = canonical_name(name).upper()
+    try:
+        return BALANCERS[key]
+    except KeyError:
+        raise ValueError(
+            f"unknown load balancer {key!r}; registered balancers: "
+            f"{', '.join(sorted(BALANCERS))}") from None
+
+
+def get_sched(name) -> SchedDef:
+    _load_builtins()
+    key = canonical_name(name).upper()
+    try:
+        return SCHEDS[key]
+    except KeyError:
+        raise ValueError(
+            f"unknown worker scheduler {key!r}; registered schedulers: "
+            f"{', '.join(sorted(SCHEDS))}") from None
+
+
+def get_binding(name) -> BindingDef:
+    _load_builtins()
+    key = canonical_name(name).upper()
+    try:
+        return BINDINGS[key]
+    except KeyError:
+        raise ValueError(
+            f"unknown binding {key!r}; registered bindings: "
+            f"{', '.join(sorted(BINDINGS))}") from None
+
+
+# --------------------------------------------------------------------------
+# Cached factory instantiation (one closure per (axis, cores, slots))
+# --------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def _np_select(name: str, cores: int, slots: int):
+    bal = get_balancer(name)
+    if bal.make_np is None:
+        raise ValueError(f"balancer {name!r} has no np backend "
+                         f"(has: {bal.backends()})")
+    return bal.make_np(cores, slots)
+
+
+@lru_cache(maxsize=None)
+def _jax_select(name: str, cores: int, slots: int):
+    bal = get_balancer(name)
+    if bal.make_jax is None:
+        raise ValueError(f"balancer {name!r} has no jax backend "
+                         f"(has: {bal.backends()})")
+    return bal.make_jax(cores, slots)
+
+
+@lru_cache(maxsize=None)
+def _pallas_select(name: str, cores: int, slots: int):
+    bal = get_balancer(name)
+    if bal.make_pallas is not None:
+        return bal.make_pallas(cores, slots)
+    # graceful degradation: balancers without a kernel run their jax
+    # implementation under the pallas backend so whole-space sweeps with
+    # backend="pallas" stay valid
+    return _jax_select(name, cores, slots)
+
+
+@lru_cache(maxsize=None)
+def _np_rates(name: str, cores: int):
+    sd = get_sched(name)
+    if sd.make_np is None:
+        raise ValueError(f"sched {name!r} has no np backend")
+    return sd.make_np(cores)
+
+
+@lru_cache(maxsize=None)
+def _jax_rates(name: str, cores: int):
+    sd = get_sched(name)
+    if sd.make_jax is None:
+        raise ValueError(f"sched {name!r} has no jax backend")
+    return sd.make_jax(cores)
+
+
+def _factory_cache_clear() -> None:
+    for c in (_np_select, _jax_select, _pallas_select, _np_rates,
+              _jax_rates):
+        c.cache_clear()
+    # compiled simulator engines capture resolved closures, so a
+    # (re-)registration must also drop them — the engine cache keys on
+    # policy *names*, which an overwrite silently rebinds.  getattr
+    # guards the builtin registrations that fire while the simulator
+    # module itself is still mid-import (no engines exist yet then).
+    import sys
+    sim = sys.modules.get("repro.core.simulator")
+    clear = getattr(sim, "clear_engine_cache", None)
+    if clear is not None:
+        clear()
+
+
+def np_select(balancer, cores: int, slots: int):
+    """The numpy-backend select closure for ``balancer`` (cached)."""
+    return _np_select(canonical_name(balancer).upper(), int(cores),
+                      int(slots))
+
+
+def jax_select(balancer, cores: int, slots: int):
+    """The jax-backend select closure for ``balancer`` (cached)."""
+    return _jax_select(canonical_name(balancer).upper(), int(cores),
+                       int(slots))
+
+
+# --------------------------------------------------------------------------
+# resolve — the single policy → callables entry point
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ResolvedPolicy:
+    """A policy resolved against one backend and one cluster shape.
+
+    ``select``/``rates`` are ``None`` for late binding (the controller
+    queue is structural — engines place on ``argmin(active)`` and run
+    dispatched tasks at rate 1, exactly the paper's model).
+    ``batch_select`` is the batched controller dispatch when the
+    balancer ships one (today: the ``H`` Pallas kernel), else ``None``.
+    """
+
+    spec: Any                      # PolicySpec
+    backend: str                   # "np" | "jax" | "pallas"
+    late: bool
+    select: Optional[Callable]
+    rates: Optional[Callable]
+    batch_select: Optional[Callable]
+    balancer: Optional[Balancer]
+    sched: Optional[SchedDef]
+
+
+def default_backend(policy) -> str:
+    """The backend ``resolve(..., backend="auto")`` picks for ``policy``.
+
+    Early-binding policies whose balancer ships a Pallas kernel dispatch
+    through it (closing the ROADMAP kernel-batch-path item for ``H``) —
+    in the batched engine the replication axis amortizes the kernel
+    dispatch; the single-workload engine uses the same backend so the
+    two stay bit-identical by construction.  Everything else uses the
+    pure-jax path.
+    """
+    _load_builtins()
+    spec = _as_spec(policy)
+    if get_binding(spec.binding).late:
+        return "jax"
+    bal = get_balancer(spec.balance)
+    return "pallas" if bal.make_pallas is not None else "jax"
+
+
+def _as_spec(policy):
+    if isinstance(policy, str):
+        from ..core.taxonomy import parse_policy
+        return parse_policy(policy)
+    return policy
+
+
+def resolve(policy, backend: str = "np", cluster=None) -> ResolvedPolicy:
+    """Resolve ``policy`` into backend callables for ``cluster``.
+
+    ``policy`` is a :class:`~repro.core.taxonomy.PolicySpec` or
+    ``"T/LB/S"`` text; ``backend`` is ``"np"``, ``"jax"``, ``"pallas"``
+    or ``"auto"`` (see :func:`default_backend`); ``cluster`` supplies
+    ``cores``/``slots``.  Raises a named ``ValueError`` for unknown axis
+    names, listing what IS registered.
+    """
+    _load_builtins()
+    spec = _as_spec(policy)
+    if cluster is None:
+        raise ValueError("resolve() needs a cluster (cores/slots source)")
+    C, S = int(cluster.cores), int(cluster.slots)
+    binding = get_binding(spec.binding)
+    if backend == "auto":
+        backend = default_backend(spec)
+    if backend not in _BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; choose from "
+                         f"{_BACKENDS} or 'auto'")
+    if binding.late:
+        return ResolvedPolicy(spec=spec, backend=backend, late=True,
+                              select=None, rates=None, batch_select=None,
+                              balancer=None, sched=None)
+    bal = get_balancer(spec.balance)
+    sched = get_sched(spec.sched)
+    bname = bal.name
+    if backend == "np":
+        select = _np_select(bname, C, S)
+        rates = _np_rates(sched.name, C)
+    elif backend == "jax":
+        select = _jax_select(bname, C, S)
+        rates = _jax_rates(sched.name, C)
+    else:  # pallas
+        select = _pallas_select(bname, C, S)
+        rates = _jax_rates(sched.name, C)
+    batch = bal.make_batch(C, S) if bal.make_batch is not None else None
+    return ResolvedPolicy(spec=spec, backend=backend, late=binding.late,
+                          select=select, rates=rates, batch_select=batch,
+                          balancer=bal, sched=sched)

@@ -1,0 +1,110 @@
+"""Built-in intra-worker schedulers — rate assignment in numpy and jax.
+
+Shared semantics (paper §3.1/§3.4; both simulators implement these
+through this registry):
+
+* ``PS``   — processor sharing: every active task gets ``min(1, C/n)``
+  cores (the CFS analogue).
+* ``FCFS`` — the ``C`` earliest-arrived tasks run at rate 1, the rest 0
+  (arrival sequence number is the key).
+* ``SRPT`` — the ``C`` tasks with least remaining work run at rate 1
+  (oracle execution times; ties broken by arrival sequence in numpy and
+  by slot order in jax — a measure-zero event for continuous service
+  distributions).
+
+The numpy backend operates on one worker's parallel task lists; the jax
+backend on the engine's ``[W, S]`` slot matrix (``task_idx < 0`` marks
+empty slots).
+"""
+from __future__ import annotations
+
+from .registry import register_sched
+
+
+# --------------------------------------------------------------------------
+# numpy backends: (cores) -> rates(remaining, seqs) -> list[float]
+# --------------------------------------------------------------------------
+
+def _ps_np(cores: int):
+    def rates(remaining, seqs):
+        n = len(remaining)
+        r = min(1.0, cores / n) if n else 0.0
+        return [r] * n
+    return rates
+
+
+def _fcfs_np(cores: int):
+    def rates(remaining, seqs):
+        n = len(seqs)
+        order = sorted(range(n), key=lambda i: seqs[i])
+        out = [0.0] * n
+        for k, i in enumerate(order):
+            out[i] = 1.0 if k < cores else 0.0
+        return out
+    return rates
+
+
+def _srpt_np(cores: int):
+    def rates(remaining, seqs):
+        n = len(seqs)
+        order = sorted(range(n), key=lambda i: (remaining[i], seqs[i]))
+        out = [0.0] * n
+        for k, i in enumerate(order):
+            out[i] = 1.0 if k < cores else 0.0
+        return out
+    return rates
+
+
+# --------------------------------------------------------------------------
+# jax backends: (cores) -> rates(task_idx [W,S] i32, remaining [W,S] f64)
+# --------------------------------------------------------------------------
+
+def _rank_rows(jnp, key):
+    """Per-row rank of each element (0 = smallest). Stable."""
+    order = jnp.argsort(key, axis=1)
+    ranks = jnp.zeros_like(order)
+    rows = jnp.arange(key.shape[0])[:, None]
+    return ranks.at[rows, order].set(
+        jnp.broadcast_to(jnp.arange(key.shape[1]), key.shape))
+
+
+def _ps_jax(cores: int):
+    import jax.numpy as jnp
+
+    def rates(task_idx, remaining):
+        active = task_idx >= 0
+        n = active.sum(axis=1, keepdims=True)
+        r = jnp.minimum(1.0, cores / jnp.maximum(n, 1))
+        return jnp.where(active, r, 0.0)
+    return rates
+
+
+def _fcfs_jax(cores: int):
+    import jax.numpy as jnp
+
+    def rates(task_idx, remaining):
+        active = task_idx >= 0
+        key = jnp.where(active, task_idx, jnp.int32(1 << 30))
+        rank = _rank_rows(jnp, key)
+        return jnp.where(active & (rank < cores), 1.0, 0.0)
+    return rates
+
+
+def _srpt_jax(cores: int):
+    import jax.numpy as jnp
+
+    def rates(task_idx, remaining):
+        active = task_idx >= 0
+        key = jnp.where(active, remaining, jnp.inf)
+        rank = _rank_rows(jnp, key)
+        return jnp.where(active & (rank < cores), 1.0, 0.0)
+    return rates
+
+
+register_sched("PS", doc="processor sharing: min(1, C/n) cores per task",
+               make_np=_ps_np, make_jax=_ps_jax)
+register_sched("FCFS", doc="first C tasks in arrival order run at rate 1",
+               make_np=_fcfs_np, make_jax=_fcfs_jax)
+register_sched("SRPT", doc="C tasks with least remaining work run at "
+                           "rate 1 (oracle)",
+               make_np=_srpt_np, make_jax=_srpt_jax)

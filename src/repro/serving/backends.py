@@ -19,9 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.policies import select_worker_np
-from repro.core.taxonomy import LoadBalance
 from repro.models.transformer import build_model
+from repro.policy import np_select
 
 
 @dataclasses.dataclass
@@ -129,12 +128,15 @@ class HermesFrontend:
     """Controller for in-process workers using the Hermes policy."""
 
     def __init__(self, registry: ModelRegistry, n_workers: int = 2,
-                 cores: int = 2, max_len: int = 128):
+                 cores: int = 2, max_len: int = 128,
+                 balancer: str = "H"):
         self.workers = [InProcessWorker(registry, max_len)
                         for _ in range(n_workers)]
         self.cores = cores
         self.slots = 8 * cores
         self.fn_ids = {n: i for i, n in enumerate(registry.names())}
+        self._select = np_select(balancer, self.cores, self.slots)
+        self._n_dispatched = 0
 
     def dispatch(self, inv: Invocation) -> Invocation:
         W = len(self.workers)
@@ -144,10 +146,10 @@ class HermesFrontend:
         for wi, w in enumerate(self.workers):
             for name in w.warm:
                 warm[wi, self.fn_ids[name]] = 1
-        w = select_worker_np(LoadBalance.HYBRID, active, warm,
-                             self.fn_ids[inv.func],
-                             np.zeros(F, np.int32), 0.0,
-                             self.cores, self.slots)
+        fid = self.fn_ids[inv.func]
+        w = self._select(active, warm[:, fid], fid,
+                         np.zeros(F, np.int32), 0.0, self._n_dispatched)
+        self._n_dispatched += 1
         if w < 0:
             raise RuntimeError("cluster full")
         inv.worker = int(w)

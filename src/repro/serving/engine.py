@@ -11,9 +11,11 @@ re-dispatched (early binding's correction mechanism at scale).
 
 The engine is an event-driven virtual-time loop (the platform layer the
 paper implements in Scala); the *policy* math is shared with the
-simulator (``repro.core.policies``), and the controller can execute its
-dispatch decisions through the batched Pallas kernel
-(``repro.kernels.hermes_select``) — one cluster-state read per arrival
+simulator through the registry (:func:`repro.policy.resolve` with the
+``np`` backend — any registered balancer/scheduler serves unchanged),
+and the controller can execute its dispatch decisions through the
+batched Pallas kernel when the balancer ships one (``H`` →
+``repro.kernels.hermes_select``) — one cluster-state read per arrival
 batch, the TPU-native form of the §6.6 hot loop.
 """
 from __future__ import annotations
@@ -24,10 +26,9 @@ import math
 import numpy as np
 
 from repro.core.cluster import ClusterCfg
-from repro.core.policies import select_worker_np
-from repro.core.taxonomy import (Binding, LoadBalance, PolicySpec,
-                                 WorkerSched, HERMES)
+from repro.core.taxonomy import PolicySpec, HERMES
 from repro.core.workload import Workload
+from repro.policy import resolve
 
 EPS = 1e-9
 
@@ -90,18 +91,26 @@ class ServingCluster:
         self.cfg = cfg
         self.policy = policy
         self.use_kernel = use_kernel
+        # numpy-backend resolution drives the virtual-time loop; the
+        # balancer's batched kernel (if registered) serves the
+        # ``use_kernel`` controller path
+        self._res = resolve(policy, backend="np", cluster=cfg.cluster)
         if use_kernel:
-            from repro.kernels.hermes_select.ops import hermes_select
-            self._kernel = hermes_select
+            if self._res.batch_select is None:
+                raise ValueError(
+                    f"policy {self._res.spec.name} has no batched kernel "
+                    f"dispatch (balancer lacks a make_batch backend)")
+            self._kernel = self._res.batch_select
 
     # ------------------------------------------------------------------
     def run(self, wl: Workload) -> ServeResult:
-        cfg, policy = self.cfg, self.policy
+        cfg = self.cfg
         cl = cfg.cluster
         W, C, S = cl.n_workers, cl.cores, cl.slots
         F = wl.n_functions
         N = wl.n
-        late = policy.binding == Binding.LATE
+        res = self._res
+        late = res.late
 
         tasks: list[list[_Task]] = [[] for _ in range(W)]
         warm = np.zeros((W, F), dtype=np.int64)
@@ -116,22 +125,19 @@ class ServingCluster:
 
         def set_rates(w: int) -> None:
             ts = tasks[w]
-            n = len(ts)
-            if n == 0:
+            if not ts:
                 return
             spd = cfg.speed(w)
             if late:
                 for t in ts:
                     t.rate = spd
                 return
-            if policy.sched == WorkerSched.PS:
-                r = min(1.0, C / n) * spd
-                for t in ts:
-                    t.rate = r
-            else:  # FCFS
-                order = sorted(range(n), key=lambda i: ts[i].seq)
-                for k, i in enumerate(order):
-                    ts[i].rate = spd if k < C else 0.0
+            # registry rate assignment, scaled by the worker's speed
+            # factor (straggler model)
+            rs = res.rates([t.remaining for t in ts],
+                           [t.seq for t in ts])
+            for t, r in zip(ts, rs):
+                t.rate = r * spd
 
         def place(w: int, arr_idx: int, work: float | None = None,
                   migration: bool = False) -> None:
@@ -247,18 +253,17 @@ class ServingCluster:
                 else:
                     queue.append(i)
                 continue
-            if self.use_kernel and policy == HERMES:
+            f = int(wl.func[i])
+            if self.use_kernel:
                 import jax.numpy as jnp
                 ws, _ = self._kernel(
                     jnp.asarray(active, jnp.int32),
                     jnp.asarray(warm, jnp.int32),
-                    jnp.asarray([int(wl.func[i])], jnp.int32),
-                    cores=C, slots=S)
+                    jnp.asarray([f], jnp.int32))
                 w = int(ws[0])
             else:
-                w = select_worker_np(policy.balance, active, warm,
-                                     int(wl.func[i]), wl.func_home,
-                                     float(wl.u_lb[i]), C, S)
+                w = res.select(active, warm[:, f], f, wl.func_home,
+                               float(wl.u_lb[i]), i)
             if w < 0:
                 rejected[i] = True
             else:

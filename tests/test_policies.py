@@ -1,17 +1,28 @@
-"""Unit + property tests for the scheduling taxonomy and policies.
+"""Unit + property tests for the policy registry, taxonomy and balancers.
 
 ``hypothesis`` is optional: when installed, the property tests fuzz the
 policy contracts; without it, seeded random examples exercise the same
 deterministic assertions (the checkers below are shared by both lanes).
+The contract lanes run over EVERY registered balancer (built-ins plus
+zoo extensions), and the cross-backend parity test pins ``np`` ≡ ``jax``
+≡ ``pallas`` (interpret mode) selection task-by-task.
 """
 import numpy as np
 import pytest
+
+# x64 keeps the jax-side uniform draws bit-identical to the numpy oracle
+# (JSQ2 derives its two candidates from float64 truncation); the engines
+# enable it process-wide anyway on first simulator import.
+from repro.core import simulator as _simulator  # noqa: F401
 
 from repro.core.policies import (hermes_score_np, make_select_worker_jax,
                                  select_worker_np)
 from repro.core.taxonomy import (Binding, LoadBalance, PolicySpec,
                                  WorkerSched, parse_policy, HERMES,
-                                 FIG2_POLICIES)
+                                 FIG2_POLICIES, ZOO_POLICIES)
+from repro.policy import (balancer_names, default_backend, get_balancer,
+                          jax_select, np_select, register_balancer,
+                          resolve, sched_names, unregister_balancer)
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -22,11 +33,41 @@ except ModuleNotFoundError:
 
 def test_parse_roundtrip():
     for text in ("E/LL/PS", "E/LOC/FCFS", "E/R/PS", "E/H/PS",
-                 "E/LL/SRPT"):
+                 "E/LL/SRPT", "E/JSQ2/PS", "E/RR/FCFS"):
         assert parse_policy(text).name == text
     assert parse_policy("L/*/*").binding == Binding.LATE
     assert HERMES.name == "E/H/PS"
     assert len(FIG2_POLICIES) == 7
+    assert {p.name for p in ZOO_POLICIES} >= {"E/JSQ2/PS", "E/RR/PS"}
+    # enum members and plain registry names are interchangeable
+    assert PolicySpec("E", "LL", "PS") == PolicySpec(
+        Binding.EARLY, LoadBalance.LEAST_LOADED, WorkerSched.PS)
+    assert hash(PolicySpec("E", "LL", "PS")) == hash(parse_policy("E/LL/PS"))
+
+
+def test_parse_policy_named_errors():
+    with pytest.raises(ValueError, match="unknown load balancer 'XX'"):
+        parse_policy("E/XX/PS")
+    with pytest.raises(ValueError, match="registered balancers.*LL"):
+        parse_policy("E/XX/PS")
+    with pytest.raises(ValueError, match="unknown worker scheduler 'YY'"):
+        parse_policy("E/LL/YY")
+    with pytest.raises(ValueError, match="registered schedulers"):
+        parse_policy("E/LL/YY")
+    with pytest.raises(ValueError, match="unknown binding 'X'"):
+        parse_policy("X/LL/PS")
+    with pytest.raises(ValueError, match="T/LB/S"):
+        parse_policy("E/LL")
+
+
+def test_registry_names():
+    assert set(balancer_names()) >= {"LOC", "R", "LL", "H", "JSQ2", "RR"}
+    assert set(sched_names()) == {"PS", "FCFS", "SRPT"}
+    assert get_balancer("H").backends() == ("np", "jax", "pallas")
+    assert get_balancer("JSQ2").backends() == ("np", "jax")
+    # auto-backend: kernel-carrying balancers dispatch through pallas
+    assert default_backend(HERMES) == "pallas"
+    assert default_backend(parse_policy("E/LL/PS")) == "jax"
 
 
 # --------------------------------------------------------------------------
@@ -66,9 +107,10 @@ def _check_select_np_valid(active, cores, slots, seed):
     func = int(rng.integers(0, F))
     homes = rng.integers(0, W, F).astype(np.int32)
     u = float(rng.uniform())
-    for bal in LoadBalance:
+    idx = int(rng.integers(0, 1000))
+    for bal in balancer_names():
         w = select_worker_np(bal, active, warm, func, homes, u, cores,
-                             slots)
+                             slots, idx=idx)
         if (active < slots).any():
             assert 0 <= w < W and active[w] < slots, (bal, w, active)
         else:
@@ -85,13 +127,15 @@ def _check_jax_matches_np(active, cores, slots, seed):
     func = int(rng.integers(0, F))
     homes = rng.integers(0, W, F).astype(np.int32)
     u = float(rng.uniform())
-    for bal in LoadBalance:
+    idx = int(rng.integers(0, 1000))
+    for bal in balancer_names():
         w_np = select_worker_np(bal, active, warm, func, homes, u, cores,
-                                slots)
-        sel = make_select_worker_jax(bal, cores, slots)
+                                slots, idx=idx)
+        sel = jax_select(bal, cores, slots)
         w_j = int(sel(jnp.asarray(active), jnp.asarray(warm[:, func]),
-                      jnp.int32(func), jnp.asarray(homes), jnp.float64(u)))
-        assert w_np == w_j, (bal.name, active.tolist(), warm[:, func])
+                      jnp.int32(func), jnp.asarray(homes), jnp.float64(u),
+                      jnp.int32(idx)))
+        assert w_np == w_j, (bal, active.tolist(), warm[:, func])
 
 
 def _random_state(seed):
@@ -131,6 +175,255 @@ def test_select_worker_np_always_valid_seeded(seed):
 def test_select_worker_jax_matches_np_seeded(seed):
     active, _, cores, slots = _random_state(seed)
     _check_jax_matches_np(active, cores, slots, seed + 2000)
+
+
+# --------------------------------------------------------------------------
+# Cross-backend parity: np ≡ jax ≡ pallas(interpret), task by task, for
+# every registered balancer over randomized (active, warm) states
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", balancer_names())
+@pytest.mark.parametrize("seed", range(6))
+def test_backend_parity_task_by_task(name, seed):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(10_000 + seed)
+    W = int(rng.integers(2, 17))
+    cores = int(rng.integers(1, 9))
+    slots = cores * int(rng.integers(1, 9))
+    F = 5
+    homes = rng.integers(0, W, F).astype(np.int32)
+    bal = get_balancer(name)
+    sel_np = np_select(name, cores, slots)
+    sel_jax = jax_select(name, cores, slots)
+    sel_pl = bal.make_pallas(cores, slots) if bal.make_pallas else None
+    for t in range(12):
+        # include slot-full workers (and, via the last round, a full
+        # cluster) so the -1 contract is exercised on every backend
+        hi = slots if t < 11 else 0
+        active = (np.full(W, slots) if t == 11
+                  else rng.integers(0, hi + 1, W)).astype(np.int64)
+        warm_col = rng.integers(0, 3, W).astype(np.int64)
+        func = int(rng.integers(0, F))
+        u = float(rng.uniform())
+        idx = int(rng.integers(0, 1000))
+        w_np = sel_np(active, warm_col, func, homes, u, idx)
+        args_j = (jnp.asarray(active.astype(np.int32)),
+                  jnp.asarray(warm_col.astype(np.int32)),
+                  jnp.int32(func), jnp.asarray(homes), jnp.float64(u),
+                  jnp.int32(idx))
+        w_j = int(sel_jax(*args_j))
+        assert w_np == w_j, (name, "jax", active.tolist(), warm_col)
+        if sel_pl is not None:
+            w_p = int(sel_pl(*args_j))
+            assert w_np == w_p, (name, "pallas", active.tolist(), warm_col)
+
+
+# --------------------------------------------------------------------------
+# Registry regression: the registry-resolved engines reproduce the
+# pre-registry engines bit-for-bit (golden values recorded from the
+# enum-dispatch implementation at the commit introducing repro.policy)
+# --------------------------------------------------------------------------
+
+_GOLDEN_CLUSTER = dict(n_workers=4, cores=3, capacity_factor=2)
+# policy name -> (nansum(response), n_cold, n_rejected, server_time,
+#                 core_time) for synth_workload(load=0.9, n=250,
+#                 n_functions=5, hot_fraction=0.8, seed=0)
+GOLDEN_SIM = {
+    "L/LL/FCFS": (2234.855441484522, 31, 0, 1724.5313381516,
+                  2228.6312810489976),
+    "E/LL/FCFS": (2257.1284711882117, 35, 0, 1724.5313381515998,
+                  2228.631281048997),
+    "E/LL/PS": (2236.4790573536984, 33, 0, 1726.3205356448295,
+                2228.6312810489976),
+    "E/LOC/FCFS": (2881.1012849325516, 42, 0, 1211.390510887456,
+                   2228.6312810489976),
+    "E/LOC/PS": (2864.6831589262856, 36, 0, 1364.284602142182,
+                 2228.6312810489985),
+    "E/R/FCFS": (2513.290535167693, 63, 0, 1341.53576011165,
+                 2228.6312810489985),
+    "E/R/PS": (2317.8045230972084, 60, 0, 1351.7626209397845,
+               2228.6312810489985),
+    "E/H/PS": (2233.1967927570226, 37, 0, 1447.405502466479,
+               2228.631281048997),
+    "E/LL/SRPT": (2230.670600599903, 32, 0, 1725.1277972202631,
+                  2228.631281048997),
+}
+GOLDEN_REF = {
+    "L/LL/FCFS": (2234.855441484522, 31, 0, 1724.5313381516,
+                  2228.631281048997),
+    "E/LL/FCFS": (2257.1284711882117, 35, 0, 1724.5313381515998,
+                  2228.6312810489967),
+    "E/LL/PS": (2236.4790573536984, 33, 0, 1726.3205356448295,
+                2228.631281048997),
+    "E/LOC/FCFS": (2881.1012849325516, 42, 0, 1211.390510887456,
+                   2228.631281048998),
+    "E/LOC/PS": (2864.6831589262856, 36, 0, 1364.284602142182,
+                 2228.6312810489985),
+    "E/R/FCFS": (2513.290535167693, 63, 0, 1341.53576011165,
+                 2228.6312810489985),
+    "E/R/PS": (2317.8045230972084, 60, 0, 1351.7626209397845,
+               2228.6312810489985),
+    "E/H/PS": (2233.1967927570226, 37, 0, 1447.405502466479,
+               2228.6312810489967),
+    "E/LL/SRPT": (2230.670600599903, 32, 0, 1725.1277972202631,
+                  2228.6312810489967),
+}
+
+
+def _golden_workload():
+    from repro.core import ClusterCfg, synth_workload
+    cl = ClusterCfg(**_GOLDEN_CLUSTER)
+    return cl, synth_workload(cl, 0.9, 250, n_functions=5,
+                              hot_fraction=0.8, seed=0)
+
+
+@pytest.mark.parametrize("pname", sorted(GOLDEN_SIM))
+def test_golden_metrics_simulate(pname):
+    from repro.core.simulator import simulate, simulate_many
+    cl, wl = _golden_workload()
+    pol = parse_policy(pname)
+    out = simulate(pol, cl, wl)
+    exp = GOLDEN_SIM[pname]
+    np.testing.assert_allclose(np.nansum(out.response), exp[0], rtol=1e-12)
+    assert int(out.cold.sum()) == exp[1]
+    assert int(out.rejected.sum()) == exp[2]
+    np.testing.assert_allclose(out.server_time, exp[3], rtol=1e-12)
+    np.testing.assert_allclose(out.core_time, exp[4], rtol=1e-12)
+    # batched engine: same numbers through simulate_many (for HERMES this
+    # exercises the Pallas-kernel selection backend)
+    batch = simulate_many(pol, cl, [wl])
+    np.testing.assert_array_equal(
+        np.nan_to_num(batch.response[0], nan=-1.0),
+        np.nan_to_num(out.response, nan=-1.0))
+
+
+@pytest.mark.parametrize("pname", sorted(GOLDEN_REF))
+def test_golden_metrics_simulate_ref(pname):
+    from repro.core.sim_ref import simulate_ref
+    cl, wl = _golden_workload()
+    out = simulate_ref(parse_policy(pname), cl, wl)
+    exp = GOLDEN_REF[pname]
+    np.testing.assert_allclose(np.nansum(out.response), exp[0], rtol=1e-12)
+    assert int(out.cold.sum()) == exp[1]
+    assert int(out.rejected.sum()) == exp[2]
+    np.testing.assert_allclose(out.server_time, exp[3], rtol=1e-12)
+    np.testing.assert_allclose(out.core_time, exp[4], rtol=1e-12)
+
+
+# --------------------------------------------------------------------------
+# Registry extensibility + kernel dispatch
+# --------------------------------------------------------------------------
+
+def test_register_custom_balancer_end_to_end():
+    """A balancer registered in <20 lines sweeps through both engines."""
+    from repro.core import ClusterCfg, synth_workload
+    from repro.core.sim_ref import simulate_ref
+    from repro.core.simulator import simulate
+
+    def make_np(cores, slots):
+        def select(active, warm_col, func, func_home, u, idx):
+            free = np.nonzero(active < slots)[0]
+            return int(free[0]) if len(free) else -1
+        return select
+
+    def make_jax(cores, slots):
+        import jax.numpy as jnp
+
+        def select(active, warm_col, func, func_home, u, idx):
+            has_slot = active < slots
+            w = jnp.argmax(has_slot).astype(jnp.int32)
+            return jnp.where(has_slot.any(), w, -1).astype(jnp.int32)
+        return select
+
+    register_balancer("FF", make_np=make_np, make_jax=make_jax,
+                      doc="first free worker")
+    try:
+        pol = parse_policy("E/FF/PS")
+        assert pol.name == "E/FF/PS"
+        cl = ClusterCfg(n_workers=3, cores=2, capacity_factor=2)
+        wl = synth_workload(cl, 0.7, 150, n_functions=4, seed=1)
+        out = simulate(pol, cl, wl)
+        ref = simulate_ref(pol, cl, wl)
+        np.testing.assert_allclose(
+            np.nan_to_num(out.response, nan=-1.0),
+            np.nan_to_num(ref.response, nan=-1.0), atol=1e-6)
+        np.testing.assert_array_equal(out.worker, ref.worker)
+        with pytest.raises(ValueError, match="already registered"):
+            register_balancer("FF", make_np=make_np)
+
+        # overwriting a registration must invalidate compiled engines
+        # (they capture the resolved select closure by name)
+        def make_np2(cores, slots):
+            def select(active, warm_col, func, func_home, u, idx):
+                free = np.nonzero(active < slots)[0]
+                return int(free[-1]) if len(free) else -1
+            return select
+
+        def make_jax2(cores, slots):
+            import jax.numpy as jnp
+
+            def select(active, warm_col, func, func_home, u, idx):
+                has_slot = active < slots
+                W = active.shape[0]
+                w = (W - 1 - jnp.argmax(has_slot[::-1])).astype(jnp.int32)
+                return jnp.where(has_slot.any(), w, -1).astype(jnp.int32)
+            return select
+
+        register_balancer("FF", make_np=make_np2, make_jax=make_jax2,
+                          overwrite=True, doc="last free worker")
+        out2 = simulate(pol, cl, wl)
+        ref2 = simulate_ref(pol, cl, wl)
+        np.testing.assert_array_equal(out2.worker, ref2.worker)
+        assert not np.array_equal(out2.worker, out.worker)
+    finally:
+        unregister_balancer("FF")
+    with pytest.raises(ValueError, match="unknown load balancer 'FF'"):
+        parse_policy("E/FF/PS")
+
+
+def test_simulate_many_hermes_routes_through_pallas_kernel(monkeypatch):
+    """The batched engine's Hermes selection dispatches through
+    ``repro.kernels.hermes_select`` (the ROADMAP kernel-batch-path item)."""
+    import repro.kernels.hermes_select.kernel as hk
+    from repro.core import ClusterCfg, synth_workload
+    from repro.core import simulator as sim
+    from repro.policy.registry import _factory_cache_clear
+
+    calls = []
+    orig = hk.hermes_select_batch
+
+    def spy(*args, **kwargs):
+        calls.append(kwargs.get("interpret"))
+        return orig(*args, **kwargs)
+
+    monkeypatch.setattr(hk, "hermes_select_batch", spy)
+    _factory_cache_clear()
+    sim.clear_engine_cache()
+    try:
+        cl = ClusterCfg(n_workers=3, cores=2, capacity_factor=2)
+        wl = synth_workload(cl, 0.6, 40, n_functions=3, seed=0)
+        out = sim.simulate_many(HERMES, cl, [wl, wl])
+        assert calls, "Hermes selection did not reach the Pallas kernel"
+        np.testing.assert_array_equal(out.response[0], out.response[1])
+        # the jax backend stays available and agrees
+        out_jax = sim.simulate_many(HERMES, cl, [wl, wl], backend="jax")
+        np.testing.assert_array_equal(out.response, out_jax.response)
+    finally:
+        # drop closures that captured the spy
+        _factory_cache_clear()
+        sim.clear_engine_cache()
+
+
+def test_make_select_worker_jax_compat_signature():
+    """Pre-registry 5-argument closure API keeps working (enum or name)."""
+    import jax.numpy as jnp
+    sel = make_select_worker_jax(LoadBalance.HYBRID, 2, 4)
+    active = jnp.asarray(np.array([1, 3, 0], np.int32))
+    warm = jnp.asarray(np.array([0, 1, 0], np.int32))
+    homes = jnp.asarray(np.zeros(2, np.int32))
+    w = int(sel(active, warm, jnp.int32(0), homes, jnp.float64(0.3)))
+    assert w == np.argmax(hermes_score_np(
+        np.array([1, 3, 0]), np.array([0, 1, 0]), 2, 4)[0])
 
 
 # --------------------------------------------------------------------------
