@@ -10,6 +10,15 @@ sweeps (e.g. fig7/8/9 re-deriving fig6 rows) re-use compiled programs.
 ``reps > 1`` replicates every load point over consecutive seeds inside
 the same batch; rows then carry ``*_mean`` / ``*_ci95`` columns from
 :class:`~repro.core.metrics.BatchSummary`.
+
+Two registry-driven helpers close the loop with :mod:`repro.policy`:
+:func:`registry_policies` expands a figure's base policy list with
+``E/<B>/<sched>`` for *every* registered balancer (so new zoo entries are
+swept by every figure without touching it), and
+:func:`mixed_workload_batch` / :func:`sweep_policies_mixed` stack
+heterogeneous ``WORKLOADS`` entries — synthetic §6.1 generators *and*
+``azure-*`` trace replays — onto one ``simulate_many`` batch via
+:func:`repro.trace.replay.resample_workloads`.
 """
 from __future__ import annotations
 
@@ -25,14 +34,38 @@ from repro.core.sim_ref import simulate_ref
 OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments")
 
 
+def registry_policies(base=(), sched="PS"):
+    """``base`` plus ``E/<B>/<sched>`` for every registered balancer.
+
+    Policies already present in ``base`` (by name) are not duplicated,
+    so figure sweeps keep their historical row set and grow a row per
+    *new* registry entry — ``register_balancer`` is enough to appear in
+    fig2/4/6/11.
+    """
+    from repro.core.taxonomy import Binding, PolicySpec
+    from repro.policy import balancer_names
+    pols = list(base)
+    seen = {p.name for p in pols}
+    for bname in balancer_names():
+        cand = PolicySpec(Binding.EARLY, bname, sched)
+        if cand.name not in seen:
+            pols.append(cand)
+            seen.add(cand.name)
+    return tuple(pols)
+
+
 def sweep_policies(policies, cluster: ClusterCfg, loads, n_arrivals,
                    workload_fn, *, seed: int = 0, engine: str = "jax",
-                   warmup_frac: float = 0.1, reps: int = 1):
+                   warmup_frac: float = 0.1, reps: int = 1,
+                   backend: str = "auto"):
     """Run every (policy × load [× rep]) cell; returns list of dict rows.
 
     ``engine="jax"`` batches all ``len(loads) × reps`` replications per
     policy into one ``simulate_many`` call; ``engine="ref"`` falls back to
-    the per-cell numpy oracle (slow, for cross-checks).
+    the per-cell numpy oracle (slow, for cross-checks).  ``backend``
+    picks the selection backend of the batched engine (results are
+    backend-invariant by the parity contract; ``"jax"`` skips
+    interpret-mode kernel dispatch on huge clusters).
     """
     if engine != "jax":
         if reps > 1:
@@ -56,7 +89,7 @@ def sweep_policies(policies, cluster: ClusterCfg, loads, n_arrivals,
     rows = []
     for pol in policies:
         t0 = time.time()
-        out = simulate_many(pol, cluster, wb)
+        out = simulate_many(pol, cluster, wb, backend=backend)
         cell_s = (time.time() - t0) / len(loads)
         for li, load in enumerate(loads):
             sl = slice(li * reps, (li + 1) * reps)
@@ -75,6 +108,49 @@ def sweep_policies(policies, cluster: ClusterCfg, loads, n_arrivals,
     for i, load in enumerate(loads):
         load_order.setdefault(load, i)
     rows.sort(key=lambda r: load_order[r["load"]])
+    return rows
+
+
+def mixed_workload_batch(cluster: ClusterCfg, names, load, n_arrivals,
+                         *, seed: int = 0):
+    """Stack heterogeneous ``WORKLOADS`` entries into ONE batch.
+
+    ``names`` mixes synthetic §6.1 generators with ``azure-*`` trace
+    replays; the workloads disagree on function count (synthetics use
+    50, replays carry per-trace ``F``), so they are harmonized through
+    :func:`repro.trace.replay.resample_workloads` (truncate to the
+    shortest ``N``, widen to the largest ``F``) and returned as a
+    ``simulate_many``-ready :class:`~repro.core.workload.WorkloadBatch`
+    whose replication ``r`` is ``names[r]`` — the ROADMAP
+    mixed-batches item.
+    """
+    from repro.core import WORKLOADS
+    from repro.trace.replay import resample_workloads
+    wls = [WORKLOADS[name](cluster, load, n_arrivals, seed)
+           for name in names]
+    return resample_workloads(wls)
+
+
+def sweep_policies_mixed(policies, cluster: ClusterCfg, names, load,
+                         n_arrivals, *, seed: int = 0,
+                         warmup_frac: float = 0.1, backend: str = "auto"):
+    """Sweep policies over a mixed synthetic+replay batch.
+
+    One ``simulate_many`` call per policy covers every named workload;
+    rows carry a ``workload`` column (one row per (policy, name)).
+    """
+    wb = mixed_workload_batch(cluster, names, load, n_arrivals, seed=seed)
+    rows = []
+    for pol in policies:
+        t0 = time.time()
+        out = simulate_many(pol, cluster, wb, backend=backend)
+        cell_s = (time.time() - t0) / len(names)
+        for r, name in enumerate(names):
+            s = summarize_sim(out.rep(r), wb.rep(r),
+                              warmup_frac=warmup_frac)
+            rows.append({"policy": pol.name, "workload": name,
+                         "load": load, "wall_s": round(cell_s, 3),
+                         **s.row()})
     return rows
 
 

@@ -1,36 +1,62 @@
 """Fig. 11 (extension) — the policy zoo: registry balancers swept together.
 
 The registry (:mod:`repro.policy`) makes the paper's policy space open:
-this sweep runs the §3 taxonomy balancers alongside the two registered
-extensions — ``JSQ2`` (power-of-two-choices sampling) and ``RR``
-(round-robin) — under the Azure-shaped workload on the paper's small
-cluster, all on the batched ``simulate_many`` engine.
+this sweep runs ``E/<B>/PS`` for *every* registered balancer — the §3
+taxonomy entries plus the zoo: ``JSQ2`` (power-of-two-choices), ``RR``
+(round-robin), and the carried-state pair ``HIKU`` (pull-based
+ready-ring, Akbari & Hauswirth 2025) and ``DD`` (data-driven
+per-function estimates, Przybylski et al. 2021) — all on the batched
+``simulate_many`` engine.  Three lanes:
 
-Expected shape of the result (classic balls-into-bins / the paper's
-Lesson 2): sampling *two* queues closes most of the gap between blind
-random/round-robin placement and full least-loaded information —
-``E/JSQ2/PS`` tracks ``E/LL/PS`` closely on p99 slowdown while ``E/R/PS``
-and ``E/RR/PS`` degrade at high load; Hermes adds its warm-executor /
-packing advantages on top.
+* ``ms-trace`` — the Azure-shaped workload on the paper's small
+  cluster, the original fig11 lane.  Expected shape (classic
+  balls-into-bins / Lesson 2): two samples (``JSQ2``) close most of the
+  random-vs-least-loaded gap; blind rotation (``RR``) does not;
+  ``HIKU`` tracks ``LL`` (popping an advertised idle worker ≈ joining a
+  zero-length queue) at a fraction of the state reads.
+* ``bimodal-exec`` — per-function bimodal durations, the regime where
+  ``DD``'s learned estimates carry real information: expected-load
+  dispatch beats size-blind random placement.
+* ``mixed`` — synthetic + ``azure-*`` trace replays stacked into ONE
+  ``simulate_many`` batch (:func:`benchmarks.common.mixed_workload_batch`
+  — the ROADMAP mixed-batches item): every zoo balancer is exercised
+  under stationary and non-stationary arrivals in a single compiled
+  program per policy.
+
+Every row carries a ``workload`` column naming its lane.
 """
 from __future__ import annotations
 
-from repro.core import PAPER_SMALL, ZOO_POLICIES, ms_trace
+from repro.core import PAPER_SMALL, ZOO_POLICIES, bimodal_exec, ms_trace
 
-from .common import sweep_policies, write_csv
+from .common import (registry_policies, sweep_policies,
+                     sweep_policies_mixed, write_csv)
+
+# The mixed lane: stationary synthetic + non-stationary trace replays
+# in one batch (resampled onto a shared (N, F) shape).
+MIXED_WORKLOADS = ("ms-trace", "azure-diurnal", "azure-bursty")
+MIXED_LOAD = 0.7
 
 
 def run(quick: bool = True):
     loads = [0.5, 0.7, 0.8, 0.9] if quick else \
         [0.3, 0.4, 0.5, 0.6, 0.7, 0.75, 0.8, 0.85, 0.9, 0.95]
     n = 6000 if quick else 20000
-    rows = sweep_policies(ZOO_POLICIES, PAPER_SMALL, loads, n, ms_trace)
+    pols = registry_policies(ZOO_POLICIES)
+    rows = [dict(r, workload="ms-trace")
+            for r in sweep_policies(pols, PAPER_SMALL, loads, n, ms_trace)]
+    rows += [dict(r, workload="bimodal-exec")
+             for r in sweep_policies(pols, PAPER_SMALL, loads, n,
+                                     bimodal_exec)]
+    rows += sweep_policies_mixed(pols, PAPER_SMALL, MIXED_WORKLOADS,
+                                 MIXED_LOAD, n // 2)
     write_csv("fig11_policy_zoo.csv", rows)
     return rows
 
 
 if __name__ == "__main__":
     for r in run():
-        print(f"{r['policy']:10s} load={r['load']:.2f} "
-              f"slow50={r['slow_p50']:8.2f} slow99={r['slow_p99']:10.1f} "
+        print(f"{r['workload']:14s} {r['policy']:10s} "
+              f"load={r['load']:.2f} slow50={r['slow_p50']:8.2f} "
+              f"slow99={r['slow_p99']:10.1f} "
               f"cold%={100 * r['cold_frac']:5.1f}")

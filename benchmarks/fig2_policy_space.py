@@ -5,6 +5,11 @@ Expected reproduction: all policies look similar on p99 *latency*; on
 p99 *slowdown* Late Binding and E/*/FCFS blow up early (head-of-line
 blocking), PS-based policies survive, E/LL/PS is best (Lessons 1-2).
 
+Beyond the paper's seven combinations, the sweep covers ``E/<B>/PS``
+for *every* balancer in the policy registry (H, JSQ2, RR, the
+carried-state HIKU and DD, and anything registered later), so zoo
+entries ride through the original figure without code changes.
+
 All load points run as one stacked batch per policy through the
 ``simulate_many`` engine (see :mod:`benchmarks.common`).
 """
@@ -12,7 +17,7 @@ from __future__ import annotations
 
 from repro.core import FIG2_POLICIES, PAPER_SMALL, ms_trace
 
-from .common import sweep_policies, write_csv
+from .common import registry_policies, sweep_policies, write_csv
 
 
 def run(quick: bool = True):
@@ -20,7 +25,8 @@ def run(quick: bool = True):
         [0.1, 0.2, 0.3, 0.4, 0.5, 0.55, 0.6, 0.65, 0.7, 0.75, 0.8,
          0.85, 0.9, 0.95]
     n = 8000 if quick else 20000
-    rows = sweep_policies(FIG2_POLICIES, PAPER_SMALL, loads, n, ms_trace)
+    rows = sweep_policies(registry_policies(FIG2_POLICIES), PAPER_SMALL,
+                          loads, n, ms_trace)
     write_csv("fig2_policy_space.csv", rows)
     return rows
 

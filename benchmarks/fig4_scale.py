@@ -4,15 +4,23 @@ Expected reproduction (§3.5): E/R/PS and E/LOC/PS explode near 0.6 load;
 Late Binding improves with scale (less head-of-line blocking) but
 E/LL/PS still wins at very high load (>0.96).
 
+The sweep additionally covers ``E/<B>/PS`` for every registry balancer
+— W=100 is where the zoo gets interesting (HIKU's ready-ring almost
+always holds an idle worker; JSQ2's two samples approximate full LL
+information at 1/50th the state reads).
+
 All load points run as one stacked batch per policy through the
-``simulate_many`` engine (see :mod:`benchmarks.common`).
+``simulate_many`` engine.  Selection uses the pure-jax backend: at
+W=100 the interpret-mode Pallas path (the `auto` pick for Hermes off-
+TPU) only adds compile time, and results are backend-invariant by the
+parity contract.
 """
 from __future__ import annotations
 
 from repro.core import (E_LL_PS, E_LOC_PS, E_R_PS, LATE_BINDING,
                         PAPER_LARGE, ms_trace)
 
-from .common import sweep_policies, write_csv
+from .common import registry_policies, sweep_policies, write_csv
 
 POLICIES = (E_R_PS, E_LOC_PS, LATE_BINDING, E_LL_PS)
 
@@ -21,7 +29,8 @@ def run(quick: bool = True):
     loads = [0.5, 0.7, 0.9, 0.97] if quick else \
         [0.3, 0.5, 0.6, 0.7, 0.8, 0.9, 0.94, 0.96, 0.98]
     n = 12000 if quick else 40000
-    rows = sweep_policies(POLICIES, PAPER_LARGE, loads, n, ms_trace)
+    rows = sweep_policies(registry_policies(POLICIES), PAPER_LARGE, loads,
+                          n, ms_trace, backend="jax")
     write_csv("fig4_scale.csv", rows)
     return rows
 

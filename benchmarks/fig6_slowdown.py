@@ -28,6 +28,26 @@ from .common import write_csv
 
 SCHEDULERS = {"vanilla-ow": E_LOC_PS, "late-binding": LATE_BINDING,
               "least-loaded": E_LL_PS, "hermes": HERMES}
+
+
+def schedulers() -> dict:
+    """The §6 baselines plus one ``zoo-<b>`` entry per registry balancer.
+
+    Balancers already covered by a named baseline (LOC/LL/H under PS)
+    are not duplicated; anything registered later joins the sweep
+    automatically (expansion delegated to
+    :func:`benchmarks.common.registry_policies` so every figure shares
+    one expansion rule).
+    """
+    from repro.policy import canonical_name
+
+    from .common import registry_policies
+    out = dict(SCHEDULERS)
+    covered = {p.name for p in out.values()}
+    for pol in registry_policies(tuple(out.values())):
+        if pol.name not in covered:
+            out[f"zoo-{canonical_name(pol.balance).lower()}"] = pol
+    return out
 FIG6_WORKLOADS = ("ms-trace", "ms-representative", "single-function",
                   "multi-balanced")
 # Controller decision latency added to every completed response (§6.6,
@@ -36,17 +56,21 @@ CTRL_LATENCY_S = 0.0005
 
 
 def run(quick: bool = True, *, workloads=FIG6_WORKLOADS,
-        cold_start_s: float = 0.5):
+        cold_start_s: float = 0.5, zoo: bool = True):
+    """``zoo=False`` restricts to the §6 baselines — fig7/8/9 derive
+    from this sweep and only gate baselines, so they skip re-running
+    the registry zoo."""
     loads = [0.3, 0.5, 0.7, 0.85] if quick else \
         [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9]
     n = 4000 if quick else 15000
     cl = PAPER_TESTBED._replace(cold_start_penalty=cold_start_s)
+    scheds = schedulers() if zoo else dict(SCHEDULERS)
     rows = []
     for wname in workloads:
         wfn = WORKLOADS[wname]
         wb = stack_workloads(
             [wfn(PAPER_TESTBED, load, n, seed=1) for load in loads])
-        for sname, pol in SCHEDULERS.items():
+        for sname, pol in scheds.items():
             t0 = time.time()
             out = simulate_many(pol, cl, wb)
             cell_s = (time.time() - t0) / len(loads)

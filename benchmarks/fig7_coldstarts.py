@@ -14,7 +14,7 @@ from .fig6_slowdown import run as run_fig6
 
 
 def run(quick: bool = True):
-    rows = run_fig6(quick)
+    rows = run_fig6(quick, zoo=False)
     cold = [{"workload": r["workload"], "scheduler": r["scheduler"],
              "load": r["load"], "rps": r["rps"],
              "cold_pct": 100.0 * r["cold_frac"]} for r in rows]

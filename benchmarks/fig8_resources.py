@@ -11,7 +11,7 @@ from .fig6_slowdown import run as run_fig6
 
 
 def run(quick: bool = True):
-    rows = run_fig6(quick, workloads=("ms-trace",))
+    rows = run_fig6(quick, workloads=("ms-trace",), zoo=False)
     res = [{"scheduler": r["scheduler"], "load": r["load"],
             "mean_servers": r["mean_servers"], "mean_cores": r["mean_cores"],
             "slow_p99": r["slow_p99"]} for r in rows]

@@ -14,7 +14,7 @@ from .fig6_slowdown import run as run_fig6
 
 
 def run(quick: bool = True):
-    rows = run_fig6(quick, workloads=("homogeneous-exec",))
+    rows = run_fig6(quick, workloads=("homogeneous-exec",), zoo=False)
     write_csv("fig9_robustness.csv", rows)
     return rows
 

@@ -1,9 +1,12 @@
 """Benchmark harness entry point: one module per paper table/figure.
 
-``python -m benchmarks.run [--full]`` executes every benchmark in quick
-mode (sized for a single-core CPU container), writes one CSV per figure
-under ``experiments/``, prints a compact summary, and checks the
-paper's headline claims (printed as REPRO-CHECK lines).
+``python -m benchmarks.run [--quick|--full]`` executes every benchmark
+(``--quick``, the default, is sized for a single-core CPU container and
+is the tier the ``bench-smoke`` CI job gates on), writes one CSV per
+figure under ``experiments/``, prints a compact summary, checks the
+paper's headline claims (printed as REPRO-CHECK lines) and emits a
+machine-readable ``experiments/BENCH_report.json`` (uploaded as a CI
+artifact) with every check verdict and all figure rows.
 
 Every figure sweep runs on the batched engine: per policy, all load
 points are stacked into one ``simulate_many`` call, and the process-wide
@@ -13,12 +16,17 @@ engine is traced + compiled exactly once across the whole harness.
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
+
+_CHECKS: list = []
 
 
 def _claim(name: str, ok: bool, detail: str) -> bool:
     print(f"REPRO-CHECK {'PASS' if ok else 'FAIL'}  {name}: {detail}")
+    _CHECKS.append({"name": name, "ok": bool(ok), "detail": detail})
     return ok
 
 
@@ -30,8 +38,12 @@ def _by(rows, **kv):
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--full", action="store_true",
-                    help="paper-scale sweeps (hours); default quick")
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--quick", action="store_true",
+                      help="tiny-N/R smoke sweeps (the default; this is "
+                           "what CI's bench-smoke job runs)")
+    mode.add_argument("--full", action="store_true",
+                      help="paper-scale sweeps (hours)")
     args = ap.parse_args()
     quick = not args.full
     t_start = time.time()
@@ -57,6 +69,15 @@ def main() -> None:
     lat_ratio = ps["lat_p99"] / max(late["lat_p99"], 1e-9)
     ok &= _claim("Fig2a: p99 *latency* hides the gap (ratio ~1)",
                  0.2 < lat_ratio < 5.0, f"lat99 ratio={lat_ratio:.2f}")
+    lo2 = [r for r in f2 if r["load"] == 0.3]
+    hiku2 = next(r for r in lo2 if r["policy"] == "E/HIKU/PS")
+    ll2 = next(r for r in lo2 if r["policy"] == "E/LL/PS")
+    ok &= _claim("Zoo: pull-based HIKU ≤ LL mean slowdown at low load "
+                 "(popping an advertised idle worker ≈ joining an empty "
+                 "queue)",
+                 hiku2["slow_mean"] <= ll2["slow_mean"] * 1.05,
+                 f"HIKU={hiku2['slow_mean']:.3f} vs "
+                 f"LL={ll2['slow_mean']:.3f} @0.3")
 
     print("== fig3: SRPT vs PS ==", flush=True)
     f3 = fig3_srpt.run(quick)
@@ -168,14 +189,15 @@ def main() -> None:
           f"least-loaded p99={lb['slow_p99_mean']:.1f}"
           f"±{lb['slow_p99_ci95']:.1f}")
 
-    print("== fig11: policy zoo (registry balancers: JSQ2, RR) ==",
+    print("== fig11: policy zoo (full registry: JSQ2, RR, HIKU, DD) ==",
           flush=True)
     f11 = fig11_policy_zoo.run(quick)
-    hi11 = [r for r in f11 if r["load"] == 0.9]
+    hi11 = _by(f11, workload="ms-trace", load=0.9)
     jsq2 = next(r for r in hi11 if r["policy"] == "E/JSQ2/PS")
     r11 = next(r for r in hi11 if r["policy"] == "E/R/PS")
     ll11 = next(r for r in hi11 if r["policy"] == "E/LL/PS")
     rr11 = next(r for r in hi11 if r["policy"] == "E/RR/PS")
+    hiku11 = next(r for r in hi11 if r["policy"] == "E/HIKU/PS")
     ok &= _claim("Zoo: two choices beat one — E/JSQ2/PS p99 < E/R/PS @0.9",
                  jsq2["slow_p99"] < r11["slow_p99"],
                  f"JSQ2={jsq2['slow_p99']:.1f} vs R={r11['slow_p99']:.1f}")
@@ -183,7 +205,26 @@ def main() -> None:
                  jsq2["slow_p99"] <= 1.5 * ll11["slow_p99"],
                  f"JSQ2={jsq2['slow_p99']:.1f} vs LL={ll11['slow_p99']:.1f}")
     print(f"  [zoo observation @0.9] RR p99={rr11['slow_p99']:.1f} "
-          f"(blind rotation, between R and JSQ2)")
+          f"(blind rotation, between R and JSQ2); "
+          f"HIKU p99={hiku11['slow_p99']:.1f} vs "
+          f"LL p99={ll11['slow_p99']:.1f}")
+    bi11 = _by(f11, workload="bimodal-exec", load=0.8)
+    dd11 = next(r for r in bi11 if r["policy"] == "E/DD/PS")
+    rb11 = next(r for r in bi11 if r["policy"] == "E/R/PS")
+    ok &= _claim("Zoo: data-driven DD beats size-blind R on bimodal "
+                 "durations @0.8 (learned per-function estimates)",
+                 dd11["slow_p99"] < rb11["slow_p99"],
+                 f"DD={dd11['slow_p99']:.1f} vs R={rb11['slow_p99']:.1f}")
+    mx = _by(f11, workload="azure-bursty",
+             load=fig11_policy_zoo.MIXED_LOAD)
+    if mx:
+        mh = next(r for r in mx if r["policy"] == "E/HIKU/PS")
+        md = next(r for r in mx if r["policy"] == "E/DD/PS")
+        ml = next(r for r in mx if r["policy"] == "E/LL/PS")
+        print(f"  [mixed-batch observation: bursty replay @"
+              f"{fig11_policy_zoo.MIXED_LOAD}] "
+              f"HIKU p99={mh['slow_p99']:.1f} DD p99={md['slow_p99']:.1f} "
+              f"LL p99={ml['slow_p99']:.1f}")
 
     print("== §6.6: scheduler overhead ==", flush=True)
     tov = tab_overhead.run(quick)
@@ -198,8 +239,25 @@ def main() -> None:
               f"{r['decisions_per_s']:12.0f} dec/s")
 
     from repro.core.simulator import engine_cache_stats
-    print(f"\nbenchmarks done in {time.time()-t_start:.0f}s; CSVs in "
-          f"experiments/; compiled engines: {engine_cache_stats()}; "
+    from .common import OUT_DIR
+    elapsed = time.time() - t_start
+    report = {
+        "mode": "quick" if quick else "full",
+        "elapsed_s": round(elapsed, 1),
+        "ok": bool(ok),
+        "checks": _CHECKS,
+        "engine_cache": engine_cache_stats(),
+        "figures": {"fig2": f2, "fig3": f3, "fig4": f4, "fig6": f6,
+                    "fig8": f8, "fig9": f9, "fig10": f10, "fig11": f11,
+                    "tab_overhead": tov},
+    }
+    os.makedirs(OUT_DIR, exist_ok=True)
+    report_path = os.path.join(OUT_DIR, "BENCH_report.json")
+    with open(report_path, "w") as f:
+        json.dump(report, f, indent=1, default=float)
+    print(f"\nbenchmarks done in {elapsed:.0f}s; CSVs in "
+          f"experiments/; report: {report_path}; "
+          f"compiled engines: {engine_cache_stats()}; "
           f"overall: {'PASS' if ok else 'FAIL'}")
     sys.exit(0 if ok else 1)
 

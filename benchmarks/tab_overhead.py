@@ -48,6 +48,24 @@ def run(quick: bool = True):
         rows.append({"scheduler": name, "impl": "python",
                      "decisions_per_s": N / dt,
                      "us_per_decision": dt / N * 1e6})
+    # carried-state balancers go through the stateful contract (the
+    # stateless shim rejects them): decision cost includes the
+    # functional state update, the honest per-arrival price
+    from repro.policy import get_balancer
+    for name, label in (("HIKU", "pull-based(HIKU)"),
+                        ("DD", "data-driven(DD)")):
+        b = get_balancer(name)
+        sel, _ = b.make_np(cl.cores, cl.slots)
+        state = b.init_state(W, F)
+        t0 = time.perf_counter()
+        for i in range(N):
+            f = int(funcs[i])
+            _, state = sel(state, active, warm[:, f], f, homes,
+                           float(us[i]), i)
+        dt = time.perf_counter() - t0
+        rows.append({"scheduler": label, "impl": "python",
+                     "decisions_per_s": N / dt,
+                     "us_per_decision": dt / N * 1e6})
     # batched Pallas kernel (Hermes) — sequential semantics preserved
     from repro.kernels.hermes_select.ops import hermes_select
     import jax.numpy as jnp

@@ -9,12 +9,12 @@ from .taxonomy import (Binding, LoadBalance, PolicySpec, WorkerSched,
                        parse_policy, FIG2_POLICIES, EVAL_POLICIES, HERMES,
                        LATE_BINDING, E_LL_PS, E_LL_FCFS, E_LL_SRPT, E_LOC_PS,
                        E_LOC_FCFS, E_R_PS, E_R_FCFS, E_JSQ2_PS, E_RR_PS,
-                       ZOO_POLICIES)
+                       E_HIKU_PS, E_DD_PS, ZOO_POLICIES)
 from .workload import (Workload, WorkloadBatch, WORKLOADS, synth_workload,
                        validate_workload,
                        stack_workloads, replicate_workload, ms_trace,
                        ms_representative, single_function, multi_balanced,
-                       homogeneous_exec, lognormal_mean,
+                       homogeneous_exec, bimodal_exec, lognormal_mean,
                        AZURE_MU, AZURE_SIGMA)
 from .metrics import (Summary, BatchSummary, Stat, summarize, summarize_sim,
                       summarize_batch, summarize_batch_sim)
@@ -30,11 +30,12 @@ __all__ = [
     "Binding", "LoadBalance", "PolicySpec", "WorkerSched", "parse_policy",
     "FIG2_POLICIES", "EVAL_POLICIES", "HERMES", "LATE_BINDING", "E_LL_PS",
     "E_LL_FCFS", "E_LL_SRPT", "E_LOC_PS", "E_LOC_FCFS", "E_R_PS", "E_R_FCFS",
-    "E_JSQ2_PS", "E_RR_PS", "ZOO_POLICIES",
+    "E_JSQ2_PS", "E_RR_PS", "E_HIKU_PS", "E_DD_PS", "ZOO_POLICIES",
     "Workload", "WorkloadBatch", "WORKLOADS", "synth_workload",
     "validate_workload", "stack_workloads", "replicate_workload", "ms_trace",
     "ms_representative", "single_function", "multi_balanced",
-    "homogeneous_exec", "lognormal_mean", "AZURE_MU", "AZURE_SIGMA",
+    "homogeneous_exec", "bimodal_exec", "lognormal_mean",
+    "AZURE_MU", "AZURE_SIGMA",
     "Summary", "BatchSummary", "Stat", "summarize", "summarize_sim",
     "summarize_batch", "summarize_batch_sim",
 ]

@@ -18,14 +18,24 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.policy import np_select, jax_select
+from repro.policy import get_balancer, np_select, jax_select
 from repro.policy.balancers import hermes_score_np  # noqa: F401 (re-export)
+
+
+def _reject_stateful(balance):
+    bal = get_balancer(balance)
+    if bal.stateful:
+        raise ValueError(
+            f"balancer {bal.name!r} carries state (init_state registered); "
+            f"the stateless compat shims cannot drive it — use "
+            f"repro.policy.resolve and thread the state explicitly")
 
 
 def select_worker_np(balance, active: np.ndarray, warm: np.ndarray,
                      func: int, func_home: np.ndarray, u: float, cores: int,
                      slots: int, idx: int = 0) -> int:
     """Select a worker with ``balance`` (name or enum); -1 when all full."""
+    _reject_stateful(balance)
     sel = np_select(balance, cores, slots)
     return sel(active, warm[:, func], func, func_home, u, idx)
 
@@ -36,10 +46,14 @@ def make_select_worker_jax(balance, cores: int, slots: int):
     ``warm_col`` is the ``warm[:, func]`` column; returns int32 worker id,
     -1 when all full.  Deterministic contract identical to numpy above.
     (The registry's native closures additionally take the arrival index
-    ``idx``; this wrapper pins it to 0 for balancers that ignore it.)
+    ``idx``; this wrapper defaults it to 0, which is only correct for
+    balancers that ignore it — for an idx-dependent balancer like ``RR``
+    pass the arrival sequence number explicitly or the rotation
+    degenerates to a fixed probe from worker 0.)
     """
+    _reject_stateful(balance)
     sel = jax_select(balance, cores, slots)
 
-    def select(active, warm_col, func, func_home, u):
-        return sel(active, warm_col, func, func_home, u, 0)
+    def select(active, warm_col, func, func_home, u, idx=0):
+        return sel(active, warm_col, func, func_home, u, idx)
     return select

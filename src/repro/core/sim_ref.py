@@ -21,7 +21,11 @@ exactly):
   (:func:`repro.policy.resolve` with ``backend="np"``), so any
   registered balancer/scheduler runs through this oracle unchanged; see
   :mod:`repro.policy.balancers` for the built-in contracts (LOC / R /
-  LL / H / JSQ2 / RR).
+  LL / H / JSQ2 / RR, plus the carried-state HIKU / DD — their state
+  pytree is threaded through selection and updated by an
+  ``on_complete`` hook once per task completion, counting down the
+  worker's remaining active tasks in worker-index order exactly as the
+  vectorized engine drains its per-completion argmin loop).
 * Warm executors: each completion leaves one idle warm executor for its
   function on its worker.  A placement consumes a matching warm executor
   (warm start) if present, else it is a cold start; if the worker's slots
@@ -91,6 +95,9 @@ def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload
     # the registered balancer/scheduler (None for late binding)
     res = resolve(policy, backend="np", cluster=cluster)
     late = res.late
+    # carried-state balancers thread a state pytree through selection
+    # and receive a hook per completion (repro.policy.registry contract)
+    lb_state = res.init_state(W, F) if (res.stateful and not late) else None
 
     def set_rates(w: int) -> None:
         ts = tasks[w]
@@ -135,7 +142,7 @@ def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload
             start_task(w, queue.pop(0), True)
 
     def advance(dt: float) -> None:
-        nonlocal now, server_time, core_time
+        nonlocal now, server_time, core_time, lb_state
         dt_left = dt
         while True:
             any_task = any(tasks[w] for w in range(W))
@@ -162,11 +169,17 @@ def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload
             dt_left -= tau
             for w in range(W):
                 survivors = []
+                n_alive = len(tasks[w])
                 for t in tasks[w]:
                     t.remaining -= t.rate * tau
                     if t.remaining <= EPS:
                         response[t.arr_idx] = now - t.arrival
                         warm[w, t.func] += 1
+                        n_alive -= 1
+                        if lb_state is not None:
+                            lb_state = res.on_complete(
+                                lb_state, w, t.func,
+                                float(wl.service[t.arr_idx]), n_alive)
                     else:
                         survivors.append(t)
                 tasks[w] = survivors
@@ -186,8 +199,12 @@ def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload
                 queue.append(i)
         else:
             f = int(wl.func[i])
-            w = res.select(active, warm[:, f], f, wl.func_home,
-                           float(wl.u_lb[i]), i)
+            if lb_state is not None:
+                w, lb_state = res.select(lb_state, active, warm[:, f], f,
+                                         wl.func_home, float(wl.u_lb[i]), i)
+            else:
+                w = res.select(active, warm[:, f], f, wl.func_home,
+                               float(wl.u_lb[i]), i)
             if w < 0:
                 rejected[i] = True
             else:

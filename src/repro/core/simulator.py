@@ -50,7 +50,7 @@ from __future__ import annotations
 import dataclasses
 from collections import OrderedDict
 from functools import partial
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import numpy as np
 
@@ -86,6 +86,7 @@ class SimState(NamedTuple):
     worker_of: jax.Array   # [N+1] i32
     server_time: jax.Array  # f64
     core_time: jax.Array    # f64
+    lb: Any                 # balancer carried state (pytree; () stateless)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -153,6 +154,10 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
     late = res.late
     penalty = float(cluster.cold_start_penalty)
     select = res.select        # None for late binding
+    # carried-state balancers (init_state registered): select threads a
+    # state pytree through the scan carry and on_complete updates it per
+    # task completion (see repro.policy.registry)
+    stateful = res.stateful and not late
 
     def rates_of(st: SimState) -> jax.Array:
         active = st.task_idx >= 0
@@ -261,10 +266,23 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
                 jnp.where(completed, jnp.inf, remaining[wj, sj]))
             task_idx = st.task_idx.at[wj, sj].set(
                 jnp.where(completed, jnp.int32(-1), tid))
+            lb = st.lb
+            if stateful:
+                # one hook call per completion, masked branch-free: the
+                # updated pytree is selected only where the argmin slot
+                # really completed (simultaneous completions drain one
+                # zero-tau iteration each, lowest worker index first —
+                # the same order the numpy oracle applies its hooks)
+                n_after = (task_idx[wj] >= 0).sum()
+                upd = res.on_complete(lb, wj, f_j,
+                                      services[jnp.maximum(tid, 0)],
+                                      n_after)
+                lb = jax.tree_util.tree_map(
+                    lambda a, b: jnp.where(completed, a, b), upd, lb)
             st = st._replace(
                 remaining=remaining, task_idx=task_idx,
                 warm=warm, now=now, resp=resp,
-                server_time=server_time, core_time=core_time)
+                server_time=server_time, core_time=core_time, lb=lb)
             return st, dt_left - tau
 
         st, _ = lax.while_loop(cond, body, (st, dt))
@@ -286,7 +304,12 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
                     i.astype(jnp.int32)), q_tail=st.q_tail + 1)
             st = lax.cond(active.min() < C, do_place, do_queue, st)
         else:
-            w = select(active, st.warm[:, f_i], f_i, homes, u_i, i)
+            if stateful:
+                w, lb = select(st.lb, active, st.warm[:, f_i], f_i, homes,
+                               u_i, i)
+                st = st._replace(lb=lb)
+            else:
+                w = select(active, st.warm[:, f_i], f_i, homes, u_i, i)
             st = st._replace(rejected=st.rejected.at[i].set(w < 0))
             st = lax.cond(w >= 0,
                           lambda s: place(s, i, jnp.maximum(w, 0), funcs,
@@ -295,6 +318,10 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
         return st, ()
 
     def run(arrivals, funcs, services, u_lb, homes):
+        lb0 = ()
+        if stateful:
+            lb0 = jax.tree_util.tree_map(jnp.asarray,
+                                         res.init_state(W, F))
         st = SimState(
             remaining=jnp.full((W, S), jnp.inf),
             task_arr=jnp.zeros((W, S)),
@@ -308,6 +335,7 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
             rejected=jnp.zeros((N + 1,), dtype=bool),
             worker_of=jnp.full((N + 1,), -1, dtype=jnp.int32),
             server_time=jnp.float64(0.0), core_time=jnp.float64(0.0),
+            lb=lb0,
         )
         xs = (jnp.arange(N), arrivals, funcs, u_lb)
         st, _ = lax.scan(

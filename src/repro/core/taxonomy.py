@@ -137,7 +137,13 @@ FIG2_POLICIES = (
 )
 EVAL_POLICIES = (E_LOC_PS, LATE_BINDING, E_LL_PS, HERMES)  # paper §6 baselines
 
-# Registry extensions swept by benchmarks/fig11_policy_zoo.py.
+# Registry extensions swept by benchmarks/fig11_policy_zoo.py.  HIKU
+# (pull-based ready-ring) and DD (data-driven per-function estimates)
+# carry balancer state through the engines — see
+# :mod:`repro.policy.balancers`.
 E_JSQ2_PS = PolicySpec(Binding.EARLY, "JSQ2", WorkerSched.PS)
 E_RR_PS = PolicySpec(Binding.EARLY, "RR", WorkerSched.PS)
-ZOO_POLICIES = (E_R_PS, E_RR_PS, E_JSQ2_PS, E_LL_PS, HERMES)
+E_HIKU_PS = PolicySpec(Binding.EARLY, "HIKU", WorkerSched.PS)
+E_DD_PS = PolicySpec(Binding.EARLY, "DD", WorkerSched.PS)
+ZOO_POLICIES = (E_R_PS, E_RR_PS, E_JSQ2_PS, E_HIKU_PS, E_DD_PS, E_LL_PS,
+                HERMES)

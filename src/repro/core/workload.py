@@ -290,10 +290,45 @@ def homogeneous_exec(cluster: ClusterCfg, load: float, n: int, seed: int = 0
                           exp_mean=8.9, seed=seed, name="homogeneous-exec")
 
 
+# Bimodal class means (seconds) — far enough apart that a per-function
+# duration estimate is worth real scheduling information.
+BIMODAL_SHORT_S = 0.3
+BIMODAL_LONG_S = 12.0
+
+
+def bimodal_exec(cluster: ClusterCfg, load: float, n: int, seed: int = 0,
+                 *, n_functions: int = 20, sigma: float = 0.25) -> Workload:
+    """Bimodal per-function durations: even fns short, odd fns long.
+
+    Every function's durations are tightly clustered (Log-normal jitter
+    ``sigma`` around its class mean), so the function id *predicts* the
+    execution time — the regime where data-driven policies (Przybylski
+    et al. 2021) pay off: ``DD`` learns the two modes from completions
+    and balances expected work, while size-blind placement (``R``/``RR``)
+    strands short invocations behind long ones.
+    """
+    rng = np.random.default_rng(seed)
+    func = rng.integers(0, n_functions, size=n).astype(np.int32)
+    base = np.where(func % 2 == 0, BIMODAL_SHORT_S, BIMODAL_LONG_S)
+    service = base * rng.lognormal(mean=0.0, sigma=sigma, size=n)
+    # λ calibrated against the realized mean, like synth_workload
+    lam = load * cluster.total_cores / float(service.mean())
+    arrival = np.cumsum(rng.exponential(scale=1.0 / lam, size=n))
+    u_lb = rng.uniform(size=n)
+    func_home = rng.integers(0, cluster.n_workers,
+                             size=n_functions).astype(np.int32)
+    return Workload(
+        arrival=arrival.astype(np.float64), func=func,
+        service=service.astype(np.float64), u_lb=u_lb,
+        func_home=func_home, n_functions=n_functions, load=load,
+        name="bimodal-exec")
+
+
 WORKLOADS = {
     "ms-trace": ms_trace,
     "ms-representative": ms_representative,
     "single-function": single_function,
     "multi-balanced": multi_balanced,
     "homogeneous-exec": homogeneous_exec,
+    "bimodal-exec": bimodal_exec,
 }

@@ -22,6 +22,21 @@ Registry extensions beyond the paper (the policy zoo):
 * ``RR`` — round-robin: start at worker ``idx mod W`` (``idx`` is the
   arrival sequence number) and linear-probe to the first worker with a
   free slot — LOC's ring walk with a rotating home.
+* ``HIKU`` — pull-based assignment (Hiku, Akbari & Hauswirth 2025):
+  workers *advertise* themselves into a FIFO ready-ring when their last
+  active task completes; an arrival pops the oldest advertised (idle)
+  worker and falls back to least-loaded when the ring is empty.  The
+  ring (worker ids + membership flags + head/tail counters) is carried
+  state threaded through the engines; duplicates are impossible (the
+  membership flag gates pushes), so a popped worker is idle by
+  invariant and a pop never rejects.  All workers start advertised.
+* ``DD`` — data-driven dispatch (per-function execution-time estimates
+  à la Przybylski et al. 2021): carried state holds a per-function EMA
+  of observed execution times (``α = 0.25``, prior 1 s) plus each
+  worker's expected outstanding work; an arrival joins the worker with
+  the least expected work (shortest-expected-load), charging the
+  function's current estimate, and completions both discharge the
+  worker and refine the function's estimate.
 
 The Hermes lexicographic score (shared by np / jax / Pallas):
 
@@ -255,6 +270,156 @@ def _rr_jax(cores: int, slots: int):
 
 
 # --------------------------------------------------------------------------
+# Carried-state balancers: HIKU (pull-based ready-ring) and DD
+# (data-driven per-function EMA).  Their make_* factories return
+# (select, on_complete) pairs — see the carried-state contract in
+# repro.policy.registry.  Both backends of each balancer perform the
+# identical float/int operations in the identical order, so np ≡ jax
+# holds bitwise (the parity tests thread state across both).
+# --------------------------------------------------------------------------
+
+# EMA smoothing factor for DD's per-function estimates.  A power of two,
+# and the update is written in incremental form est + α·(obs − est):
+# α·d is then *exact* (pure exponent shift), so XLA fusing the
+# multiply-add into an FMA rounds identically to numpy's separate
+# mul-then-add and the np ≡ jax bitwise parity contract holds.
+DD_ALPHA = 0.25
+DD_PRIOR_S = 1.0      # estimate before a function's first completion
+
+
+def _hiku_init(n_workers: int, n_functions: int):
+    """All workers start advertised (everyone is idle at t=0)."""
+    return {"ring": np.arange(n_workers, dtype=np.int32),
+            "in_ring": np.ones(n_workers, dtype=np.int32),
+            "head": np.int32(0),
+            "tail": np.int32(n_workers)}
+
+
+def _hiku_np(cores: int, slots: int):
+    def select(state, active, warm_col, func, func_home, u, idx):
+        has_slot = active < slots
+        if not has_slot.any():
+            return -1, state
+        if int(state["tail"]) > int(state["head"]):
+            ring = state["ring"]
+            cand = int(ring[int(state["head"]) % ring.shape[0]])
+            in_ring = state["in_ring"].copy()
+            in_ring[cand] = 0
+            new = dict(state, head=np.int32(int(state["head"]) + 1),
+                       in_ring=in_ring)
+            # inside the engines a ring member is idle by invariant, but
+            # external placements (serving-platform re-dispatch) can
+            # busy an advertised worker — validate before committing,
+            # falling back to least-loaded (identical check in the jax
+            # backend keeps bitwise parity)
+            if has_slot[cand]:
+                return cand, new
+            key = np.where(has_slot, active, _INT_INF)
+            return int(np.argmin(key)), new
+        key = np.where(has_slot, active, _INT_INF)
+        return int(np.argmin(key)), state
+
+    def on_complete(state, w, func, service, n_active_after):
+        if n_active_after != 0 or int(state["in_ring"][w]) != 0:
+            return state
+        ring = state["ring"].copy()
+        ring[int(state["tail"]) % ring.shape[0]] = w
+        in_ring = state["in_ring"].copy()
+        in_ring[w] = 1
+        return dict(state, ring=ring, in_ring=in_ring,
+                    tail=np.int32(int(state["tail"]) + 1))
+
+    return select, on_complete
+
+
+def _hiku_jax(cores: int, slots: int):
+    import jax.numpy as jnp
+    guard = _guarded(jnp)
+    BIG = jnp.int32(1 << 30)
+
+    def select(state, active, warm_col, func, func_home, u, idx):
+        has_slot = active < slots
+        ring, in_ring = state["ring"], state["in_ring"]
+        W = ring.shape[0]
+        pop = (state["tail"] > state["head"]) & has_slot.any()
+        cand = ring[state["head"] % W]
+        key = jnp.where(has_slot, active.astype(jnp.int32), BIG)
+        ll_w = jnp.argmin(key).astype(jnp.int32)
+        # a popped worker is idle by engine invariant; under external
+        # perturbation (serving re-dispatch) validate its slot and fall
+        # back to least-loaded — mirrors the np backend bit-for-bit
+        w = jnp.where(pop & has_slot[cand], cand, ll_w)
+        in_ring = in_ring.at[cand].set(
+            jnp.where(pop, 0, in_ring[cand]).astype(in_ring.dtype))
+        new = dict(state, head=state["head"] + pop.astype(state["head"].dtype),
+                   in_ring=in_ring)
+        return guard(w, has_slot), new
+
+    def on_complete(state, w, func, service, n_active_after):
+        ring, in_ring = state["ring"], state["in_ring"]
+        W = ring.shape[0]
+        push = (n_active_after == 0) & (in_ring[w] == 0)
+        pos = state["tail"] % W
+        ring = ring.at[pos].set(
+            jnp.where(push, w, ring[pos]).astype(ring.dtype))
+        in_ring = in_ring.at[w].set(
+            jnp.where(push, 1, in_ring[w]).astype(in_ring.dtype))
+        return dict(state, ring=ring, in_ring=in_ring,
+                    tail=state["tail"] + push.astype(state["tail"].dtype))
+
+    return select, on_complete
+
+
+def _dd_init(n_workers: int, n_functions: int):
+    return {"est": np.full(n_functions, DD_PRIOR_S, dtype=np.float64),
+            "ew": np.zeros(n_workers, dtype=np.float64)}
+
+
+def _dd_np(cores: int, slots: int):
+    def select(state, active, warm_col, func, func_home, u, idx):
+        has_slot = active < slots
+        if not has_slot.any():
+            return -1, state
+        key = np.where(has_slot, state["ew"], np.inf)
+        w = int(np.argmin(key))
+        ew = state["ew"].copy()
+        ew[w] = ew[w] + state["est"][func]
+        return w, dict(state, ew=ew)
+
+    def on_complete(state, w, func, service, n_active_after):
+        est = state["est"].copy()
+        ew = state["ew"].copy()
+        ew[w] = np.maximum(ew[w] - est[func], 0.0)
+        est[func] = est[func] + DD_ALPHA * (service - est[func])
+        return dict(state, est=est, ew=ew)
+
+    return select, on_complete
+
+
+def _dd_jax(cores: int, slots: int):
+    import jax.numpy as jnp
+    guard = _guarded(jnp)
+
+    def select(state, active, warm_col, func, func_home, u, idx):
+        has_slot = active < slots
+        key = jnp.where(has_slot, state["ew"], jnp.inf)
+        w = jnp.argmin(key).astype(jnp.int32)
+        placed = has_slot.any()
+        ew = state["ew"].at[w].add(jnp.where(placed, state["est"][func], 0.0))
+        return guard(w, has_slot), dict(state, ew=ew)
+
+    def on_complete(state, w, func, service, n_active_after):
+        est_f = state["est"][func]
+        ew = state["ew"].at[w].set(
+            jnp.maximum(state["ew"][w] - est_f, 0.0))
+        est = state["est"].at[func].set(
+            est_f + DD_ALPHA * (service - est_f))
+        return dict(state, est=est, ew=ew)
+
+    return select, on_complete
+
+
+# --------------------------------------------------------------------------
 # Pallas backend (H) — the batched controller kernel as a per-arrival
 # select inside the scan engine, and as the batched dispatch for the
 # serving controller
@@ -307,3 +472,11 @@ register_balancer(
 register_balancer(
     "RR", doc="round-robin ring probe from worker (idx mod W)",
     make_np=_rr_np, make_jax=_rr_jax)
+register_balancer(
+    "HIKU", doc="pull-based: idle workers advertise into a ready-ring; "
+                "arrivals pop it, LL fallback when empty",
+    make_np=_hiku_np, make_jax=_hiku_jax, init_state=_hiku_init)
+register_balancer(
+    "DD", doc="data-driven: shortest expected load via per-function "
+              "execution-time EMAs",
+    make_np=_dd_np, make_jax=_dd_jax, init_state=_dd_init)

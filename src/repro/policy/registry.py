@@ -28,6 +28,26 @@ and ``idx`` the arrival sequence number (round-robin state lives in the
 workload, not the balancer — every backend stays pure).  ``-1`` means
 every worker's slots are exhausted (the caller counts a rejection).
 
+**Carried state.**  A balancer may declare ``init_state`` — a factory
+``(n_workers, n_functions) -> dict[str, np.ndarray]`` — and then its
+``make_np`` / ``make_jax`` / ``make_pallas`` factories return a
+``(select, on_complete)`` *pair* implementing the stateful contract::
+
+    select(state, active, warm_col, func, func_home, u, idx)
+        -> (worker | -1, state)
+    on_complete(state, worker, func, service, n_active_after) -> state
+
+Both are pure (functional state updates, identical float/int semantics
+on every backend); the engines thread the state through the vmapped
+scan carry (:mod:`repro.core.simulator`), the numpy oracle's event loop
+(:mod:`repro.core.sim_ref`) and the serving platform
+(:mod:`repro.serving.engine`), calling ``on_complete`` once per task
+completion (``service`` is the task's oracle execution time *excluding*
+any cold-start penalty; ``n_active_after`` the worker's remaining
+active-task count).  A rejected arrival (``-1``) must return its input
+state unchanged.  Examples: ``HIKU`` (pull-based ready-ring) and ``DD``
+(per-function execution-time EMAs) in :mod:`repro.policy.balancers`.
+
 :func:`resolve` is the single entry point: it turns a
 :class:`~repro.core.taxonomy.PolicySpec` (or ``"E/LL/PS"`` text) plus a
 backend name plus a :class:`~repro.core.cluster.ClusterCfg` into ready
@@ -65,6 +85,12 @@ class Balancer:
     ``(active [W], warm [W, F], funcs [N]) -> (choices [N], active_out)``
     — the one-HBM-read-per-arrival-batch form used by the serving
     platform and ``tab_overhead``.
+
+    ``init_state`` marks the balancer *stateful* (carried-state
+    contract, see the module docstring): a factory
+    ``(n_workers, n_functions) -> dict[str, np.ndarray]`` returning a
+    fresh state pytree, with the ``make_*`` factories then returning
+    ``(select, on_complete)`` pairs instead of bare closures.
     """
 
     name: str
@@ -73,6 +99,11 @@ class Balancer:
     make_jax: Optional[Callable[[int, int], Callable]] = None
     make_pallas: Optional[Callable[[int, int], Callable]] = None
     make_batch: Optional[Callable[[int, int], Callable]] = None
+    init_state: Optional[Callable[[int, int], Any]] = None
+
+    @property
+    def stateful(self) -> bool:
+        return self.init_state is not None
 
     def backends(self) -> tuple[str, ...]:
         return tuple(b for b, fn in zip(
@@ -136,13 +167,15 @@ def _load_builtins() -> None:
 # --------------------------------------------------------------------------
 
 def register_balancer(name: str, *, make_np=None, make_jax=None,
-                      make_pallas=None, make_batch=None, doc: str = "",
-                      overwrite: bool = False) -> Balancer:
+                      make_pallas=None, make_batch=None, init_state=None,
+                      doc: str = "", overwrite: bool = False) -> Balancer:
     """Register a load balancer under ``name`` (upper-cased).
 
     At least one of ``make_np`` / ``make_jax`` must be given; a balancer
-    with both is sweepable by every engine in the repo.  Returns the
-    :class:`Balancer` record.
+    with both is sweepable by every engine in the repo.  ``init_state``
+    opts into the carried-state contract (see the module docstring) —
+    the ``make_*`` factories must then return ``(select, on_complete)``
+    pairs.  Returns the :class:`Balancer` record.
     """
     name = name.strip().upper()
     if "/" in name or "*" in name or not name:
@@ -153,7 +186,8 @@ def register_balancer(name: str, *, make_np=None, make_jax=None,
         raise ValueError(f"balancer {name!r} already registered "
                          f"(pass overwrite=True to replace)")
     bal = Balancer(name=name, doc=doc, make_np=make_np, make_jax=make_jax,
-                   make_pallas=make_pallas, make_batch=make_batch)
+                   make_pallas=make_pallas, make_batch=make_batch,
+                   init_state=init_state)
     BALANCERS[name] = bal
     _factory_cache_clear()
     return bal
@@ -302,13 +336,22 @@ def _factory_cache_clear() -> None:
 
 
 def np_select(balancer, cores: int, slots: int):
-    """The numpy-backend select closure for ``balancer`` (cached)."""
+    """The numpy-backend select closure for ``balancer`` (cached).
+
+    For a stateful balancer this is the raw factory product — a
+    ``(select, on_complete)`` pair; prefer :func:`resolve`, which
+    unpacks it.
+    """
     return _np_select(canonical_name(balancer).upper(), int(cores),
                       int(slots))
 
 
 def jax_select(balancer, cores: int, slots: int):
-    """The jax-backend select closure for ``balancer`` (cached)."""
+    """The jax-backend select closure for ``balancer`` (cached).
+
+    Stateful balancers yield a ``(select, on_complete)`` pair — see
+    :func:`np_select`.
+    """
     return _jax_select(canonical_name(balancer).upper(), int(cores),
                        int(slots))
 
@@ -326,6 +369,12 @@ class ResolvedPolicy:
     dispatched tasks at rate 1, exactly the paper's model).
     ``batch_select`` is the batched controller dispatch when the
     balancer ships one (today: the ``H`` Pallas kernel), else ``None``.
+
+    For a stateful balancer (:attr:`stateful` true), ``select`` follows
+    the carried-state contract ``(state, ...) -> (worker, state)``,
+    ``init_state`` builds a fresh state pytree ``(W, F) -> dict`` and
+    ``on_complete`` is the per-completion update hook; all three are
+    ``None``/stateless otherwise.
     """
 
     spec: Any                      # PolicySpec
@@ -336,6 +385,12 @@ class ResolvedPolicy:
     batch_select: Optional[Callable]
     balancer: Optional[Balancer]
     sched: Optional[SchedDef]
+    init_state: Optional[Callable] = None
+    on_complete: Optional[Callable] = None
+
+    @property
+    def stateful(self) -> bool:
+        return self.init_state is not None
 
 
 def default_backend(policy) -> str:
@@ -399,7 +454,13 @@ def resolve(policy, backend: str = "np", cluster=None) -> ResolvedPolicy:
     else:  # pallas
         select = _pallas_select(bname, C, S)
         rates = _jax_rates(sched.name, C)
+    on_complete = None
+    if bal.stateful:
+        # stateful factories return (select, on_complete) pairs
+        select, on_complete = select
     batch = bal.make_batch(C, S) if bal.make_batch is not None else None
     return ResolvedPolicy(spec=spec, backend=backend, late=binding.late,
                           select=select, rates=rates, batch_select=batch,
-                          balancer=bal, sched=sched)
+                          balancer=bal, sched=sched,
+                          init_state=bal.init_state,
+                          on_complete=on_complete)

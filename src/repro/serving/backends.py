@@ -125,7 +125,13 @@ class InProcessWorker:
 
 
 class HermesFrontend:
-    """Controller for in-process workers using the Hermes policy."""
+    """Controller for in-process workers using a registry balancer.
+
+    Carried-state balancers (``HIKU``/``DD``) are fully supported: the
+    dispatcher threads their state through every selection and feeds the
+    ``on_complete`` hook the *measured* wall time of each invocation —
+    the live-serving analogue of the simulator's oracle durations.
+    """
 
     def __init__(self, registry: ModelRegistry, n_workers: int = 2,
                  cores: int = 2, max_len: int = 128,
@@ -135,7 +141,16 @@ class HermesFrontend:
         self.cores = cores
         self.slots = 8 * cores
         self.fn_ids = {n: i for i, n in enumerate(registry.names())}
-        self._select = np_select(balancer, self.cores, self.slots)
+        from repro.policy import get_balancer
+        bal = get_balancer(balancer)
+        if bal.stateful:
+            self._select, self._on_complete = bal.make_np(self.cores,
+                                                          self.slots)
+            self._lb_state = bal.init_state(n_workers, len(self.fn_ids))
+        else:
+            self._select = np_select(balancer, self.cores, self.slots)
+            self._on_complete = None
+            self._lb_state = None
         self._n_dispatched = 0
 
     def dispatch(self, inv: Invocation) -> Invocation:
@@ -147,15 +162,26 @@ class HermesFrontend:
             for name in w.warm:
                 warm[wi, self.fn_ids[name]] = 1
         fid = self.fn_ids[inv.func]
-        w = self._select(active, warm[:, fid], fid,
-                         np.zeros(F, np.int32), 0.0, self._n_dispatched)
+        homes = np.zeros(F, np.int32)
+        if self._lb_state is not None:
+            w, self._lb_state = self._select(
+                self._lb_state, active, warm[:, fid], fid, homes, 0.0,
+                self._n_dispatched)
+        else:
+            w = self._select(active, warm[:, fid], fid, homes, 0.0,
+                             self._n_dispatched)
         self._n_dispatched += 1
         if w < 0:
             raise RuntimeError("cluster full")
         inv.worker = int(w)
         worker = self.workers[w]
         worker.active += 1
+        t0 = time.perf_counter()
         try:
             return worker.execute(inv)
         finally:
             worker.active -= 1
+            if self._lb_state is not None:
+                self._lb_state = self._on_complete(
+                    self._lb_state, int(w), fid,
+                    time.perf_counter() - t0, worker.active)

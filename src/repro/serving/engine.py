@@ -115,6 +115,10 @@ class ServingCluster:
         tasks: list[list[_Task]] = [[] for _ in range(W)]
         warm = np.zeros((W, F), dtype=np.int64)
         queue: list[int] = []
+        # carried-state balancers (HIKU ready-ring, DD estimates, ...):
+        # the same np-backend state pytree + hooks as the simulators
+        lb_state = res.init_state(W, F) \
+            if (res.stateful and not late) else None
         response = np.full(N, np.nan)
         cold = np.zeros(N, dtype=bool)
         rejected = np.zeros(N, dtype=bool)
@@ -171,6 +175,13 @@ class ServingCluster:
                 place(w, queue.pop(0))
 
         def maybe_redispatch() -> None:
+            # Migrations place without consulting the balancer, so a
+            # carried-state balancer's accounting is approximate under
+            # re-dispatch: HIKU validates popped workers against
+            # ``active`` (ring pops of a migrated-onto worker fall back
+            # to least-loaded), and DD's expected-work ledger keeps the
+            # charge on the source worker (bounded drift — the
+            # completion discharge is clamped at zero on the target).
             if cfg.redispatch_deadline_s is None:
                 return
             active = np.array([len(tasks[w]) for w in range(W)])
@@ -196,7 +207,7 @@ class ServingCluster:
                         active[tgt] += 1
 
         def advance(dt: float) -> None:
-            nonlocal now, server_time, core_time
+            nonlocal now, server_time, core_time, lb_state
             dt_left = dt
             while True:
                 if late:
@@ -220,12 +231,18 @@ class ServingCluster:
                 dt_left -= tau
                 for w in range(W):
                     survivors = []
+                    n_alive = len(tasks[w])
                     for t in tasks[w]:
                         t.remaining -= t.rate * tau
                         if t.remaining <= EPS:
                             response[t.arr_idx] = now - t.arrival + \
                                 self.cfg.ctrl_latency_s
                             warm[w, t.func] += 1
+                            n_alive -= 1
+                            if lb_state is not None:
+                                lb_state = res.on_complete(
+                                    lb_state, w, t.func,
+                                    float(wl.service[t.arr_idx]), n_alive)
                         else:
                             survivors.append(t)
                     tasks[w] = survivors
@@ -261,6 +278,9 @@ class ServingCluster:
                     jnp.asarray(warm, jnp.int32),
                     jnp.asarray([f], jnp.int32))
                 w = int(ws[0])
+            elif lb_state is not None:
+                w, lb_state = res.select(lb_state, active, warm[:, f], f,
+                                         wl.func_home, float(wl.u_lb[i]), i)
             else:
                 w = res.select(active, warm[:, f], f, wl.func_home,
                                float(wl.u_lb[i]), i)

@@ -162,6 +162,38 @@ def test_summarize_batch_single_rep_matches_summarize():
                if np.isfinite(st.ci95))
 
 
+def test_mixed_synthetic_and_replay_batch():
+    """Synthetic generators + azure-* trace replays stack into ONE
+    ``simulate_many`` batch (the ROADMAP mixed-batches item): the shape
+    is harmonized by resampling, per-rep results are bit-identical to
+    independent ``simulate`` runs, and metrics summarize per workload.
+    """
+    from benchmarks.common import mixed_workload_batch, sweep_policies_mixed
+    names = ("ms-trace", "azure-diurnal", "azure-bursty")
+    wb = mixed_workload_batch(CLUSTER, names, 0.6, 180, seed=0)
+    assert wb.n_reps == len(names)
+    # harmonized shape: truncated to shortest N, widened to the largest
+    # component F (ms-trace's 50; replay traces carry fewer functions)
+    assert wb.n == 180
+    assert wb.n_functions == 50
+    assert int(wb.func.max()) < wb.n_functions
+    assert wb.names[1].startswith("azure-diurnal")
+    # mixed batch ≡ R independent runs, including a carried-state policy
+    from repro.core import E_DD_PS
+    for policy in (HERMES, E_DD_PS):
+        batch = simulate_many(policy, CLUSTER, wb)
+        for r in range(wb.n_reps):
+            single = simulate(policy, CLUSTER, wb.rep(r))
+            np.testing.assert_array_equal(
+                np.nan_to_num(batch.response[r], nan=-1.0),
+                np.nan_to_num(single.response, nan=-1.0))
+    rows = sweep_policies_mixed([HERMES, E_DD_PS], CLUSTER, names, 0.6,
+                                180, seed=0)
+    assert len(rows) == 2 * len(names)
+    assert {r["workload"] for r in rows} == set(names)
+    assert all(np.isfinite(r["slow_p50"]) for r in rows)
+
+
 def test_summarize_batch_confidence_intervals():
     wls = [synth_workload(CLUSTER, 0.8, 300, n_functions=5, seed=s)
            for s in range(4)]

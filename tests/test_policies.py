@@ -60,14 +60,59 @@ def test_parse_policy_named_errors():
         parse_policy("E/LL")
 
 
+def test_parse_policy_errors_list_their_own_registry():
+    """Each axis's ValueError suggests alternatives from ITS registry
+    only — an unknown sched must list schedulers, never balancers, and
+    vice versa (regression guard against cross-wired suggestion text)."""
+    import re
+
+    def words(msg):
+        return set(re.findall(r"[A-Z0-9]+", msg.split(";", 1)[1]))
+
+    with pytest.raises(ValueError) as bad_sched:
+        parse_policy("E/LL/NOPE")
+    msg = str(bad_sched.value)
+    assert "registered schedulers" in msg
+    assert words(msg) == set(sched_names())
+    with pytest.raises(ValueError) as bad_bal:
+        parse_policy("E/NOPE/PS")
+    msg = str(bad_bal.value)
+    assert "registered balancers" in msg
+    assert words(msg) == set(balancer_names())
+    assert {"HIKU", "DD"} <= words(msg)
+    with pytest.raises(ValueError) as bad_bind:
+        parse_policy("Z/LL/PS")
+    msg = str(bad_bind.value)
+    assert "registered bindings" in msg
+    assert words(msg) == {"E", "L"}
+
+
 def test_registry_names():
-    assert set(balancer_names()) >= {"LOC", "R", "LL", "H", "JSQ2", "RR"}
+    assert set(balancer_names()) >= {"LOC", "R", "LL", "H", "JSQ2", "RR",
+                                     "HIKU", "DD"}
     assert set(sched_names()) == {"PS", "FCFS", "SRPT"}
     assert get_balancer("H").backends() == ("np", "jax", "pallas")
     assert get_balancer("JSQ2").backends() == ("np", "jax")
     # auto-backend: kernel-carrying balancers dispatch through pallas
     assert default_backend(HERMES) == "pallas"
     assert default_backend(parse_policy("E/LL/PS")) == "jax"
+    # carried-state balancers declare init_state; stateless ones don't
+    assert get_balancer("HIKU").stateful and get_balancer("DD").stateful
+    assert not get_balancer("LL").stateful
+    assert default_backend(parse_policy("E/HIKU/PS")) == "jax"
+
+
+def test_stateless_shims_reject_stateful_balancers():
+    from repro.core.policies import (make_select_worker_jax,
+                                     select_worker_np)
+    active = np.zeros(3, dtype=np.int64)
+    warm = np.zeros((3, 2), dtype=np.int64)
+    homes = np.zeros(2, dtype=np.int32)
+    for name in ("HIKU", "DD"):
+        with pytest.raises(ValueError, match="carries state"):
+            select_worker_np(name, active, warm, 0, homes, 0.5, 2, 4)
+        with pytest.raises(ValueError, match="carries state"):
+            make_select_worker_jax(name, 2, 4)
 
 
 # --------------------------------------------------------------------------
@@ -109,6 +154,26 @@ def _check_select_np_valid(active, cores, slots, seed):
     u = float(rng.uniform())
     idx = int(rng.integers(0, 1000))
     for bal in balancer_names():
+        record = get_balancer(bal)
+        if record.stateful:
+            # stateful contract: a fresh state, and a rejected arrival
+            # must hand the state back unchanged.  (Validity of the
+            # chosen worker under an *arbitrary* active vector is not a
+            # stateful invariant — e.g. HIKU's ring assumes engine-
+            # consistent state — so only the range/rejection contract
+            # is checked here; engine-consistency is covered by the
+            # simulate ≡ simulate_ref golden tests.)
+            sel, _ = record.make_np(cores, slots)
+            state = record.init_state(W, F)
+            w, state2 = sel(state, active, warm[:, func], func, homes, u,
+                            idx)
+            if (active < slots).any():
+                assert 0 <= w < W, (bal, w, active)
+            else:
+                assert w == -1
+                for k in state:
+                    assert np.array_equal(state[k], state2[k]), (bal, k)
+            continue
         w = select_worker_np(bal, active, warm, func, homes, u, cores,
                              slots, idx=idx)
         if (active < slots).any():
@@ -129,12 +194,29 @@ def _check_jax_matches_np(active, cores, slots, seed):
     u = float(rng.uniform())
     idx = int(rng.integers(0, 1000))
     for bal in balancer_names():
+        record = get_balancer(bal)
+        args_j = (jnp.asarray(active), jnp.asarray(warm[:, func]),
+                  jnp.int32(func), jnp.asarray(homes), jnp.float64(u),
+                  jnp.int32(idx))
+        if record.stateful:
+            sel_np, _ = record.make_np(cores, slots)
+            sel_jx, _ = record.make_jax(cores, slots)
+            s_np = record.init_state(W, F)
+            s_jx = {k: jnp.asarray(v)
+                    for k, v in record.init_state(W, F).items()}
+            w_np, s_np = sel_np(s_np, active, warm[:, func], func, homes,
+                                u, idx)
+            w_j, s_jx = sel_jx(s_jx, *args_j)
+            assert w_np == int(w_j), (bal, active.tolist())
+            for k in s_np:
+                np.testing.assert_array_equal(
+                    np.asarray(s_np[k]), np.asarray(s_jx[k]),
+                    err_msg=f"{bal} state[{k}]")
+            continue
         w_np = select_worker_np(bal, active, warm, func, homes, u, cores,
                                 slots, idx=idx)
         sel = jax_select(bal, cores, slots)
-        w_j = int(sel(jnp.asarray(active), jnp.asarray(warm[:, func]),
-                      jnp.int32(func), jnp.asarray(homes), jnp.float64(u),
-                      jnp.int32(idx)))
+        w_j = int(sel(*args_j))
         assert w_np == w_j, (bal, active.tolist(), warm[:, func])
 
 
@@ -193,6 +275,9 @@ def test_backend_parity_task_by_task(name, seed):
     F = 5
     homes = rng.integers(0, W, F).astype(np.int32)
     bal = get_balancer(name)
+    if bal.stateful:
+        return _check_stateful_backend_parity(bal, rng, W, cores, slots,
+                                              F, homes)
     sel_np = np_select(name, cores, slots)
     sel_jax = jax_select(name, cores, slots)
     sel_pl = bal.make_pallas(cores, slots) if bal.make_pallas else None
@@ -216,6 +301,48 @@ def test_backend_parity_task_by_task(name, seed):
         if sel_pl is not None:
             w_p = int(sel_pl(*args_j))
             assert w_np == w_p, (name, "pallas", active.tolist(), warm_col)
+
+
+def _check_stateful_backend_parity(bal, rng, W, cores, slots, F, homes):
+    """Thread np and jax state through an interleaved select /
+    on_complete stream and demand bitwise-equal states every step —
+    the carried-state analogue of the task-by-task parity contract
+    (EMA float updates included, so FMA-style backend drift is caught).
+    """
+    import jax.numpy as jnp
+    sel_np, oc_np = bal.make_np(cores, slots)
+    sel_jx, oc_jx = bal.make_jax(cores, slots)
+    s_np = bal.init_state(W, F)
+    s_jx = {k: jnp.asarray(v) for k, v in bal.init_state(W, F).items()}
+    for t in range(24):
+        if rng.uniform() < 0.55:
+            full = t % 11 == 10
+            active = (np.full(W, slots) if full
+                      else rng.integers(0, slots + 1, W)).astype(np.int64)
+            warm_col = rng.integers(0, 3, W).astype(np.int64)
+            func = int(rng.integers(0, F))
+            u = float(rng.uniform())
+            w_np, s_np = sel_np(s_np, active, warm_col, func, homes, u, t)
+            w_jx, s_jx = sel_jx(
+                s_jx, jnp.asarray(active.astype(np.int32)),
+                jnp.asarray(warm_col.astype(np.int32)), jnp.int32(func),
+                jnp.asarray(homes), jnp.float64(u), jnp.int32(t))
+            assert w_np == int(w_jx), (bal.name, t, active.tolist())
+            if full:
+                assert w_np == -1
+        else:
+            w = int(rng.integers(0, W))
+            func = int(rng.integers(0, F))
+            svc = float(rng.lognormal(0.0, 1.0))
+            n_after = int(rng.integers(0, 3))
+            s_np = oc_np(s_np, w, func, svc, n_after)
+            s_jx = oc_jx(s_jx, jnp.int32(w), jnp.int32(func),
+                         jnp.float64(svc), jnp.int32(n_after))
+        assert set(s_np) == set(s_jx)
+        for k in s_np:
+            np.testing.assert_array_equal(
+                np.asarray(s_np[k]), np.asarray(s_jx[k]),
+                err_msg=f"{bal.name} step {t} state[{k}]")
 
 
 # --------------------------------------------------------------------------

@@ -2,16 +2,23 @@
 
 Covers the benchmark layer of the policy registry: ``sweep_policies``
 accepting newly registered balancers (JSQ2 / RR), the duplicate-load
-row-ordering fix in :mod:`benchmarks.common`, and the serving platform
-running a zoo policy.
+row-ordering fix in :mod:`benchmarks.common`, the serving platform
+running zoo policies, and the carried-state contract (HIKU / DD):
+engine agreement (vectorized scan ≡ numpy oracle ≡ batched vmap),
+``init_state`` registry round-trips, the ready-ring / EMA semantics,
+and a custom stateful balancer registered end-to-end.
 """
 import numpy as np
 import pytest
 
-from repro.core import (ClusterCfg, E_JSQ2_PS, E_LL_PS, E_RR_PS,
+from repro.core import (ClusterCfg, E_DD_PS, E_HIKU_PS, E_JSQ2_PS,
+                        E_LL_PS, E_RR_PS, ZOO_POLICIES, bimodal_exec,
                         synth_workload)
+from repro.policy import get_balancer, register_balancer, resolve, \
+    unregister_balancer
 
 CLUSTER = ClusterCfg(n_workers=4, cores=3, capacity_factor=2)
+STATEFUL_POLICIES = (E_HIKU_PS, E_DD_PS)
 
 
 def _wfn(cluster, load, n, seed):
@@ -63,3 +70,259 @@ def test_serving_kernel_flag_requires_batch_backend():
     cfg = ServeCfg(cluster=CLUSTER)
     with pytest.raises(ValueError, match="no batched kernel"):
         ServingCluster(cfg, E_JSQ2_PS, use_kernel=True)
+
+
+# --------------------------------------------------------------------------
+# Carried-state balancers (HIKU / DD): engine agreement + registry
+# round-trip + decision semantics
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", STATEFUL_POLICIES, ids=lambda p: p.name)
+@pytest.mark.parametrize("wname", ["synth", "bimodal"])
+def test_stateful_golden_engine_agreement(policy, wname):
+    """The vectorized scan engine ≡ the numpy oracle ≡ the batched vmap
+    engine, task-by-task, for the carried-state balancers — the golden
+    contract every stateless balancer already satisfies, extended to
+    state threaded through selection AND per-completion hooks."""
+    from repro.core.sim_ref import simulate_ref
+    from repro.core.simulator import simulate, simulate_many
+    mk = (lambda l, s: _wfn(CLUSTER, l, 300, s)) if wname == "synth" else \
+        (lambda l, s: bimodal_exec(CLUSTER, l, 300, seed=s))
+    for load, seed in ((0.5, 0), (0.9, 1), (1.3, 2)):
+        wl = mk(load, seed)
+        out = simulate(policy, CLUSTER, wl)
+        ref = simulate_ref(policy, CLUSTER, wl)
+        np.testing.assert_array_equal(out.worker, ref.worker)
+        np.testing.assert_allclose(
+            np.nan_to_num(out.response, nan=-1.0),
+            np.nan_to_num(ref.response, nan=-1.0), atol=1e-9)
+        np.testing.assert_array_equal(out.cold, ref.cold)
+        np.testing.assert_array_equal(out.rejected, ref.rejected)
+        batch = simulate_many(policy, CLUSTER, [wl, wl])
+        np.testing.assert_array_equal(
+            np.nan_to_num(batch.response[0], nan=-1.0),
+            np.nan_to_num(out.response, nan=-1.0))
+        np.testing.assert_array_equal(batch.response[0], batch.response[1])
+
+
+def test_init_state_registry_round_trip():
+    """init_state survives the registry: fresh, isolated copies per call,
+    exposed through resolve() on every backend with the hook attached."""
+    for name, keys in (("HIKU", {"ring", "in_ring", "head", "tail"}),
+                       ("DD", {"est", "ew"})):
+        bal = get_balancer(name)
+        assert bal.stateful
+        s1 = bal.init_state(5, 7)
+        s2 = bal.init_state(5, 7)
+        assert set(s1) == keys
+        for k in keys:      # independent copies — mutation can't leak
+            arr = np.asarray(s1[k])
+            if arr.ndim:
+                arr[...] = -123
+                assert not np.array_equal(np.asarray(s1[k]),
+                                          np.asarray(s2[k]))
+        for backend in ("np", "jax", "pallas"):
+            res = resolve(f"E/{name}/PS", backend=backend, cluster=CLUSTER)
+            assert res.stateful
+            assert res.init_state is bal.init_state
+            assert callable(res.select) and callable(res.on_complete)
+    # stateless balancers resolve without state machinery
+    res = resolve("E/LL/PS", backend="np", cluster=CLUSTER)
+    assert not res.stateful and res.on_complete is None
+
+
+def test_hiku_ready_ring_semantics():
+    """Pull-based decisions step by step: pops drain the advertised ring
+    FIFO, an empty ring falls back to least-loaded, and a completion
+    that idles a worker re-advertises it exactly once."""
+    bal = get_balancer("HIKU")
+    sel, oc = bal.make_np(2, 4)
+    state = bal.init_state(3, 2)
+    active = np.array([1, 2, 1])
+    warm = np.zeros(3, dtype=np.int64)
+    homes = np.zeros(2, dtype=np.int32)
+    # ring starts [0, 1, 2]: three pops in FIFO order
+    for expect in (0, 1, 2):
+        w, state = sel(state, active, warm, 0, homes, 0.5, 0)
+        assert w == expect
+    # ring empty -> least-loaded fallback (first argmin index)
+    w, state = sel(state, active, warm, 0, homes, 0.5, 0)
+    assert w == 0 and int(state["tail"]) == int(state["head"])
+    # completion leaving tasks behind does NOT advertise…
+    state = oc(state, 1, 0, 1.0, 1)
+    assert int(state["tail"]) == int(state["head"])
+    # …the one that idles worker 1 does, exactly once (flag-gated)
+    state = oc(state, 1, 0, 1.0, 0)
+    state = oc(state, 1, 0, 1.0, 0)
+    assert int(state["tail"]) - int(state["head"]) == 1
+    w, state = sel(state, active, warm, 0, homes, 0.5, 0)
+    assert w == 1
+    # full cluster rejects and must hand back the state unchanged
+    full = np.full(3, 4)
+    w, state2 = sel(state, full, warm, 0, homes, 0.5, 0)
+    assert w == -1
+    for k in state:
+        assert np.array_equal(np.asarray(state[k]), np.asarray(state2[k]))
+
+
+def test_hiku_busy_pop_falls_back_to_least_loaded():
+    """A ring member busied WITHOUT a select pop (serving re-dispatch
+    migrations do this) must not be handed out: the pop validates the
+    candidate's slot and falls back to least-loaded, un-advertising the
+    stale entry — identically on both backends (parity lanes cover the
+    jax side)."""
+    bal = get_balancer("HIKU")
+    sel, _ = bal.make_np(2, 4)
+    state = bal.init_state(3, 2)
+    warm = np.zeros(3, dtype=np.int64)
+    homes = np.zeros(2, dtype=np.int32)
+    # worker 0 (ring head) externally saturated: fall back to LL (w=2)
+    active = np.array([4, 3, 0])
+    w, state = sel(state, active, warm, 0, homes, 0.5, 0)
+    assert w == 2
+    # the stale head was consumed: next pop yields worker 1
+    w, state = sel(state, np.zeros(3, dtype=np.int64), warm, 0, homes,
+                   0.5, 1)
+    assert w == 1
+
+
+def test_frontend_dispatches_stateful_balancers(monkeypatch):
+    """HermesFrontend threads carried state through live dispatch: HIKU
+    rotates through the advertised ring (each synchronous completion
+    re-advertises its worker), DD stays within worker bounds."""
+    from repro.serving import backends as sb
+
+    def fake_execute(self, inv):
+        inv.tokens = np.zeros(inv.n_new, np.int32)
+        inv.cold = inv.func not in self.warm
+        self.warm.setdefault(inv.func, None)
+        inv.response_s = 1e-3
+        return inv
+
+    monkeypatch.setattr(sb.InProcessWorker, "execute", fake_execute)
+    reg = sb.ModelRegistry()
+    reg.register("a", None)
+    reg.register("b", None)
+    for name, expect in (("HIKU", [0, 1, 2, 0, 1, 2]), ("DD", None)):
+        fe = sb.HermesFrontend(reg, n_workers=3, cores=2, balancer=name)
+        assert fe._lb_state is not None
+        got = []
+        for i in range(6):
+            inv = sb.Invocation(func="ab"[i % 2],
+                                prompt=np.zeros(4, np.int32), n_new=2)
+            got.append(fe.dispatch(inv).worker)
+        if expect is not None:
+            assert got == expect, got
+        assert all(0 <= w < 3 for w in got)
+
+
+def test_dd_estimates_drive_dispatch():
+    """DD learns per-function durations and packs by expected work."""
+    bal = get_balancer("DD")
+    sel, oc = bal.make_np(2, 4)
+    state = bal.init_state(2, 2)
+    homes = np.zeros(2, dtype=np.int32)
+    warm = np.zeros(2, dtype=np.int64)
+    active = np.zeros(2, dtype=np.int64)
+    # teach it: func 0 is long (10 s), func 1 short (0.1 s)
+    for _ in range(20):
+        state = oc(state, 0, 0, 10.0, 0)
+        state = oc(state, 1, 1, 0.1, 0)
+    assert state["est"][0] > 5.0 > 1.0 > state["est"][1]
+    state = dict(state, ew=np.zeros(2))
+    # a long invocation lands on worker 0 and charges ~10 s of work…
+    w, state = sel(state, active, warm, 0, homes, 0.5, 0)
+    assert w == 0 and state["ew"][0] > 5.0
+    # …so the next two (short) invocations prefer worker 1
+    w, state = sel(state, np.array([1, 0]), warm, 1, homes, 0.5, 1)
+    assert w == 1
+    w, state = sel(state, np.array([1, 1]), warm, 1, homes, 0.5, 2)
+    assert w == 1
+    # completion discharges the worker (clamped at zero)
+    state = oc(state, 0, 0, 10.0, 0)
+    assert state["ew"][0] < 5.0 and (state["ew"] >= 0.0).all()
+
+
+def test_register_custom_stateful_balancer_end_to_end():
+    """The carried-state contract is open: a sticky last-worker balancer
+    registered in ~20 lines runs through both engines in agreement (the
+    README 'HIKU in 20 lines' shape)."""
+    from repro.core import parse_policy
+    from repro.core.sim_ref import simulate_ref
+    from repro.core.simulator import simulate
+
+    def init_state(n_workers, n_functions):
+        return {"last": np.int32(-1)}
+
+    def make_np(cores, slots):
+        def select(state, active, warm_col, func, func_home, u, idx):
+            has_slot = active < slots
+            if not has_slot.any():
+                return -1, state
+            last = int(state["last"])
+            if 0 <= last and active[last] < slots:
+                return last, state
+            w = int(np.argmin(np.where(has_slot, active, 1 << 40)))
+            return w, dict(state, last=np.int32(w))
+
+        def on_complete(state, w, func, service, n_active_after):
+            return state
+        return select, on_complete
+
+    def make_jax(cores, slots):
+        import jax.numpy as jnp
+
+        def select(state, active, warm_col, func, func_home, u, idx):
+            has_slot = active < slots
+            last = state["last"]
+            sticky = (last >= 0) & (active[jnp.maximum(last, 0)] < slots)
+            ll = jnp.argmin(jnp.where(has_slot, active.astype(jnp.int32),
+                                      jnp.int32(1 << 30))).astype(jnp.int32)
+            w = jnp.where(sticky, last, ll)
+            new = dict(state, last=jnp.where(
+                sticky, last, ll).astype(state["last"].dtype))
+            return jnp.where(has_slot.any(), w, -1).astype(jnp.int32), new
+
+        def on_complete(state, w, func, service, n_active_after):
+            return state
+        return select, on_complete
+
+    register_balancer("STICKY", make_np=make_np, make_jax=make_jax,
+                      init_state=init_state, doc="sticky last choice")
+    try:
+        pol = parse_policy("E/STICKY/PS")
+        wl = _wfn(CLUSTER, 0.8, 250, 3)
+        out = simulate(pol, CLUSTER, wl)
+        ref = simulate_ref(pol, CLUSTER, wl)
+        np.testing.assert_array_equal(out.worker, ref.worker)
+        # sticky behavior is visible: long same-worker runs
+        assert (np.diff(ref.worker[~ref.rejected]) == 0).mean() > 0.5
+    finally:
+        unregister_balancer("STICKY")
+
+
+def test_sweep_policies_accepts_stateful_balancers():
+    from benchmarks.common import registry_policies, sweep_policies
+    rows = sweep_policies(STATEFUL_POLICIES, CLUSTER, [0.5, 0.9], 150,
+                          _wfn)
+    assert {r["policy"] for r in rows} == {"E/HIKU/PS", "E/DD/PS"}
+    assert all(np.isfinite(r["slow_p99"]) for r in rows)
+    # registry_policies folds every registered balancer into a sweep list
+    names = {p.name for p in registry_policies(ZOO_POLICIES)}
+    assert {"E/HIKU/PS", "E/DD/PS", "E/LOC/PS"} <= names
+
+
+def test_serving_platform_runs_stateful_policies():
+    from repro.core.sim_ref import simulate_ref
+    from repro.serving.engine import ServeCfg, ServingCluster
+    wl = _wfn(CLUSTER, 0.6, 300, 0)
+    cfg = ServeCfg(cluster=CLUSTER, cold_start_s=0.2)
+    for pol in STATEFUL_POLICIES:
+        out = ServingCluster(cfg, pol).run(wl)
+        assert np.isfinite(out.response[~out.rejected]).all()
+    # with zero platform overheads the serving loop IS the oracle
+    cfg0 = ServeCfg(cluster=CLUSTER, cold_start_s=0.0, ctrl_latency_s=0.0)
+    for pol in STATEFUL_POLICIES:
+        sv = ServingCluster(cfg0, pol).run(wl)
+        rf = simulate_ref(pol, CLUSTER, wl)
+        np.testing.assert_array_equal(sv.worker, rf.worker)
