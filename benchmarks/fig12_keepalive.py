@@ -1,0 +1,100 @@
+"""Fig. 12 (extension) — the keep-alive axis: lifecycle policies swept.
+
+The container-lifecycle subsystem (:mod:`repro.lifecycle`) makes
+keep-alive a sweepable scheduling axis like the balancer space.  Two
+lanes, both on the batched ``simulate_many`` engine:
+
+* **budget lane** (``azure-cold-heavy``) — Hermes under ``NONE`` /
+  ``FIXED_TTL`` / ``HYBRID_HIST`` at one *equal* per-worker warm-pool
+  budget.  Expected shape: the learned per-function windows of
+  ``HYBRID_HIST`` (Shahrad et al. ATC'20) cover each pool's actual
+  reuse intervals and release the rest of the budget early, so it
+  cold-starts less than one-size-fits-all ``FIXED_TTL``; ``NONE`` is
+  the cold-start upper bound.
+* **balancer lane** (``azure-diurnal``) — every lifecycle-relevant
+  baseline (Hermes, least-loaded, vanilla LOC) under ``FIXED_TTL``:
+  locality-aware packing must keep its cold-start edge over
+  least-loaded once executors actually expire (the Fig 7 story with a
+  finite keep-alive, where it is harder — LL's spreading now pays the
+  idle-timeout on every worker).
+
+Every row carries a ``keepalive`` column so ``BENCH_report.json``
+distinguishes lifecycle configs in the perf trajectory.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import (E_LL_PS, E_LOC_PS, HERMES, LifecycleCfg,
+                        PAPER_TESTBED, WORKLOADS, stack_workloads,
+                        summarize)
+from repro.core.simulator import simulate_many
+
+from .common import write_csv
+
+# Budget lane: equal warm-pool budget, TTL short enough that rare
+# functions' reuse intervals straddle it (HYBRID_HIST's histogram spans
+# 4x the TTL, so it can learn windows FIXED_TTL cannot express).
+BUDGET_WORKLOAD = "azure-cold-heavy"
+BUDGET_TTL_S = 10.0
+BUDGET_MAX_IDLE = 4
+BUDGET_KEEPALIVES = ("NONE", "FIXED_TTL", "HYBRID_HIST")
+
+# Balancer lane: the Fig 7 locality story under a finite keep-alive.
+BALANCER_WORKLOAD = "azure-diurnal"
+BALANCER_TTL_S = 10.0
+BALANCER_SCHEDULERS = {"hermes": HERMES, "least-loaded": E_LL_PS,
+                       "vanilla-ow": E_LOC_PS}
+
+COLD_PRESET = "openwhisk"
+
+
+def _batch(wname, loads, n, seed=1):
+    wfn = WORKLOADS[wname]
+    return stack_workloads([wfn(PAPER_TESTBED, load, n, seed=seed)
+                            for load in loads])
+
+
+def _sweep(wname, wb, cluster, schedulers, keepalive, loads):
+    rows = []
+    for sname, pol in schedulers.items():
+        t0 = time.time()
+        out = simulate_many(pol, cluster, wb)
+        cell_s = (time.time() - t0) / len(loads)
+        for r, load in enumerate(loads):
+            s = summarize(out.response[r], wb.service[r], out.cold[r],
+                          out.rejected[r], float(out.server_time[r]),
+                          float(out.core_time[r]),
+                          float(out.end_time[r]))
+            rows.append({"workload": wname, "scheduler": sname,
+                         "keepalive": keepalive, "load": load,
+                         "wall_s": round(cell_s, 3), **s.row()})
+    return rows
+
+
+def run(quick: bool = True):
+    loads = [0.3, 0.7] if quick else [0.2, 0.3, 0.5, 0.7, 0.85]
+    n = 4000 if quick else 15000
+    rows = []
+    wb = _batch(BUDGET_WORKLOAD, loads, n)   # shared across keep-alives
+    for ka in BUDGET_KEEPALIVES:
+        cl = PAPER_TESTBED._replace(lifecycle=LifecycleCfg(
+            keepalive=ka, ttl_s=BUDGET_TTL_S, max_idle=BUDGET_MAX_IDLE,
+            coldstart=COLD_PRESET))
+        rows += _sweep(BUDGET_WORKLOAD, wb, cl, {"hermes": HERMES}, ka,
+                       loads)
+    cl = PAPER_TESTBED._replace(lifecycle=LifecycleCfg(
+        keepalive="FIXED_TTL", ttl_s=BALANCER_TTL_S,
+        coldstart=COLD_PRESET))
+    rows += _sweep(BALANCER_WORKLOAD, _batch(BALANCER_WORKLOAD, loads, n),
+                   cl, BALANCER_SCHEDULERS, "FIXED_TTL", loads)
+    write_csv("fig12_keepalive.csv", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['workload']:18s} {r['scheduler']:13s} "
+              f"ka={r['keepalive']:12s} load={r['load']:.2f} "
+              f"cold%={100 * r['cold_frac']:5.1f} "
+              f"slow99={r['slow_p99']:10.1f}")

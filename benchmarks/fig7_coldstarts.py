@@ -1,28 +1,76 @@
-"""Paper Fig. 7 — % of invocations that cold-start, per scheduler.
+"""Paper Fig. 7 — % of invocations that cold-start, per scheduler,
+now crossed with the container-lifecycle keep-alive axis.
 
-Expected reproduction: Hermes lowest on skewed workloads (locality-aware
-packing); Least-Loaded highest at low load (spreads 50 functions over
-all 8 invokers); Vanilla lowest only on the balanced workload.
+Two row families (every row carries a ``keepalive`` column):
 
-Derives from fig6's batched sweep; the engine compile cache makes the
-re-run nearly free.
+* ``legacy-inf`` — the paper's original model (warm set never expires),
+  derived from fig6's batched sweep as before.  Expected reproduction:
+  Hermes lowest on skewed workloads (locality-aware packing);
+  Least-Loaded highest at low load (spreads 50 functions over all 8
+  invokers); Vanilla lowest only on the balanced workload.
+* ``NONE`` / ``FIXED_TTL`` / ``HYBRID_HIST`` — the same balancers under
+  real container lifecycles (:mod:`repro.lifecycle`): executors expire,
+  so the locality gap *widens* — spreading policies now pay the
+  idle-timeout on every worker they touch.
+
+Derives the legacy family from fig6's sweep (the engine compile cache
+makes the re-run nearly free); the lifecycle families run their own
+batched sweeps, one compiled engine per (keep-alive, scheduler).
 """
 from __future__ import annotations
+
+from repro.core import (E_LL_PS, E_LOC_PS, HERMES, LifecycleCfg,
+                        PAPER_TESTBED, WORKLOADS, stack_workloads,
+                        summarize)
+from repro.core.simulator import simulate_many
 
 from .common import write_csv
 from .fig6_slowdown import run as run_fig6
 
+#: keep-alive configs swept against every scheduler below.
+KEEPALIVES = ("NONE", "FIXED_TTL", "HYBRID_HIST")
+TTL_S = 10.0
+SCHEDULERS = {"hermes": HERMES, "least-loaded": E_LL_PS,
+              "vanilla-ow": E_LOC_PS}
+LIFECYCLE_WORKLOADS = ("ms-trace", "azure-diurnal")
+
 
 def run(quick: bool = True):
-    rows = run_fig6(quick, zoo=False)
-    cold = [{"workload": r["workload"], "scheduler": r["scheduler"],
-             "load": r["load"], "rps": r["rps"],
-             "cold_pct": 100.0 * r["cold_frac"]} for r in rows]
-    write_csv("fig7_coldstarts.csv", cold)
-    return cold
+    rows = [{"workload": r["workload"], "scheduler": r["scheduler"],
+             "keepalive": "legacy-inf", "load": r["load"],
+             "rps": r["rps"], "cold_pct": 100.0 * r["cold_frac"]}
+            for r in run_fig6(quick, zoo=False)]
+    loads = [0.3, 0.7] if quick else [0.1, 0.3, 0.5, 0.7, 0.9]
+    n = 4000 if quick else 15000
+    for wname in LIFECYCLE_WORKLOADS:
+        # one batch per workload, shared by every keep-alive config
+        # (generation — incl. the trace replay — is load-independent of
+        # the lifecycle axis)
+        wfn = WORKLOADS[wname]
+        wb = stack_workloads([wfn(PAPER_TESTBED, load, n, seed=1)
+                              for load in loads])
+        for ka in KEEPALIVES:
+            cl = PAPER_TESTBED._replace(lifecycle=LifecycleCfg(
+                keepalive=ka, ttl_s=TTL_S, coldstart="openwhisk"))
+            for sname, pol in SCHEDULERS.items():
+                out = simulate_many(pol, cl, wb)
+                for r, load in enumerate(loads):
+                    rps = wb.n / max(float(wb.arrival[r, -1]), 1e-9)
+                    s = summarize(out.response[r], wb.service[r],
+                                  out.cold[r], out.rejected[r],
+                                  float(out.server_time[r]),
+                                  float(out.core_time[r]),
+                                  float(out.end_time[r]))
+                    rows.append({"workload": wname, "scheduler": sname,
+                                 "keepalive": ka, "load": load,
+                                 "rps": round(rps, 2),
+                                 "cold_pct": 100.0 * s.cold_frac})
+    write_csv("fig7_coldstarts.csv", rows)
+    return rows
 
 
 if __name__ == "__main__":
     for r in run():
         print(f"{r['workload']:18s} {r['scheduler']:13s} "
-              f"load={r['load']:.2f} cold%={r['cold_pct']:5.1f}")
+              f"ka={r['keepalive']:12s} load={r['load']:.2f} "
+              f"cold%={r['cold_pct']:5.1f}")

@@ -51,7 +51,8 @@ def main() -> None:
 
     from . import (fig2_policy_space, fig3_srpt, fig4_scale, fig6_slowdown,
                    fig7_coldstarts, fig8_resources, fig9_robustness,
-                   fig10_trace_replay, fig11_policy_zoo, tab_overhead)
+                   fig10_trace_replay, fig11_policy_zoo, fig12_keepalive,
+                   tab_overhead)
 
     print("== fig2: policy space (4x12 cores, Azure workload) ==",
           flush=True)
@@ -226,6 +227,33 @@ def main() -> None:
               f"HIKU p99={mh['slow_p99']:.1f} DD p99={md['slow_p99']:.1f} "
               f"LL p99={ml['slow_p99']:.1f}")
 
+    print("== fig12: container lifecycle / keep-alive axis ==", flush=True)
+    f12 = fig12_keepalive.run(quick)
+    bud = _by(f12, workload=fig12_keepalive.BUDGET_WORKLOAD,
+              scheduler="hermes")
+    cold_of = {ka: sum(r["cold_frac"] for r in bud if r["keepalive"] == ka)
+               for ka in fig12_keepalive.BUDGET_KEEPALIVES}
+    ok &= _claim("Lifecycle: HYBRID_HIST fewer cold starts than "
+                 "FIXED_TTL at equal warm-pool budget (learned "
+                 "per-function windows)",
+                 cold_of["HYBRID_HIST"] < cold_of["FIXED_TTL"],
+                 f"HYBRID={cold_of['HYBRID_HIST']:.3f} vs "
+                 f"FIXED={cold_of['FIXED_TTL']:.3f} "
+                 f"(summed cold_frac across loads)")
+    ok &= _claim("Lifecycle: NONE is the cold-start upper bound",
+                 cold_of["NONE"] >= cold_of["FIXED_TTL"]
+                 and cold_of["NONE"] >= cold_of["HYBRID_HIST"],
+                 f"NONE={cold_of['NONE']:.3f}")
+    bal12 = _by(f12, workload=fig12_keepalive.BALANCER_WORKLOAD)
+    h12 = sum(r["cold_frac"] for r in bal12 if r["scheduler"] == "hermes")
+    l12 = sum(r["cold_frac"] for r in bal12
+              if r["scheduler"] == "least-loaded")
+    ok &= _claim("Lifecycle: Hermes keeps its cold-start edge over LL "
+                 "under FIXED_TTL on azure-diurnal",
+                 h12 < l12,
+                 f"hermes={h12:.3f} vs LL={l12:.3f} "
+                 f"(summed cold_frac across loads)")
+
     print("== §6.6: scheduler overhead ==", flush=True)
     tov = tab_overhead.run(quick)
     py = {r["scheduler"]: r for r in tov if r["impl"] == "python"}
@@ -249,7 +277,7 @@ def main() -> None:
         "engine_cache": engine_cache_stats(),
         "figures": {"fig2": f2, "fig3": f3, "fig4": f4, "fig6": f6,
                     "fig8": f8, "fig9": f9, "fig10": f10, "fig11": f11,
-                    "tab_overhead": tov},
+                    "fig12": f12, "tab_overhead": tov},
     }
     os.makedirs(OUT_DIR, exist_ok=True)
     report_path = os.path.join(OUT_DIR, "BENCH_report.json")

@@ -7,6 +7,12 @@ policy's decision function, plus the batched Pallas ``hermes_select``
 kernel (interpret mode on CPU — on TPU the batch amortizes one HBM read
 of cluster state).  The reproduction claim is relative: Hermes costs no
 more than least-loaded/random — scheduling is not the bottleneck.
+
+Keep-alive decisions are timed too (``impl="lifecycle-np"`` rows): one
+"decision" is the per-placement lifecycle work a controller adds — the
+materialized warm-column mask plus, for adaptive policies, the idle-gap
+observation and window refit.  Rows carry a ``keepalive`` column so the
+``BENCH_report.json`` trajectory separates lifecycle configs.
 """
 from __future__ import annotations
 
@@ -46,6 +52,7 @@ def run(quick: bool = True):
                              float(us[i]), cl.cores, cl.slots)
         dt = time.perf_counter() - t0
         rows.append({"scheduler": name, "impl": "python",
+                     "keepalive": "-",
                      "decisions_per_s": N / dt,
                      "us_per_decision": dt / N * 1e6})
     # carried-state balancers go through the stateful contract (the
@@ -64,6 +71,35 @@ def run(quick: bool = True):
                            float(us[i]), i)
         dt = time.perf_counter() - t0
         rows.append({"scheduler": label, "impl": "python",
+                     "keepalive": "-",
+                     "decisions_per_s": N / dt,
+                     "us_per_decision": dt / N * 1e6})
+    # keep-alive decision cost (repro.lifecycle): per placement, the
+    # materialized warm-column mask + (adaptive policies) the idle-gap
+    # observation and window refit — the honest lifecycle overhead a
+    # controller pays on top of worker selection
+    from repro.core import ClusterCfg
+    from repro.lifecycle import (LifecycleCfg, LifecycleRuntime,
+                                 resolve_lifecycle)
+    times = np.cumsum(rng.exponential(0.1, size=N))
+    for ka in ("FIXED_TTL", "HYBRID_HIST"):
+        lcl = ClusterCfg(n_workers=W, cores=cl.cores,
+                         lifecycle=LifecycleCfg(keepalive=ka, ttl_s=10.0))
+        rt = LifecycleRuntime(
+            resolve_lifecycle(lcl, backend="np", n_functions=F), W, F)
+        ws = rng.integers(0, W, N)
+        wpool = warm.astype(np.int64).copy()
+        for j in range(4 * W * F):     # history so observations fire
+            rt.on_complete(wpool, j % W, (j // W) % F, 0.0)
+        t0 = time.perf_counter()
+        for i in range(N):
+            f = int(funcs[i])
+            now = float(times[i])
+            rt.materialized_col(warm[:, f], f, now)
+            rt.observe_place(int(ws[i]), f, now)
+        dt = time.perf_counter() - t0
+        rows.append({"scheduler": f"keepalive({ka})",
+                     "impl": "lifecycle-np", "keepalive": ka,
                      "decisions_per_s": N / dt,
                      "us_per_decision": dt / N * 1e6})
     # batched Pallas kernel (Hermes) — sequential semantics preserved
@@ -81,6 +117,7 @@ def run(quick: bool = True):
         out[0].block_until_ready()
     dt = (time.perf_counter() - t0) / reps
     rows.append({"scheduler": "hermes(H)", "impl": "pallas-batched",
+                 "keepalive": "-",
                  "decisions_per_s": N / dt,
                  "us_per_decision": dt / N * 1e6})
     write_csv("tab_overhead.csv", rows)

@@ -35,6 +35,25 @@ the non-stationary ``azure-*`` trace-replay scenarios
 
     PYTHONPATH=src python examples/policy_explorer.py \
         --workload azure-bursty --loads 0.5 0.7 --reps 3
+
+Container lifecycle
+-------------------
+``--keepalive`` threads a keep-alive policy from the
+:mod:`repro.lifecycle` registry through whichever engine you pick —
+``NONE`` (tear down at completion), ``FIXED_TTL`` (``--ttl`` seconds),
+``HYBRID_HIST`` (learned per-function pre-warm + keep-alive windows),
+or anything you add via :func:`repro.lifecycle.register_keepalive`.
+``--max-idle`` caps the per-worker warm pool and ``--cold-start-preset``
+swaps the scalar penalty for per-function provider costs.  Without
+``--keepalive``, executors never expire: a preset or budget alone runs
+with an *infinite* keep-alive window, and with every lifecycle flag at
+its default the explorer keeps the exact legacy warm-pool model.
+``--list-policies`` also prints the registered keep-alive policies and
+cold-start presets::
+
+    PYTHONPATH=src python examples/policy_explorer.py \
+        --policies E/H/PS E/LL/PS --keepalive HYBRID_HIST --ttl 30 \
+        --max-idle 8 --cold-start-preset openwhisk --loads 0.3 0.7
 """
 import argparse
 
@@ -53,6 +72,18 @@ def main() -> None:
     ap.add_argument("-n", type=int, default=4000)
     ap.add_argument("--engine", choices=["sim", "serve"], default="sim",
                     help="pure simulator vs serving platform (cold starts)")
+    ap.add_argument("--keepalive", metavar="NAME",
+                    help="container keep-alive policy (repro.lifecycle "
+                         "registry); omit for the legacy keep-forever "
+                         "warm pool")
+    ap.add_argument("--ttl", type=float, default=60.0,
+                    help="keep-alive window seconds")
+    ap.add_argument("--max-idle", type=int, default=0,
+                    help="per-worker warm-pool budget (0 = unbounded)")
+    ap.add_argument("--cold-start-preset", metavar="NAME",
+                    default="scalar",
+                    help="per-function cold-start preset ('scalar' = "
+                         "legacy single penalty)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--reps", type=int, default=1,
                     help="seed replications per load point (sim engine); "
@@ -62,6 +93,8 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.list_policies:
+        from repro.lifecycle import (cold_preset_names, get_keepalive,
+                                     keepalive_names)
         from repro.policy import (balancer_names, get_balancer, get_sched,
                                   sched_names)
         print("balancers (LB):")
@@ -72,18 +105,30 @@ def main() -> None:
         for name in sched_names():
             print(f"  {name:6s} {get_sched(name).doc}")
         print("bindings (T): E (early), L (late; 'L/*/*' alias works)")
+        print("keep-alive policies (--keepalive):")
+        for name in keepalive_names():
+            ka = get_keepalive(name)
+            print(f"  {name:12s} [{','.join(ka.backends())}]  {ka.doc}")
+        print(f"cold-start presets (--cold-start-preset): "
+              f"{', '.join(cold_preset_names())}")
         return
 
     from repro.core import (ClusterCfg, WORKLOADS, parse_policy,
                             replicate_workload, summarize,
                             summarize_batch_sim)
     from repro.core.simulator import simulate_many
+    from repro.lifecycle import lifecycle_from_flags
     from repro.serving.engine import ServeCfg, ServingCluster
 
     if args.workload not in WORKLOADS:
         ap.error(f"unknown --workload {args.workload!r}; choose from "
                  f"{', '.join(sorted(WORKLOADS))}")
-    cl = ClusterCfg(n_workers=args.workers, cores=args.cores)
+    # named ValueError on unknown names; a preset/budget without an
+    # explicit --keepalive gets an infinite window (no surprise expiry)
+    lifecycle = lifecycle_from_flags(args.keepalive, args.ttl,
+                                     args.max_idle, args.cold_start_preset)
+    cl = ClusterCfg(n_workers=args.workers, cores=args.cores,
+                    lifecycle=lifecycle)
     wfn = WORKLOADS[args.workload]
     ci = " ±ci95" if args.reps > 1 and args.engine == "sim" else ""
     print(f"{'policy':10s} {'load':>5s} {'slow50':>8s} "

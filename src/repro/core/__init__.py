@@ -5,6 +5,7 @@ precision); all model code in this repo pins explicit dtypes, so this is
 safe process-wide.
 """
 from .cluster import ClusterCfg, PAPER_LARGE, PAPER_SMALL, PAPER_TESTBED
+from ..lifecycle import LifecycleCfg
 from .taxonomy import (Binding, LoadBalance, PolicySpec, WorkerSched,
                        parse_policy, FIG2_POLICIES, EVAL_POLICIES, HERMES,
                        LATE_BINDING, E_LL_PS, E_LL_FCFS, E_LL_SRPT, E_LOC_PS,
@@ -26,7 +27,8 @@ from ..trace.catalog import TRACE_SCENARIOS
 WORKLOADS.update(TRACE_SCENARIOS)
 
 __all__ = [
-    "ClusterCfg", "PAPER_LARGE", "PAPER_SMALL", "PAPER_TESTBED",
+    "ClusterCfg", "LifecycleCfg", "PAPER_LARGE", "PAPER_SMALL",
+    "PAPER_TESTBED",
     "Binding", "LoadBalance", "PolicySpec", "WorkerSched", "parse_policy",
     "FIG2_POLICIES", "EVAL_POLICIES", "HERMES", "LATE_BINDING", "E_LL_PS",
     "E_LL_FCFS", "E_LL_SRPT", "E_LOC_PS", "E_LOC_FCFS", "E_R_PS", "E_R_FCFS",

@@ -1,7 +1,9 @@
 """Cluster configuration for the scheduling simulator and serving runtime."""
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
+
+from repro.lifecycle.config import LifecycleCfg
 
 
 class ClusterCfg(NamedTuple):
@@ -22,6 +24,11 @@ class ClusterCfg(NamedTuple):
     # time", §3.2); the OpenWhisk runtime experiences a real one, which the
     # serving layer models explicitly.
     cold_start_penalty: float = 0.0
+    # Container-lifecycle model (repro.lifecycle): keep-alive policy,
+    # warm-pool budget and cold-start preset.  ``None`` — the default —
+    # is the pre-lifecycle model, bit-for-bit: an ever-growing warm set
+    # with no idle-timeout and the scalar penalty above.
+    lifecycle: Optional[LifecycleCfg] = None
 
     @property
     def slots(self) -> int:

@@ -29,10 +29,21 @@ exactly):
 * Warm executors: each completion leaves one idle warm executor for its
   function on its worker.  A placement consumes a matching warm executor
   (warm start) if present, else it is a cold start; if the worker's slots
-  are exhausted by busy+idle executors, the idle executor of the function
-  with the most idle executors is evicted.  Late binding checks warmth at
-  *dispatch* (queue pop) time, matching the paper's observation that
-  queuing increases warm hits (§6.3).
+  are exhausted by busy+idle executors, an idle executor is evicted —
+  the function with the most idle executors by default, the LRU pool
+  (oldest idle-since timestamp, ties toward the lowest function id)
+  under a lifecycle config.  Both engines share this tie-breaking
+  contract exactly (``tests/test_simulator.py`` locks it with a
+  randomized full-warm-pool agreement test).  Late binding checks
+  warmth at *dispatch* (queue pop) time, matching the paper's
+  observation that queuing increases warm hits (§6.3).
+* Container lifecycle (``cluster.lifecycle`` set): warm pools carry
+  idle-since clocks; a keep-alive policy from :mod:`repro.lifecycle`
+  masks pools alive/materialized, cold starts charge the per-function
+  preset cost, and the ``max_idle`` budget LRU-evicts at completions.
+  All lifecycle state transitions go through the shared
+  :class:`repro.lifecycle.LifecycleRuntime`, which the vectorized
+  engine mirrors op for op.
 * After the last arrival the cluster is drained to empty; only rejected
   invocations have NaN response.
 """
@@ -43,6 +54,7 @@ import math
 
 import numpy as np
 
+from repro.lifecycle import LifecycleRuntime, resolve_lifecycle
 from repro.policy import resolve
 
 from .cluster import ClusterCfg
@@ -98,6 +110,9 @@ def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload
     # carried-state balancers thread a state pytree through selection
     # and receive a hook per completion (repro.policy.registry contract)
     lb_state = res.init_state(W, F) if (res.stateful and not late) else None
+    # container lifecycle (None = legacy infinite keep-alive, bit-exact)
+    lres = resolve_lifecycle(cluster, backend="np", n_functions=F)
+    life = LifecycleRuntime(lres, W, F) if lres is not None else None
 
     def set_rates(w: int) -> None:
         ts = tasks[w]
@@ -114,20 +129,33 @@ def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload
     def start_task(w: int, arr_idx: int, start_service: bool) -> None:
         """Place arrival ``arr_idx`` on worker ``w`` (slot already free)."""
         f = int(wl.func[arr_idx])
-        if warm[w, f] > 0:
+        avail = int(warm[w, f]) if life is None \
+            else life.materialized_at(w, f, warm[w, f], now)
+        if avail > 0:
             warm[w, f] -= 1
             is_cold = False
         else:
             is_cold = True
-            idle = int(warm[w].sum())
+            idle = int(warm[w].sum()) if life is None \
+                else int(life.eff_row(warm[w], w, now).sum())
             if len(tasks[w]) + idle >= S:      # evict an idle executor
-                victim = int(np.argmax(warm[w]))
+                # victim: most idle executors (legacy) / LRU pool
+                # (lifecycle) — first index breaks ties, the contract
+                # shared with the vectorized engine
+                victim = int(np.argmax(warm[w])) if life is None \
+                    else life.evict_victim(warm[w], w, now)
                 warm[w, victim] -= 1
         cold[arr_idx] = is_cold
         worker_of[arr_idx] = w
         svc = float(wl.service[arr_idx])
         if is_cold:
-            svc += cluster.cold_start_penalty
+            svc += cluster.cold_start_penalty if life is None \
+                else life.cold_cost(f, cluster.cold_start_penalty)
+        if life is not None:
+            # adaptive keep-alive observes the placed pool's idle age
+            # AFTER the warm/cold decision (same order as the
+            # vectorized engine's in-place observation block)
+            life.observe_place(w, f, now)
         tasks[w].append(_Task(arr_idx=arr_idx, func=f,
                               arrival=float(wl.arrival[arr_idx]),
                               remaining=svc, seq=arr_idx))
@@ -174,7 +202,10 @@ def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload
                     t.remaining -= t.rate * tau
                     if t.remaining <= EPS:
                         response[t.arr_idx] = now - t.arrival
-                        warm[w, t.func] += 1
+                        if life is None:
+                            warm[w, t.func] += 1
+                        else:
+                            life.on_complete(warm, w, t.func, now)
                         n_alive -= 1
                         if lb_state is not None:
                             lb_state = res.on_complete(
@@ -199,11 +230,13 @@ def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload
                 queue.append(i)
         else:
             f = int(wl.func[i])
+            wcol = warm[:, f] if life is None \
+                else life.materialized_col(warm[:, f], f, now)
             if lb_state is not None:
-                w, lb_state = res.select(lb_state, active, warm[:, f], f,
+                w, lb_state = res.select(lb_state, active, wcol, f,
                                          wl.func_home, float(wl.u_lb[i]), i)
             else:
-                w = res.select(active, warm[:, f], f, wl.func_home,
+                w = res.select(active, wcol, f, wl.func_home,
                                float(wl.u_lb[i]), i)
             if w < 0:
                 rejected[i] = True

@@ -43,7 +43,21 @@ State layout (``W`` workers × ``S`` slots):
 ``task_idx``    i32       arrival index (doubles as FCFS seq); -1 empty
 ``warm``        i32       ``[W, F+1]`` idle warm executors (+1 pad col)
 ``queue``       i32       late-binding FIFO ring of arrival indices
+``life``        pytree    container-lifecycle carry (``()`` disabled)
 ==============  ========  =====================================
+
+With ``cluster.lifecycle`` set (:mod:`repro.lifecycle`), the carry
+additionally threads per-pool idle-since clocks ``[W, F+1]``,
+per-function last-completion times, the active keep-alive windows and
+the policy's histogram state through the scan — the same carried-state
+pattern the balancer registry uses.  Warm pools are then masked by the
+windows wherever they are read (*alive* pools reserve slots and feed
+the LRU eviction + ``max_idle`` budget; *materialized* pools serve warm
+hits), cold starts charge the per-function preset cost, and every
+transition mirrors :class:`repro.lifecycle.LifecycleRuntime` op for op
+so the np ≡ jax parity contract extends to lifecycle state.  With the
+default ``lifecycle=None`` the traced program is exactly the
+pre-lifecycle one.
 """
 from __future__ import annotations
 
@@ -61,6 +75,7 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 from jax import lax
 
+from repro.lifecycle import resolve_lifecycle
 from repro.policy import default_backend, resolve
 
 from .cluster import ClusterCfg
@@ -87,6 +102,7 @@ class SimState(NamedTuple):
     server_time: jax.Array  # f64
     core_time: jax.Array    # f64
     lb: Any                 # balancer carried state (pytree; () stateless)
+    life: Any               # lifecycle carried state (pytree; () disabled)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -158,6 +174,16 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
     # state pytree through the scan carry and on_complete updates it per
     # task completion (see repro.policy.registry)
     stateful = res.stateful and not late
+    # container lifecycle (repro.lifecycle).  life_on gates every
+    # lifecycle op at trace time, so the disabled default traces the
+    # exact pre-lifecycle program (bit-for-bit golden contract).
+    lres = resolve_lifecycle(cluster, backend="jax", n_functions=F)
+    life_on = lres is not None
+    if life_on:
+        life_windows, life_observe = lres.windows, lres.observe
+        life_max_idle = lres.max_idle
+        life_costs = None if lres.cold_costs is None \
+            else jnp.asarray(lres.cold_costs)
 
     def rates_of(st: SimState) -> jax.Array:
         active = st.task_idx >= 0
@@ -169,16 +195,49 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
               ) -> SimState:
         """Place arrival ``arr_idx`` on worker ``w`` (must be valid)."""
         f = funcs[arr_idx]
-        warm_cnt = st.warm[w, f]
-        is_cold = warm_cnt == 0
         active_w = (st.task_idx[w] >= 0).sum()
-        idle = st.warm[w, :F].sum()
-        need_evict = is_cold & (active_w + idle >= S)
-        victim = jnp.argmax(st.warm[w, :F])
+        life = st.life
+        if life_on:
+            # lifecycle masks (mirroring LifecycleRuntime): only
+            # *materialized* pools (inside their pre-warm + keep-alive
+            # window) serve warm hits, occupy memory (slot pressure /
+            # budget) and are eviction candidates.  The victim is the
+            # LRU materialized pool — oldest idle-since, first index on
+            # ties, the tie-breaking contract shared with the oracle
+            lu = life["idle_since"]
+            pre, keep = life["pre"], life["keep"]
+            ages_w = st.now - lu[w, :F]
+            mat_w = (ages_w >= pre) & (ages_w <= pre + keep)
+            eff = jnp.where(mat_w, st.warm[w, :F], 0)
+            warm_cnt = eff[f]
+            is_cold = warm_cnt == 0
+            idle = eff.sum()
+            need_evict = is_cold & (active_w + idle >= S)
+            victim = jnp.argmin(jnp.where(eff > 0, lu[w, :F], jnp.inf))
+            pen_f = penalty if life_costs is None else life_costs[f]
+            if life_observe is not None:
+                # observe the placed pool's idle age AFTER the
+                # warm/cold decision (LifecycleRuntime.observe_place);
+                # virgin pools (idle_since < 0) are masked out
+                seen = lu[w, f] >= 0.0
+                gap = jnp.maximum(st.now - lu[w, f], 0.0)
+                ka_new = life_observe(life["ka"], f, gap)
+                ka = jax.tree_util.tree_map(
+                    lambda a, b: jnp.where(seen, a, b), ka_new,
+                    life["ka"])
+                pre2, keep2 = life_windows(ka)
+                life = dict(life, ka=ka, pre=pre2, keep=keep2)
+        else:
+            warm_cnt = st.warm[w, f]
+            is_cold = warm_cnt == 0
+            idle = st.warm[w, :F].sum()
+            need_evict = is_cold & (active_w + idle >= S)
+            victim = jnp.argmax(st.warm[w, :F])
+            pen_f = penalty
         warm = st.warm.at[w, f].add(jnp.where(is_cold, 0, -1))
         warm = warm.at[w, victim].add(jnp.where(need_evict, -1, 0))
         slot = jnp.argmax(st.task_idx[w] < 0)
-        svc = services[arr_idx] + jnp.where(is_cold, penalty, 0.0)
+        svc = services[arr_idx] + jnp.where(is_cold, pen_f, 0.0)
         return st._replace(
             remaining=st.remaining.at[w, slot].set(svc),
             task_arr=st.task_arr.at[w, slot].set(arrivals[arr_idx]),
@@ -186,6 +245,7 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
             warm=warm,
             cold=st.cold.at[arr_idx].set(is_cold),
             worker_of=st.worker_of.at[arr_idx].set(w.astype(jnp.int32)),
+            life=life,
         )
 
     def pop_all(st: SimState, funcs, services, arrivals) -> SimState:
@@ -258,9 +318,39 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
             resp = st.resp.at[jnp.where(completed, tid, N)].set(
                 jnp.where(completed, now - st.task_arr[wj, sj], 0.0))
             f_j = funcs[jnp.maximum(tid, 0)]
-            warm = st.warm.at[jnp.where(completed, wj, 0),
-                              jnp.where(completed, f_j, F)].add(
-                completed.astype(jnp.int32))
+            w_pad = jnp.where(completed, wj, 0)
+            f_pad = jnp.where(completed, f_j, F)
+            life = st.life
+            if life_on:
+                # mirror LifecycleRuntime.on_complete: zero a stale
+                # pool before the increment (expired executors must not
+                # resurrect), refresh the idle clock, then enforce the
+                # max_idle budget by LRU eviction over the worker's
+                # materialized pools
+                lu = life["idle_since"]
+                pre, keep = life["pre"], life["keep"]
+                age_j = now - lu[wj, f_j]
+                stale = age_j > pre[f_j] + keep[f_j]
+                base = jnp.where(stale, 0, st.warm[wj, f_j])
+                warm = st.warm.at[w_pad, f_pad].set(
+                    jnp.where(completed, base + 1,
+                              st.warm[w_pad, f_pad]).astype(jnp.int32))
+                lu = lu.at[w_pad, f_pad].set(
+                    jnp.where(completed, now, lu[w_pad, f_pad]))
+                life = dict(life, idle_since=lu)
+                if life_max_idle > 0:
+                    ages_row = now - lu[wj, :F]
+                    mat_row = (ages_row >= pre) & (ages_row <= pre + keep)
+                    eff = jnp.where(mat_row, warm[wj, :F], 0)
+                    over = completed & (eff.sum() > life_max_idle)
+                    evict = jnp.argmin(jnp.where(eff > 0, lu[wj, :F],
+                                                 jnp.inf))
+                    warm = warm.at[jnp.where(over, wj, 0),
+                                   jnp.where(over, evict, F)].add(
+                        -over.astype(jnp.int32))
+            else:
+                warm = st.warm.at[w_pad, f_pad].add(
+                    completed.astype(jnp.int32))
             warm = warm.at[:, F].set(0)
             remaining = remaining.at[wj, sj].set(
                 jnp.where(completed, jnp.inf, remaining[wj, sj]))
@@ -282,7 +372,8 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
             st = st._replace(
                 remaining=remaining, task_idx=task_idx,
                 warm=warm, now=now, resp=resp,
-                server_time=server_time, core_time=core_time, lb=lb)
+                server_time=server_time, core_time=core_time, lb=lb,
+                life=life)
             return st, dt_left - tau
 
         st, _ = lax.while_loop(cond, body, (st, dt))
@@ -304,12 +395,23 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
                     i.astype(jnp.int32)), q_tail=st.q_tail + 1)
             st = lax.cond(active.min() < C, do_place, do_queue, st)
         else:
+            if life_on:
+                # selection sees the materialized warm column (pools in
+                # their pre-warm phase or past their window are
+                # invisible) — mirrors LifecycleRuntime.materialized_col
+                lu = st.life["idle_since"]
+                pre, keep = st.life["pre"], st.life["keep"]
+                ages = st.now - lu[:, f_i]
+                m = (ages >= pre[f_i]) & (ages <= pre[f_i] + keep[f_i])
+                wcol = jnp.where(m, st.warm[:, f_i], 0)
+            else:
+                wcol = st.warm[:, f_i]
             if stateful:
-                w, lb = select(st.lb, active, st.warm[:, f_i], f_i, homes,
+                w, lb = select(st.lb, active, wcol, f_i, homes,
                                u_i, i)
                 st = st._replace(lb=lb)
             else:
-                w = select(active, st.warm[:, f_i], f_i, homes, u_i, i)
+                w = select(active, wcol, f_i, homes, u_i, i)
             st = st._replace(rejected=st.rejected.at[i].set(w < 0))
             st = lax.cond(w >= 0,
                           lambda s: place(s, i, jnp.maximum(w, 0), funcs,
@@ -322,6 +424,21 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
         if stateful:
             lb0 = jax.tree_util.tree_map(jnp.asarray,
                                          res.init_state(W, F))
+        life0 = ()
+        if life_on:
+            ka0 = ()
+            if lres.stateful:
+                ka0 = jax.tree_util.tree_map(
+                    jnp.asarray, lres.init_policy_state(W, F))
+            pre0, keep0 = life_windows(ka0)
+            life0 = {
+                # +1 pad col: completion scatters park on the pad when
+                # nothing completed, exactly like ``warm``.  -1 marks a
+                # pool with no completion history (masks observations)
+                "idle_since": jnp.full((W, F + 1), -1.0),
+                "pre": jnp.asarray(pre0), "keep": jnp.asarray(keep0),
+                "ka": ka0,
+            }
         st = SimState(
             remaining=jnp.full((W, S), jnp.inf),
             task_arr=jnp.zeros((W, S)),
@@ -335,7 +452,7 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
             rejected=jnp.zeros((N + 1,), dtype=bool),
             worker_of=jnp.full((N + 1,), -1, dtype=jnp.int32),
             server_time=jnp.float64(0.0), core_time=jnp.float64(0.0),
-            lb=lb0,
+            lb=lb0, life=life0,
         )
         xs = (jnp.arange(N), arrivals, funcs, u_lb)
         st, _ = lax.scan(

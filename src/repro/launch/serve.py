@@ -12,10 +12,20 @@ Workloads are any ``repro.core.WORKLOADS`` entry — the synthetic §6.1
 generators *and* the ``azure-*`` trace-replay scenarios — or a real
 Azure-schema trace slice given as the two dataset CSVs.
 
+Container lifecycle: ``--keepalive <name>`` threads a keep-alive policy
+from the :mod:`repro.lifecycle` registry (``NONE`` / ``FIXED_TTL`` /
+``HYBRID_HIST`` or anything registered) through the platform, and
+``--cold-start-preset <name>`` swaps the scalar spin-up cost for a
+per-function provider preset; both flags are validated against the
+lifecycle registry with named errors, like ``--policy`` is against the
+policy registry.
+
 Examples::
 
     python -m repro.launch.serve --policy E/H/PS --load 0.6 -n 5000
     python -m repro.launch.serve --workload azure-diurnal --load 0.7
+    python -m repro.launch.serve --keepalive HYBRID_HIST --ttl 30 \
+        --cold-start-preset aws-lambda
     python -m repro.launch.serve \
         --trace-invocations inv.csv --trace-durations dur.csv
     python -m repro.launch.serve --backend models --requests 12
@@ -46,6 +56,22 @@ def main() -> None:
     ap.add_argument("--workers", type=int, default=8)
     ap.add_argument("--cores", type=int, default=12)
     ap.add_argument("--cold-start", type=float, default=0.5)
+    ap.add_argument("--keepalive", metavar="NAME",
+                    help="container keep-alive policy from the "
+                         "repro.lifecycle registry (NONE, FIXED_TTL, "
+                         "HYBRID_HIST, ...); omit for the legacy "
+                         "keep-forever warm pool")
+    ap.add_argument("--ttl", type=float, default=60.0,
+                    help="keep-alive window seconds (FIXED_TTL window / "
+                         "HYBRID_HIST fallback+range unit)")
+    ap.add_argument("--max-idle", type=int, default=0,
+                    help="per-worker warm-pool budget (idle executors; "
+                         "0 = bounded only by slot pressure)")
+    ap.add_argument("--cold-start-preset", metavar="NAME",
+                    default="scalar",
+                    help="per-function cold-start latency preset from "
+                         "the lifecycle registry ('scalar' keeps "
+                         "--cold-start)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--use-kernel", action="store_true",
                     help="dispatch through the balancer's batched Pallas "
@@ -56,13 +82,23 @@ def main() -> None:
 
     if args.backend == "models":
         from repro import configs
+        from repro.lifecycle import parse_keepalive
         from repro.serving.backends import (HermesFrontend, Invocation,
                                             ModelRegistry)
         import numpy as np
         reg = ModelRegistry()
         reg.register("olmo-tiny", configs.get_smoke("olmo-1b"))
         reg.register("rwkv-tiny", configs.get_smoke("rwkv6-3b"))
-        fe = HermesFrontend(reg, n_workers=2, cores=2, max_len=64)
+        # on real models, keep-alive maps to executor idle expiry with
+        # the --ttl window (cold starts here are measured XLA compiles,
+        # so --cold-start-preset does not apply); the name is still
+        # validated against the lifecycle registry
+        keepalive_s = None
+        if args.keepalive is not None:
+            parse_keepalive(args.keepalive)   # named ValueError
+            keepalive_s = args.ttl
+        fe = HermesFrontend(reg, n_workers=2, cores=2, max_len=64,
+                            keepalive_s=keepalive_s)
         rng = np.random.default_rng(0)
         for i in range(args.requests):
             fn = ("olmo-tiny", "rwkv-tiny")[i % 2]
@@ -74,8 +110,14 @@ def main() -> None:
         return
 
     from repro.core import (ClusterCfg, WORKLOADS, parse_policy, summarize)
+    from repro.lifecycle import lifecycle_from_flags
     from repro.serving.engine import ServeCfg, ServingCluster
-    cl = ClusterCfg(n_workers=args.workers, cores=args.cores)
+    # named ValueError on unknown names; a preset/budget without an
+    # explicit --keepalive gets an infinite window (no surprise expiry)
+    lifecycle = lifecycle_from_flags(args.keepalive, args.ttl,
+                                     args.max_idle, args.cold_start_preset)
+    cl = ClusterCfg(n_workers=args.workers, cores=args.cores,
+                    lifecycle=lifecycle)
     if args.trace_invocations or args.trace_durations:
         if not (args.trace_invocations and args.trace_durations):
             ap.error("--trace-invocations and --trace-durations "
@@ -97,8 +139,10 @@ def main() -> None:
                          use_kernel=args.use_kernel).run(wl)
     s = summarize(out.response, wl.service, out.cold, out.rejected,
                   out.server_time, out.core_time, out.end_time)
+    ka = lifecycle.keepalive if lifecycle else "legacy-inf"
+    preset = lifecycle.coldstart if lifecycle else "scalar"
     print(f"policy={args.policy} workload={wname} "
-          f"load={args.load}")
+          f"load={args.load} keepalive={ka} coldstart={preset}")
     print(f"  slow p50/p99 = {s.slow_p50:.2f} / {s.slow_p99:.1f}")
     print(f"  lat  p50/p99 = {s.lat_p50:.2f}s / {s.lat_p99:.2f}s")
     print(f"  cold starts  = {100*s.cold_frac:.1f}%   "

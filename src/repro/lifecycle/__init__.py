@@ -1,0 +1,86 @@
+"""``repro.lifecycle`` — container lifecycle, keep-alive & cold starts.
+
+The third pillar of the paper (locality to reduce cold starts, §5.3 /
+Fig 7) promoted to a first-class, sweepable axis: per-``(worker,
+function)`` warm pools with idle clocks, an open :class:`KeepAlivePolicy`
+registry mirroring :mod:`repro.policy` (``NONE`` / ``FIXED_TTL`` /
+``HYBRID_HIST`` shipped), LRU eviction under slot/memory pressure, and
+per-function cold-start latency presets replacing the single scalar
+penalty.  Engines gate the whole subsystem on ``ClusterCfg.lifecycle``
+— the ``None`` default reproduces the pre-lifecycle semantics
+bit-for-bit.
+
+Registering a custom keep-alive policy (sweepable everywhere a
+``LifecycleCfg`` is accepted)::
+
+    import numpy as np
+    from repro.lifecycle import register_keepalive
+
+    def make_np(cfg, n_functions):
+        keep = np.where(np.arange(n_functions) % 2 == 0,
+                        2.0 * cfg.ttl_s, 0.5 * cfg.ttl_s)
+        pre = np.zeros(n_functions)
+        def windows(state):
+            return pre, keep
+        return windows, None          # stateless: no observe hook
+
+    def make_jax(cfg, n_functions):
+        import jax.numpy as jnp
+        keep = jnp.where(jnp.arange(n_functions) % 2 == 0,
+                         2.0 * cfg.ttl_s, 0.5 * cfg.ttl_s)
+        pre = jnp.zeros(n_functions)
+        def windows(state):
+            return pre, keep
+        return windows, None
+
+    register_keepalive("TIERED", make_np=make_np, make_jax=make_jax,
+                       doc="even fns get 2x TTL, odd fns 0.5x")
+    # ClusterCfg(lifecycle=LifecycleCfg(keepalive="TIERED")) now runs
+    # through both simulators, the platform, and every CLI flag.
+"""
+import math
+
+from .config import LifecycleCfg
+from .coldstart import (SCALAR, ColdStartPreset, cold_costs_for,
+                        cold_preset_names, get_cold_preset,
+                        parse_cold_preset, register_cold_preset)
+from .registry import (KeepAlivePolicy, ResolvedLifecycle, get_keepalive,
+                       keepalive_names, parse_keepalive,
+                       register_keepalive, resolve_lifecycle,
+                       unregister_keepalive)
+from .runtime import LifecycleRuntime
+
+
+def lifecycle_from_flags(keepalive=None, ttl_s: float = 60.0,
+                         max_idle: int = 0, coldstart: str = SCALAR):
+    """CLI glue: an ``Optional[LifecycleCfg]`` from flag values.
+
+    Every name is validated against its registry (named ``ValueError``
+    listing what IS registered).  Without an explicit ``keepalive``, a
+    cold-start preset or warm-pool budget alone enables the lifecycle
+    with an *infinite* ``FIXED_TTL`` window — executors never expire,
+    so the user gets the requested costs/budget without a surprise
+    idle-timeout (the only behavioral delta vs the legacy model is that
+    slot-pressure eviction becomes LRU rather than most-idle-count).
+    All flags at their defaults return ``None`` (the legacy model,
+    bit-for-bit).
+    """
+    preset = parse_cold_preset(coldstart)
+    if keepalive is not None:
+        return LifecycleCfg(keepalive=parse_keepalive(keepalive),
+                            ttl_s=float(ttl_s), max_idle=int(max_idle),
+                            coldstart=preset)
+    if preset != SCALAR or int(max_idle) > 0:
+        return LifecycleCfg(keepalive="FIXED_TTL", ttl_s=math.inf,
+                            max_idle=int(max_idle), coldstart=preset)
+    return None
+
+
+__all__ = [
+    "SCALAR", "ColdStartPreset", "KeepAlivePolicy", "LifecycleCfg",
+    "LifecycleRuntime", "ResolvedLifecycle", "cold_costs_for",
+    "cold_preset_names", "get_cold_preset", "get_keepalive",
+    "keepalive_names", "lifecycle_from_flags", "parse_cold_preset",
+    "parse_keepalive", "register_cold_preset", "register_keepalive",
+    "resolve_lifecycle", "unregister_keepalive",
+]

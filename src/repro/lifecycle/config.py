@@ -1,0 +1,41 @@
+"""Lifecycle configuration record — the ``ClusterCfg.lifecycle`` field.
+
+Kept dependency-free (no :mod:`repro.core` imports) because
+:mod:`repro.core.cluster` embeds this record in :class:`ClusterCfg`; the
+rest of the lifecycle package (registry, policies, runtime) layers on
+top.  The record is a ``NamedTuple`` of hashable primitives so clusters
+carrying a lifecycle stay valid engine-cache keys
+(``repro.core.simulator`` memoizes compiled programs on
+``tuple(cluster)``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+
+class LifecycleCfg(NamedTuple):
+    """Container-lifecycle knobs for both simulators and the platform.
+
+    ``keepalive`` names a policy in the lifecycle registry
+    (:func:`repro.lifecycle.register_keepalive`); ``NONE`` tears every
+    executor down at completion, ``FIXED_TTL`` keeps idle executors for
+    ``ttl_s`` seconds, ``HYBRID_HIST`` learns per-function pre-warm +
+    keep-alive windows from an idle-time histogram (Shahrad et al.,
+    ATC'20).  ``ttl_s`` is the ``FIXED_TTL`` window and the
+    ``HYBRID_HIST`` fallback/cap unit.  ``max_idle`` caps the number of
+    *reserved* idle executors per worker (the warm-pool budget; ``0`` =
+    bounded only by slot pressure).  ``coldstart`` names a per-function
+    cold-start latency preset (:mod:`repro.lifecycle.coldstart`);
+    ``"scalar"`` keeps the legacy single-penalty model
+    (``ClusterCfg.cold_start_penalty`` in the simulators,
+    ``ServeCfg.cold_start_s`` on the platform).
+
+    ``ClusterCfg(lifecycle=None)`` — the default — preserves the
+    pre-lifecycle semantics bit-for-bit: an ever-growing warm set with
+    no idle-timeout and the scalar penalty.
+    """
+
+    keepalive: str = "FIXED_TTL"
+    ttl_s: float = 60.0
+    max_idle: int = 0
+    coldstart: str = "scalar"

@@ -1,0 +1,168 @@
+"""Built-in keep-alive policies — numpy / jax pairs.
+
+Every backend of a policy implements the identical deterministic
+contract (:mod:`repro.lifecycle.registry`): ``windows(state) ->
+(pre[F], keep[F])`` plus, for adaptive policies, ``observe(state, func,
+gap) -> state``.  Both backends perform the same float/int operations
+in the same order, so np ≡ jax holds bitwise (the parity tests in
+``tests/test_lifecycle.py`` thread state across both).
+
+* ``NONE`` — no keep-alive: every executor is torn down at completion
+  (``pre = keep = 0``), the cold-start upper bound.
+* ``FIXED_TTL`` — one fixed idle-timeout for every function
+  (``keep = cfg.ttl_s``), the OpenWhisk/AWS-style default.
+* ``HYBRID_HIST`` — the hybrid-histogram policy of Shahrad et al.
+  (ATC'20): per-function idle-time histograms choose a pre-warm window
+  (just below the head of the idle-time distribution — the container is
+  released at completion and re-provisioned at ``pre``) and a
+  keep-alive window covering the distribution up to the tail quantile.
+  Functions with fewer than ``HIST_MIN_OBS`` observed gaps fall back to
+  the fixed TTL.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .registry import register_keepalive
+
+# HYBRID_HIST shape: HIST_BINS linear bins spanning HIST_RANGE_TTLS
+# keep-alive units (cfg.ttl_s), so gaps up to 4x the fixed TTL are
+# distinguishable; longer gaps clamp into the last bin.
+HIST_BINS = 32
+HIST_RANGE_TTLS = 4.0
+HIST_MIN_OBS = 3
+# head/tail quantiles of the idle-time distribution and the safety
+# margin applied to them (ATC'20 §4.2 uses 5%/99% with a margin).
+HIST_HEAD_Q = 0.05
+HIST_TAIL_Q = 0.99
+HIST_MARGIN = 0.15
+
+
+# --------------------------------------------------------------------------
+# NONE / FIXED_TTL — stateless: constant windows, no observation hook
+# --------------------------------------------------------------------------
+
+def _const_np(pre_s: float, keep_s: float):
+    def make(cfg, n_functions):
+        pre = np.full(n_functions, pre_s, dtype=np.float64)
+        keep = np.full(n_functions, keep_s, dtype=np.float64)
+
+        def windows(state):
+            return pre, keep
+        return windows, None
+    return make
+
+
+def _const_jax(pre_s: float, keep_s: float):
+    def make(cfg, n_functions):
+        import jax.numpy as jnp
+        pre = jnp.full((n_functions,), pre_s, dtype=jnp.float64)
+        keep = jnp.full((n_functions,), keep_s, dtype=jnp.float64)
+
+        def windows(state):
+            return pre, keep
+        return windows, None
+    return make
+
+
+def _none_np(cfg, n_functions):
+    return _const_np(0.0, 0.0)(cfg, n_functions)
+
+
+def _none_jax(cfg, n_functions):
+    return _const_jax(0.0, 0.0)(cfg, n_functions)
+
+
+def _fixed_ttl_np(cfg, n_functions):
+    return _const_np(0.0, float(cfg.ttl_s))(cfg, n_functions)
+
+
+def _fixed_ttl_jax(cfg, n_functions):
+    return _const_jax(0.0, float(cfg.ttl_s))(cfg, n_functions)
+
+
+# --------------------------------------------------------------------------
+# HYBRID_HIST — per-function idle-time histogram → (pre, keep) windows
+# --------------------------------------------------------------------------
+
+def _hybrid_init(cfg, n_workers, n_functions):
+    """Fresh per-function histogram state (counts as f64 for jax)."""
+    return {"hist": np.zeros((n_functions, HIST_BINS), dtype=np.float64),
+            "n_obs": np.zeros(n_functions, dtype=np.float64)}
+
+
+def _hybrid_params(cfg):
+    bin_s = float(cfg.ttl_s) * HIST_RANGE_TTLS / HIST_BINS
+    return bin_s, float(cfg.ttl_s)
+
+
+def _hybrid_np(cfg, n_functions):
+    bin_s, ttl = _hybrid_params(cfg)
+
+    def windows(state):
+        hist, n_obs = state["hist"], state["n_obs"]
+        cdf = np.cumsum(hist, axis=1)
+        # head: first bin covering HEAD_Q of the mass -> pre-warm just
+        # below its lower edge; tail: first bin covering TAIL_Q -> keep
+        # through its upper edge, padded by the margin.
+        head = np.argmax(cdf >= HIST_HEAD_Q * n_obs[:, None], axis=1)
+        tail = np.argmax(cdf >= HIST_TAIL_Q * n_obs[:, None], axis=1)
+        pre = head * bin_s * (1.0 - HIST_MARGIN)
+        end = (tail + 1.0) * bin_s * (1.0 + HIST_MARGIN)
+        learned = n_obs >= HIST_MIN_OBS
+        pre = np.where(learned, pre, 0.0)
+        keep = np.where(learned, end - pre, ttl)
+        return pre, keep
+
+    def observe(state, func, gap):
+        b = min(int(gap / bin_s), HIST_BINS - 1)
+        b = max(b, 0)
+        hist = state["hist"].copy()
+        hist[func, b] += 1.0
+        n_obs = state["n_obs"].copy()
+        n_obs[func] += 1.0
+        return dict(state, hist=hist, n_obs=n_obs)
+
+    return windows, observe
+
+
+def _hybrid_jax(cfg, n_functions):
+    import jax.numpy as jnp
+    bin_s, ttl = _hybrid_params(cfg)
+
+    def windows(state):
+        hist, n_obs = state["hist"], state["n_obs"]
+        cdf = jnp.cumsum(hist, axis=1)
+        head = jnp.argmax(cdf >= HIST_HEAD_Q * n_obs[:, None], axis=1)
+        tail = jnp.argmax(cdf >= HIST_TAIL_Q * n_obs[:, None], axis=1)
+        pre = head * bin_s * (1.0 - HIST_MARGIN)
+        end = (tail + 1.0) * bin_s * (1.0 + HIST_MARGIN)
+        learned = n_obs >= HIST_MIN_OBS
+        pre = jnp.where(learned, pre, 0.0)
+        keep = jnp.where(learned, end - pre, ttl)
+        return pre, keep
+
+    def observe(state, func, gap):
+        b = jnp.minimum(jnp.asarray(gap / bin_s).astype(jnp.int32),
+                        HIST_BINS - 1)
+        b = jnp.maximum(b, 0)
+        hist = state["hist"].at[func, b].add(1.0)
+        n_obs = state["n_obs"].at[func].add(1.0)
+        return dict(state, hist=hist, n_obs=n_obs)
+
+    return windows, observe
+
+
+register_keepalive(
+    "NONE", doc="no keep-alive: executors torn down at completion "
+                "(cold-start upper bound)",
+    make_np=_none_np, make_jax=_none_jax)
+register_keepalive(
+    "FIXED_TTL", doc="fixed idle-timeout of cfg.ttl_s seconds for every "
+                     "function (OpenWhisk-style)",
+    make_np=_fixed_ttl_np, make_jax=_fixed_ttl_jax)
+register_keepalive(
+    "HYBRID_HIST", doc="per-function idle-time histogram choosing "
+                       "pre-warm + keep-alive windows (Shahrad et al. "
+                       "ATC'20)",
+    make_np=_hybrid_np, make_jax=_hybrid_jax, init_state=_hybrid_init)

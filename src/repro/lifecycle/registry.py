@@ -1,0 +1,238 @@
+"""Open keep-alive policy registry, mirroring :mod:`repro.policy`.
+
+The keep-alive axis is a first-class scheduling dimension (Przybylski
+et al. 2021; SFS, Fu et al. 2022): *when to release an idle executor*
+shapes cold-start rates as much as *where to place an invocation*.
+This module makes that axis an open registry so keep-alive strategies
+are sweepable like balancers.
+
+**The keep-alive contract.**  Warm executors live in per-``(worker,
+function)`` pools; the engines track one idle-since timestamp per pool
+(the time of the pool's most recent completion).  A policy maps its
+(optional) carried state to per-function *windows*::
+
+    windows(state) -> (pre[F], keep[F])     # f64 seconds
+
+A pool of function ``f`` whose idle age is ``a = now - idle_since`` is
+**materialized** iff ``pre[f] <= a <= pre[f] + keep[f]``.  Only
+materialized pools serve warm hits, occupy memory (slot pressure and
+the ``max_idle`` budget) and are LRU eviction candidates; during the
+pre-warm phase ``[0, pre)`` the container is unloaded, to be
+re-provisioned just before the predicted next invocation (the ATC'20
+pre-warming model — the memory saving is the point of the ``pre``
+output), and past the window it is released.
+
+Expiry is *lazy*: both engines apply the window mask wherever pool
+counts are read, and a stale pool's count is zeroed when its next
+completion refreshes it — no expiry events are simulated, so the
+vectorized scan engine and the numpy oracle stay in lockstep by
+construction.  The ``max_idle`` budget is likewise enforced at
+completion events.
+
+Adaptive policies additionally declare ``init_state`` — a factory
+``(cfg, n_workers, n_functions) -> dict[str, np.ndarray]`` — and an
+observation hook fed once per *placement* with the placed worker's
+pool idle age (the exact idle duration the windows must cover)::
+
+    observe(state, func, gap) -> state      # pure, both backends
+
+``make_np`` / ``make_jax`` are factories ``(cfg, n_functions) ->
+(windows, observe)`` (``observe`` is ``None`` for stateless policies);
+both backends must perform identical float/int operations in identical
+order so np ≡ jax parity holds bitwise, exactly as the balancer
+carried-state contract demands (:mod:`repro.policy.registry`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable, Optional
+
+from .config import LifecycleCfg
+
+_BACKENDS = ("np", "jax")
+
+
+@dataclasses.dataclass(frozen=True)
+class KeepAlivePolicy:
+    """A registered keep-alive strategy (see the module contract)."""
+
+    name: str
+    doc: str = ""
+    make_np: Optional[Callable[[LifecycleCfg, int], tuple]] = None
+    make_jax: Optional[Callable[[LifecycleCfg, int], tuple]] = None
+    init_state: Optional[Callable[[LifecycleCfg, int, int], Any]] = None
+
+    @property
+    def stateful(self) -> bool:
+        return self.init_state is not None
+
+    def backends(self) -> tuple[str, ...]:
+        return tuple(b for b, fn in zip(
+            _BACKENDS, (self.make_np, self.make_jax)) if fn is not None)
+
+
+KEEPALIVES: dict[str, KeepAlivePolicy] = {}
+
+_builtin_lock = threading.Lock()
+_builtins_loaded = False
+
+
+def _load_builtins() -> None:
+    """Idempotently register the built-in policies (import side effect).
+
+    The flag is set *before* the import: the built-in registrations
+    re-enter :func:`register_keepalive` (which loads built-ins first so
+    name collisions surface at the caller), and must not recurse into
+    the non-reentrant lock.  A failed import resets the flag.
+    """
+    global _builtins_loaded
+    if _builtins_loaded:
+        return
+    with _builtin_lock:
+        if _builtins_loaded:
+            return
+        _builtins_loaded = True
+        try:
+            from . import policies  # noqa: F401  (registers on import)
+        except BaseException:
+            _builtins_loaded = False
+            raise
+
+
+def register_keepalive(name: str, *, make_np=None, make_jax=None,
+                       init_state=None, doc: str = "",
+                       overwrite: bool = False) -> KeepAlivePolicy:
+    """Register a keep-alive policy under ``name`` (upper-cased).
+
+    At least one of ``make_np`` / ``make_jax`` must be given; a policy
+    with both runs through every engine in the repo.  ``init_state``
+    opts into the carried-state contract (the ``make_*`` factories then
+    return ``(windows, observe)`` with a non-``None`` observe hook).
+    Returns the :class:`KeepAlivePolicy` record.
+    """
+    name = name.strip().upper()
+    if "/" in name or "*" in name or not name:
+        raise ValueError(f"invalid keep-alive name {name!r}")
+    if make_np is None and make_jax is None:
+        raise ValueError(f"keep-alive {name!r} needs an np or jax backend")
+    # load built-ins first so a collision with a built-in name is
+    # reported HERE — checked against an empty registry it would
+    # succeed silently and then wedge the deferred built-in import
+    _load_builtins()
+    if not overwrite and name in KEEPALIVES:
+        raise ValueError(f"keep-alive {name!r} already registered "
+                         f"(pass overwrite=True to replace)")
+    ka = KeepAlivePolicy(name=name, doc=doc, make_np=make_np,
+                         make_jax=make_jax, init_state=init_state)
+    KEEPALIVES[name] = ka
+    _engine_cache_clear()
+    return ka
+
+
+def unregister_keepalive(name: str) -> None:
+    _load_builtins()
+    KEEPALIVES.pop(str(name).strip().upper(), None)
+    _engine_cache_clear()
+
+
+def _engine_cache_clear() -> None:
+    # compiled simulator engines capture resolved lifecycle closures;
+    # (re-)registration must drop them, like the policy registry does.
+    import sys
+    sim = sys.modules.get("repro.core.simulator")
+    clear = getattr(sim, "clear_engine_cache", None)
+    if clear is not None:
+        clear()
+
+
+def keepalive_names() -> tuple[str, ...]:
+    _load_builtins()
+    return tuple(KEEPALIVES)
+
+
+def get_keepalive(name) -> KeepAlivePolicy:
+    _load_builtins()
+    key = str(name).strip().upper()
+    try:
+        return KEEPALIVES[key]
+    except KeyError:
+        raise ValueError(
+            f"unknown keep-alive policy {key!r}; registered policies: "
+            f"{', '.join(sorted(KEEPALIVES))}") from None
+
+
+def parse_keepalive(name: str) -> str:
+    """Validate a CLI keep-alive token against the registry.
+
+    Returns the canonical (upper-cased) name; raises the registry's
+    named ``ValueError`` (listing what IS registered) on unknown input —
+    the same error style as :func:`repro.core.taxonomy.parse_policy`.
+    """
+    return get_keepalive(name).name
+
+
+# --------------------------------------------------------------------------
+# resolve — lifecycle cfg → backend callables (the engines' entry point)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ResolvedLifecycle:
+    """A lifecycle config resolved against one backend and shape.
+
+    ``windows``/``observe`` follow the module contract for the chosen
+    backend (``observe`` is ``None`` for stateless policies, and then
+    ``windows`` ignores its argument).  ``cold_costs`` is the
+    per-function cold-start latency vector of the configured preset, or
+    ``None`` for the legacy scalar-penalty model.  ``max_idle`` is the
+    per-worker warm-pool budget (0 = unbounded).
+    """
+
+    cfg: LifecycleCfg
+    policy: KeepAlivePolicy
+    backend: str
+    windows: Callable
+    observe: Optional[Callable]
+    cold_costs: Optional[Any]          # np.ndarray [F] or None
+    max_idle: int
+
+    @property
+    def stateful(self) -> bool:
+        return self.policy.stateful
+
+    def init_policy_state(self, n_workers: int, n_functions: int):
+        if self.policy.init_state is None:
+            return None
+        return self.policy.init_state(self.cfg, n_workers, n_functions)
+
+
+def resolve_lifecycle(cluster, *, backend: str = "np",
+                      n_functions: int) -> Optional[ResolvedLifecycle]:
+    """Resolve ``cluster.lifecycle`` into backend callables.
+
+    Returns ``None`` when the cluster carries no lifecycle config (the
+    legacy infinite-keep-alive model) so engines can gate the whole
+    subsystem on one check.  ``backend`` is ``"np"`` or ``"jax"``
+    (``"pallas"`` select backends share the jax lifecycle path).
+    """
+    cfg = getattr(cluster, "lifecycle", None)
+    if cfg is None:
+        return None
+    _load_builtins()
+    if backend == "pallas":
+        backend = "jax"
+    if backend not in _BACKENDS:
+        raise ValueError(f"unknown lifecycle backend {backend!r}; "
+                         f"choose from {_BACKENDS}")
+    ka = get_keepalive(cfg.keepalive)
+    make = ka.make_np if backend == "np" else ka.make_jax
+    if make is None:
+        raise ValueError(f"keep-alive {ka.name!r} has no {backend} "
+                         f"backend (has: {ka.backends()})")
+    windows, observe = make(cfg, int(n_functions))
+    from .coldstart import cold_costs_for
+    costs = cold_costs_for(cfg.coldstart, int(n_functions))
+    return ResolvedLifecycle(cfg=cfg, policy=ka, backend=backend,
+                             windows=windows, observe=observe,
+                             cold_costs=costs,
+                             max_idle=int(cfg.max_idle))

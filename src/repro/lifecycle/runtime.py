@@ -1,0 +1,157 @@
+"""np-side lifecycle state machine — shared by the oracle and platform.
+
+One implementation of the keep-alive / eviction / cold-start semantics
+drives both event-driven loops (:mod:`repro.core.sim_ref` and
+:mod:`repro.serving.engine`); the vectorized scan engine
+(:mod:`repro.core.simulator`) re-expresses the identical operations in
+traced form.  Keeping the np logic in one place makes the parity
+contract auditable: every method here names the engine code point it
+mirrors.
+
+State (per :class:`LifecycleRuntime`):
+
+* ``idle_since [W, F]`` — time of each pool's most recent completion
+  (its executors' idle clock; *not* refreshed by warm placements — an
+  idle executor's clock starts when it went idle, matching ATC'20).
+  ``-1`` marks a pool with no completion history yet.
+* ``pre/keep [F]`` — the active windows, recomputed after each
+  observation for adaptive policies.
+
+Pool visibility at time ``now`` (age ``a = now - idle_since``): a pool
+is **materialized** iff ``pre <= a <= pre + keep``.  Only materialized
+pools serve warm hits, occupy memory (slot pressure + the ``max_idle``
+budget) and are LRU eviction candidates; during the pre-warm phase
+``[0, pre)`` the container is unloaded — the ATC'20 memory saving — and
+past the window it is released.  Expiry is *lazy*: the mask is applied
+wherever counts are read, a stale pool's count is zeroed when its next
+completion refreshes it, and the ``max_idle`` budget is enforced at
+completion events (pools materializing out of their pre-warm phase
+between completions are reclaimed at the worker's next completion).
+
+Adaptive policies observe the *placed worker's* pool age at each
+placement — the exact idle duration their windows must cover (a
+cluster-wide gap would systematically underestimate per-worker pool
+idle times by roughly the worker count).
+
+Eviction tie-breaking contract (shared with the scan engine): the
+victim is the materialized pool with the *oldest* ``idle_since``; ties
+break toward the lowest function id (``argmin`` takes the first minimum
+in both numpy and jax).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .registry import ResolvedLifecycle
+
+
+class LifecycleRuntime:
+    """Mutable lifecycle state for one event-driven simulation run."""
+
+    def __init__(self, res: ResolvedLifecycle, n_workers: int,
+                 n_functions: int):
+        self.res = res
+        self.W, self.F = int(n_workers), int(n_functions)
+        self.idle_since = np.full((self.W, self.F), -1.0, dtype=np.float64)
+        self.ka = res.init_policy_state(self.W, self.F)
+        self.pre, self.keep = res.windows(self.ka)
+        self.max_idle = res.max_idle
+
+    # ---------------------------------------------------------------- costs
+
+    def cold_cost(self, f: int, scalar_default: float) -> float:
+        """Cold-start latency of function ``f`` (preset or legacy scalar)."""
+        if self.res.cold_costs is None:
+            return float(scalar_default)
+        return float(self.res.cold_costs[f])
+
+    # ------------------------------------------------------------- queries
+
+    def materialized_col(self, warm_col: np.ndarray, f: int,
+                         now: float) -> np.ndarray:
+        """Warm counts of function ``f`` visible to placement, per worker.
+
+        Mirrors the scan engine's selection-time warm-column mask.
+        """
+        age = now - self.idle_since[:, f]
+        ok = (age >= self.pre[f]) & (age <= self.pre[f] + self.keep[f])
+        return np.where(ok, warm_col, 0)
+
+    def materialized_at(self, w: int, f: int, count: int,
+                        now: float) -> int:
+        """O(1) warm-hit check for one ``(worker, function)`` pool —
+        the placement hot path (the column/matrix forms below serve
+        selection and the batched kernel dispatch)."""
+        age = now - self.idle_since[w, f]
+        if self.pre[f] <= age <= self.pre[f] + self.keep[f]:
+            return int(count)
+        return 0
+
+    def materialized_all(self, warm: np.ndarray, now: float) -> np.ndarray:
+        """The whole ``[W, F]`` masked warm matrix in one expression.
+
+        The batched-controller (kernel dispatch) form of
+        :meth:`materialized_col` — no per-function Python loop on the
+        per-decision hot path.
+        """
+        ages = now - self.idle_since
+        ok = (ages >= self.pre) & (ages <= self.pre + self.keep)
+        return np.where(ok, warm, 0)
+
+    def eff_row(self, warm_row: np.ndarray, w: int,
+                now: float) -> np.ndarray:
+        """Materialized (memory-occupying) counts of worker ``w``, per fn."""
+        age = now - self.idle_since[w]
+        ok = (age >= self.pre) & (age <= self.pre + self.keep)
+        return np.where(ok, warm_row, 0)
+
+    def evict_victim(self, warm_row: np.ndarray, w: int, now: float) -> int:
+        """LRU eviction victim on worker ``w`` (oldest materialized pool).
+
+        Mirrors the scan engine's ``place``/completion eviction victim;
+        callers only invoke this when at least one materialized pool
+        exists.
+        """
+        eff = self.eff_row(warm_row, w, now)
+        return int(np.argmin(np.where(eff > 0, self.idle_since[w],
+                                      np.inf)))
+
+    # ------------------------------------------------------------- updates
+
+    def on_complete(self, warm: np.ndarray, w: int, f: int,
+                    now: float) -> None:
+        """A task of function ``f`` completed on worker ``w`` at ``now``.
+
+        Zeroes a stale pool before the increment (no resurrection of
+        expired executors), refreshes the idle clock, and enforces the
+        ``max_idle`` warm-pool budget by LRU eviction.  Mirrors the
+        scan engine's per-completion lifecycle block.
+        """
+        age = now - self.idle_since[w, f]
+        if age > self.pre[f] + self.keep[f]:
+            warm[w, f] = 0
+        warm[w, f] += 1
+        self.idle_since[w, f] = now
+        if self.max_idle > 0:
+            eff = self.eff_row(warm[w], w, now)
+            if eff.sum() > self.max_idle:
+                v = int(np.argmin(np.where(eff > 0, self.idle_since[w],
+                                           np.inf)))
+                warm[w, v] -= 1
+
+    def observe_place(self, w: int, f: int, now: float) -> None:
+        """Feed the keep-alive policy the placed pool's idle age.
+
+        Called once per placement, *after* the warm/cold decision (the
+        placement was scheduled under the windows in force when its
+        executors went idle); recomputes the windows for subsequent
+        decisions.  Virgin pools (no completion on ``w`` yet) are not
+        observations — there was no idle period to cover.  Mirrors the
+        scan engine's in-``place`` observation block.
+        """
+        if self.res.observe is None:
+            return
+        if self.idle_since[w, f] >= 0.0:
+            self.ka = self.res.observe(self.ka, f,
+                                       now - self.idle_since[w, f])
+            self.pre, self.keep = self.res.windows(self.ka)

@@ -93,26 +93,52 @@ class Executor:
 
 
 class InProcessWorker:
-    """One worker: warm-executor cache + invocation execution."""
+    """One worker: warm-executor cache + invocation execution.
+
+    The cache is bounded two ways, like the simulated lifecycle
+    subsystem (:mod:`repro.lifecycle`): ``max_warm`` is the warm-pool
+    budget (LRU eviction under pressure) and ``keepalive_s`` an
+    optional idle-timeout — executors idle longer than the window are
+    released lazily before each execution (``None`` keeps the legacy
+    keep-forever behavior).
+    """
 
     def __init__(self, registry: ModelRegistry, max_len: int = 128,
-                 max_warm: int = 4):
+                 max_warm: int = 4, keepalive_s: float | None = None):
         self.registry = registry
         self.max_len = max_len
         self.max_warm = max_warm
+        self.keepalive_s = keepalive_s
         self.warm: dict[str, Executor] = {}
         self.active = 0
         self.lru: list[str] = []
+        self.idle_since: dict[str, float] = {}
 
     def has_warm(self, func: str) -> bool:
         return func in self.warm
 
+    def expire_idle(self, now: float | None = None) -> int:
+        """Release executors idle past the keep-alive window."""
+        if self.keepalive_s is None:
+            return 0
+        now = time.perf_counter() if now is None else now
+        dead = [f for f in self.warm
+                if now - self.idle_since.get(f, now) > self.keepalive_s]
+        for f in dead:
+            del self.warm[f]
+            self.idle_since.pop(f, None)
+            if f in self.lru:
+                self.lru.remove(f)
+        return len(dead)
+
     def execute(self, inv: Invocation) -> Invocation:
         t0 = time.perf_counter()
+        self.expire_idle(t0)
         if inv.func not in self.warm:
             if len(self.warm) >= self.max_warm:          # evict LRU
                 victim = self.lru.pop(0)
                 del self.warm[victim]
+                self.idle_since.pop(victim, None)
             self.warm[inv.func] = Executor(self.registry, inv.func,
                                            self.max_len)
             inv.cold = True
@@ -120,6 +146,7 @@ class InProcessWorker:
             self.lru.remove(inv.func)
         self.lru.append(inv.func)
         inv.tokens = self.warm[inv.func].run(inv)
+        self.idle_since[inv.func] = time.perf_counter()
         inv.response_s = time.perf_counter() - t0
         return inv
 
@@ -135,8 +162,9 @@ class HermesFrontend:
 
     def __init__(self, registry: ModelRegistry, n_workers: int = 2,
                  cores: int = 2, max_len: int = 128,
-                 balancer: str = "H"):
-        self.workers = [InProcessWorker(registry, max_len)
+                 balancer: str = "H", keepalive_s: float | None = None):
+        self.workers = [InProcessWorker(registry, max_len,
+                                        keepalive_s=keepalive_s)
                         for _ in range(n_workers)]
         self.cores = cores
         self.slots = 8 * cores

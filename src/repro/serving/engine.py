@@ -28,6 +28,7 @@ import numpy as np
 from repro.core.cluster import ClusterCfg
 from repro.core.taxonomy import PolicySpec, HERMES
 from repro.core.workload import Workload
+from repro.lifecycle import LifecycleRuntime, resolve_lifecycle
 from repro.policy import resolve
 
 EPS = 1e-9
@@ -35,6 +36,13 @@ EPS = 1e-9
 
 @dataclasses.dataclass(frozen=True)
 class ServeCfg:
+    """Platform config.  ``cluster.lifecycle`` (if set) threads the
+    container-lifecycle subsystem (:mod:`repro.lifecycle`) through the
+    platform: keep-alive windows gate warm hits, the ``max_idle``
+    budget LRU-evicts idle executors, and a cold-start preset replaces
+    the scalar ``cold_start_s`` (which stays the fallback for the
+    ``"scalar"`` preset)."""
+
     cluster: ClusterCfg = ClusterCfg(n_workers=8, cores=12)
     cold_start_s: float = 0.5          # executor spin-up (compile+weights)
     ctrl_latency_s: float = 0.0005     # controller decision latency (§6.6)
@@ -119,6 +127,10 @@ class ServingCluster:
         # the same np-backend state pytree + hooks as the simulators
         lb_state = res.init_state(W, F) \
             if (res.stateful and not late) else None
+        # container lifecycle: the same np state machine the oracle
+        # threads (None = legacy infinite keep-alive)
+        lres = resolve_lifecycle(cl, backend="np", n_functions=F)
+        life = LifecycleRuntime(lres, W, F) if lres is not None else None
         response = np.full(N, np.nan)
         cold = np.zeros(N, dtype=bool)
         rejected = np.zeros(N, dtype=bool)
@@ -146,22 +158,33 @@ class ServingCluster:
         def place(w: int, arr_idx: int, work: float | None = None,
                   migration: bool = False) -> None:
             f = int(wl.func[arr_idx])
-            if warm[w, f] > 0 and work is None:
+            avail = int(warm[w, f]) if life is None \
+                else life.materialized_at(w, f, warm[w, f], now)
+            if avail > 0 and work is None:
                 warm[w, f] -= 1
                 is_cold = False
             else:
                 is_cold = True
-                idle = int(warm[w].sum())
+                idle = int(warm[w].sum()) if life is None \
+                    else int(life.eff_row(warm[w], w, now).sum())
                 if len(tasks[w]) + idle >= S:
-                    warm[w, int(np.argmax(warm[w]))] -= 1
+                    victim = int(np.argmax(warm[w])) if life is None \
+                        else life.evict_victim(warm[w], w, now)
+                    warm[w, victim] -= 1
+            cold_s = cfg.cold_start_s if life is None \
+                else life.cold_cost(f, cfg.cold_start_s)
+            if life is not None:
+                # adaptive keep-alive observes the placed pool's idle
+                # age after the warm/cold decision (oracle order)
+                life.observe_place(w, f, now)
             if not migration:
                 cold[arr_idx] = is_cold
             worker_of[arr_idx] = w
             if work is None:
                 work = float(wl.service[arr_idx]) + \
-                    (cfg.cold_start_s if is_cold else 0.0)
+                    (cold_s if is_cold else 0.0)
             elif is_cold:
-                work += cfg.cold_start_s
+                work += cold_s
             tasks[w].append(_Task(
                 arr_idx=arr_idx, func=f, arrival=float(wl.arrival[arr_idx]),
                 placed_at=now, work=work, remaining=work, seq=arr_idx))
@@ -237,7 +260,10 @@ class ServingCluster:
                         if t.remaining <= EPS:
                             response[t.arr_idx] = now - t.arrival + \
                                 self.cfg.ctrl_latency_s
-                            warm[w, t.func] += 1
+                            if life is None:
+                                warm[w, t.func] += 1
+                            else:
+                                life.on_complete(warm, w, t.func, now)
                             n_alive -= 1
                             if lb_state is not None:
                                 lb_state = res.on_complete(
@@ -271,18 +297,22 @@ class ServingCluster:
                     queue.append(i)
                 continue
             f = int(wl.func[i])
+            wcol = warm[:, f] if life is None \
+                else life.materialized_col(warm[:, f], f, now)
             if self.use_kernel:
                 import jax.numpy as jnp
+                kwarm = warm if life is None \
+                    else life.materialized_all(warm, now)
                 ws, _ = self._kernel(
                     jnp.asarray(active, jnp.int32),
-                    jnp.asarray(warm, jnp.int32),
+                    jnp.asarray(kwarm, jnp.int32),
                     jnp.asarray([f], jnp.int32))
                 w = int(ws[0])
             elif lb_state is not None:
-                w, lb_state = res.select(lb_state, active, warm[:, f], f,
+                w, lb_state = res.select(lb_state, active, wcol, f,
                                          wl.func_home, float(wl.u_lb[i]), i)
             else:
-                w = res.select(active, warm[:, f], f, wl.func_home,
+                w = res.select(active, wcol, f, wl.func_home,
                                float(wl.u_lb[i]), i)
             if w < 0:
                 rejected[i] = True

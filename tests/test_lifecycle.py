@@ -1,0 +1,345 @@
+"""Container-lifecycle subsystem: registry contract, np ≡ jax parity,
+golden engine agreement, and the bit-for-bit default regression.
+
+The acceptance contract of the lifecycle axis:
+
+* ``ClusterCfg()`` (no lifecycle) reproduces the pre-lifecycle results
+  bit-for-bit — locked against golden values captured from the seed
+  engines;
+* with a lifecycle configured, ``simulate ≡ simulate_ref ≡
+  simulate_many`` task-by-task (the same golden contract the policy
+  registry satisfies), for stateless (``FIXED_TTL``) and carried-state
+  (``HYBRID_HIST``) keep-alive policies alike;
+* the registry is open: a custom keep-alive registered in ~20 lines
+  runs through both engines in agreement.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (ClusterCfg, E_LL_PS, HERMES, LATE_BINDING,
+                        LifecycleCfg, synth_workload)
+from repro.core.sim_ref import simulate_ref
+from repro.core.simulator import simulate, simulate_many
+from repro.lifecycle import (LifecycleRuntime, cold_costs_for,
+                             get_keepalive, parse_cold_preset,
+                             parse_keepalive, register_keepalive,
+                             resolve_lifecycle, unregister_keepalive)
+
+CLUSTER = ClusterCfg(n_workers=4, cores=3, capacity_factor=2,
+                     cold_start_penalty=0.25)
+
+
+def _wl(load=0.9, n=300, seed=7):
+    return synth_workload(CLUSTER, load, n, n_functions=5,
+                          hot_fraction=0.8, seed=seed)
+
+
+def _life(keepalive="FIXED_TTL", **kw):
+    return CLUSTER._replace(lifecycle=LifecycleCfg(keepalive=keepalive,
+                                                   **kw))
+
+
+def _agree(policy, cluster, wl):
+    """simulate ≡ simulate_ref ≡ simulate_many, task-by-task."""
+    out = simulate(policy, cluster, wl)
+    ref = simulate_ref(policy, cluster, wl)
+    np.testing.assert_array_equal(out.worker, ref.worker)
+    np.testing.assert_array_equal(out.cold, ref.cold)
+    np.testing.assert_array_equal(out.rejected, ref.rejected)
+    np.testing.assert_allclose(
+        np.nan_to_num(out.response, nan=-1.0),
+        np.nan_to_num(ref.response, nan=-1.0), atol=1e-9)
+    batch = simulate_many(policy, cluster, [wl, wl])
+    np.testing.assert_array_equal(
+        np.nan_to_num(batch.response[0], nan=-1.0),
+        np.nan_to_num(out.response, nan=-1.0))
+    np.testing.assert_array_equal(batch.response[0], batch.response[1])
+    return out
+
+
+# --------------------------------------------------------------- golden
+
+
+# Captured from the seed engines (pre-lifecycle code) on _wl() above:
+# (policy, sum of responses, n cold starts).
+_GOLDEN = [
+    (HERMES, 1216.6925067819345, 48),
+    (E_LL_PS, 1213.6759411691799, 53),
+    (LATE_BINDING, 1217.1144495097842, 38),
+]
+
+
+@pytest.mark.parametrize("policy,resp_sum,n_cold", _GOLDEN,
+                         ids=lambda v: str(v))
+def test_default_reproduces_seed_results_bit_for_bit(policy, resp_sum,
+                                                     n_cold):
+    """lifecycle=None must not perturb the pre-lifecycle engines."""
+    wl = _wl()
+    out = simulate(policy, CLUSTER, wl)
+    assert float(np.nansum(out.response)) == pytest.approx(resp_sum,
+                                                           rel=1e-12)
+    assert int(out.cold.sum()) == n_cold
+    ref = simulate_ref(policy, CLUSTER, wl)
+    assert float(np.nansum(ref.response)) == pytest.approx(resp_sum,
+                                                           rel=1e-9)
+    assert int(ref.cold.sum()) == n_cold
+
+
+def test_lifecycle_configs_change_results():
+    wl = _wl()
+    base = simulate(HERMES, CLUSTER, wl)
+    ttl = simulate(HERMES, _life(ttl_s=3.0), wl)
+    none = simulate(HERMES, _life("NONE"), wl)
+    hyb = simulate(HERMES, _life("HYBRID_HIST", ttl_s=3.0), wl)
+    # finite keep-alive can only add cold starts vs keep-forever
+    assert int(ttl.cold.sum()) > int(base.cold.sum())
+    assert int(none.cold.sum()) == wl.n          # everything cold
+    assert int(hyb.cold.sum()) > int(base.cold.sum())
+    assert not np.array_equal(ttl.cold, hyb.cold)
+
+
+# ------------------------------------------------- golden engine parity
+
+
+@pytest.mark.parametrize("policy", [HERMES, E_LL_PS, LATE_BINDING],
+                         ids=lambda p: p.name)
+@pytest.mark.parametrize("keepalive", ["NONE", "FIXED_TTL", "HYBRID_HIST"])
+def test_golden_engine_agreement(policy, keepalive):
+    """Vectorized scan ≡ numpy oracle ≡ batched vmap under lifecycle,
+    including warm-pool budget pressure and a cold-start preset."""
+    cl = _life(keepalive, ttl_s=3.0, max_idle=2, coldstart="openwhisk")
+    for load, seed in ((0.5, 0), (0.9, 1), (1.3, 2)):
+        _agree(policy, cl, _wl(load, 300, seed))
+
+
+def test_golden_agreement_with_stateful_balancer():
+    """Lifecycle carry composes with balancer carry (DD's EMA state and
+    HYBRID_HIST's histograms thread the same scan together)."""
+    from repro.core import E_DD_PS
+    cl = _life("HYBRID_HIST", ttl_s=3.0, max_idle=2)
+    _agree(E_DD_PS, cl, _wl(0.9, 300, 3))
+
+
+# --------------------------------------------------- registry contract
+
+
+def test_register_custom_keepalive_end_to_end():
+    """The keep-alive contract is open: a per-function tiered TTL
+    registered in ~20 lines runs through both engines in agreement (the
+    README 'custom keep-alive in 20 lines' shape)."""
+    def make_np(cfg, n_functions):
+        keep = np.where(np.arange(n_functions) % 2 == 0,
+                        2.0 * cfg.ttl_s, 0.25 * cfg.ttl_s)
+        pre = np.zeros(n_functions)
+
+        def windows(state):
+            return pre, keep
+        return windows, None
+
+    def make_jax(cfg, n_functions):
+        import jax.numpy as jnp
+        keep = jnp.where(jnp.arange(n_functions) % 2 == 0,
+                         2.0 * cfg.ttl_s, 0.25 * cfg.ttl_s)
+        pre = jnp.zeros(n_functions)
+
+        def windows(state):
+            return pre, keep
+        return windows, None
+
+    register_keepalive("TIERED", make_np=make_np, make_jax=make_jax,
+                       doc="even fns 2x TTL, odd fns 0.25x")
+    try:
+        assert parse_keepalive("tiered") == "TIERED"
+        cl = _life("TIERED", ttl_s=2.0)
+        out = _agree(HERMES, cl, _wl(0.8, 300, 5))
+        # the tiering is visible: the generous-TTL class cold-starts
+        # less often per invocation than the stingy one
+        wl = _wl(0.8, 300, 5)
+        even = wl.func % 2 == 0
+        assert out.cold[even].mean() < out.cold[~even].mean()
+    finally:
+        unregister_keepalive("TIERED")
+
+
+def test_early_builtin_name_collision_fails_fast_without_wedging():
+    """Registering a built-in name as the process's FIRST registry
+    touch must fail at the call site (built-ins are loaded first), not
+    succeed silently and wedge the deferred built-in import.  Needs a
+    fresh interpreter: once built-ins have loaded in-process, the
+    pre-load state cannot be reconstructed (the package keeps the
+    ``policies`` submodule attribute)."""
+    import subprocess
+    import sys
+    code = (
+        "from repro.lifecycle import register_keepalive, keepalive_names\n"
+        "try:\n"
+        "    register_keepalive('FIXED_TTL',\n"
+        "                       make_np=lambda cfg, F: (None, None))\n"
+        "except ValueError as e:\n"
+        "    assert 'already registered' in str(e), e\n"
+        "else:\n"
+        "    raise SystemExit('collision not detected')\n"
+        "names = set(keepalive_names())\n"
+        "assert {'NONE', 'FIXED_TTL', 'HYBRID_HIST'} <= names, names\n"
+        "print('OK')\n")
+    out = subprocess.run([sys.executable, "-c", code],
+                         capture_output=True, text=True,
+                         env={"PYTHONPATH": "src", "JAX_PLATFORMS": "cpu",
+                              "PATH": "/usr/bin:/bin:/usr/local/bin"},
+                         cwd=str(__import__("pathlib").Path(
+                             __file__).resolve().parent.parent))
+    assert out.returncode == 0, out.stderr
+    assert "OK" in out.stdout
+
+
+def test_registry_named_errors_and_backends():
+    with pytest.raises(ValueError, match="unknown keep-alive.*FIXED_TTL"):
+        parse_keepalive("NOPE")
+    with pytest.raises(ValueError, match="unknown cold-start preset"):
+        parse_cold_preset("NOPE")
+    assert parse_cold_preset("scalar") == "scalar"
+    ka = get_keepalive("HYBRID_HIST")
+    assert ka.stateful and ka.backends() == ("np", "jax")
+    assert not get_keepalive("FIXED_TTL").stateful
+    with pytest.raises(ValueError, match="already registered"):
+        register_keepalive("FIXED_TTL", make_np=lambda cfg, F: (None, None))
+    # unknown names inside a cluster config surface the same error
+    with pytest.raises(ValueError, match="unknown keep-alive"):
+        resolve_lifecycle(_life("GHOST"), backend="np", n_functions=4)
+
+
+def test_resolved_lifecycle_shape():
+    res = resolve_lifecycle(_life(ttl_s=9.0, max_idle=3,
+                                  coldstart="aws-lambda"),
+                            backend="np", n_functions=6)
+    assert res.max_idle == 3 and res.cold_costs.shape == (6,)
+    assert res.observe is None           # FIXED_TTL is stateless
+    pre, keep = res.windows(None)
+    assert np.all(pre == 0.0) and np.all(keep == 9.0)
+    assert resolve_lifecycle(CLUSTER, backend="np", n_functions=6) is None
+
+
+# ------------------------------------------------- np ≡ jax state parity
+
+
+def test_hybrid_hist_windows_bitwise_parity():
+    """Per-step state parity: the same observation sequence drives the
+    np and jax HYBRID_HIST backends to bitwise-identical windows."""
+    import jax.numpy as jnp
+    cfg = LifecycleCfg(keepalive="HYBRID_HIST", ttl_s=4.0)
+    ka = get_keepalive("HYBRID_HIST")
+    wn, on = ka.make_np(cfg, 3)
+    wj, oj = ka.make_jax(cfg, 3)
+    s_np = ka.init_state(cfg, 2, 3)
+    s_jax = {k: jnp.asarray(v) for k, v in ka.init_state(cfg, 2, 3).items()}
+    rng = np.random.default_rng(0)
+    for i in range(200):
+        f = int(rng.integers(0, 3))
+        gap = float(rng.exponential(3.0))
+        s_np = on(s_np, f, gap)
+        s_jax = oj(s_jax, f, gap)
+        pre_n, keep_n = wn(s_np)
+        pre_j, keep_j = wj(s_jax)
+        np.testing.assert_array_equal(pre_n, np.asarray(pre_j))
+        np.testing.assert_array_equal(keep_n, np.asarray(keep_j))
+    np.testing.assert_array_equal(s_np["hist"], np.asarray(s_jax["hist"]))
+
+
+# ------------------------------------------------ cold-start presets
+
+
+def test_cold_presets_deterministic_per_function():
+    a = cold_costs_for("aws-lambda", 16)
+    b = cold_costs_for("aws-lambda", 16)
+    np.testing.assert_array_equal(a, b)           # process-stable
+    assert len(np.unique(a)) > 1                  # per-function spread
+    assert (a > 0).all()
+    assert cold_costs_for("scalar", 16) is None
+    np.testing.assert_array_equal(cold_costs_for("paper-sim", 4),
+                                  np.zeros(4))
+
+
+def test_preset_costs_charged_by_engines():
+    wl = _wl(0.6, 250, 2)
+    cheap = simulate(HERMES, _life(ttl_s=2.0, coldstart="paper-sim"), wl)
+    dear = simulate(HERMES, _life(ttl_s=2.0, coldstart="openwhisk"), wl)
+    assert np.nansum(dear.response) > np.nansum(cheap.response)
+
+
+# ----------------------------------------- budget / eviction semantics
+
+
+def test_max_idle_budget_enforced_lru():
+    cl = ClusterCfg(n_workers=2, cores=2, capacity_factor=4,
+                    lifecycle=LifecycleCfg(ttl_s=100.0, max_idle=2))
+    res = resolve_lifecycle(cl, backend="np", n_functions=5)
+    rt = LifecycleRuntime(res, 2, 5)
+    warm = np.zeros((2, 5), dtype=np.int64)
+    for f, t in ((0, 1.0), (1, 2.0), (2, 3.0)):
+        rt.on_complete(warm, 0, f, t)
+    # budget 2: the third completion LRU-evicted fn 0 (oldest)
+    assert warm[0].tolist() == [0, 1, 1, 0, 0]
+    # tie-break on equal idle_since goes to the lowest function id
+    rt2 = LifecycleRuntime(res, 2, 5)
+    warm2 = np.zeros((2, 5), dtype=np.int64)
+    rt2.idle_since[1, 3] = 5.0
+    rt2.idle_since[1, 4] = 5.0
+    warm2[1, 3] = warm2[1, 4] = 1
+    assert rt2.evict_victim(warm2[1], 1, 6.0) == 3
+
+
+def test_budget_changes_simulation():
+    wl = _wl(0.9, 300, 4)
+    loose = simulate(HERMES, _life(ttl_s=50.0), wl)
+    tight = simulate(HERMES, _life(ttl_s=50.0, max_idle=1), wl)
+    assert int(tight.cold.sum()) > int(loose.cold.sum())
+
+
+# --------------------------------------------------- serving platform
+
+
+def test_serving_platform_matches_oracle_under_lifecycle():
+    from repro.serving.engine import ServeCfg, ServingCluster
+    wl = _wl(0.7, 300, 3)
+    for ka in ("FIXED_TTL", "HYBRID_HIST"):
+        cl = _life(ka, ttl_s=3.0, max_idle=2, coldstart="aws-lambda")
+        cfg0 = ServeCfg(cluster=cl, cold_start_s=0.0, ctrl_latency_s=0.0)
+        sv = ServingCluster(cfg0, HERMES).run(wl)
+        rf = simulate_ref(HERMES, cl, wl)
+        np.testing.assert_array_equal(sv.worker, rf.worker)
+        np.testing.assert_array_equal(sv.cold, rf.cold)
+
+
+def test_lifecycle_from_flags_cli_semantics():
+    """The CLI helper: all-defaults -> None (legacy, bit-for-bit);
+    preset or budget alone -> infinite window (no surprise expiry);
+    explicit keep-alive -> the requested window; names validated."""
+    import math
+    from repro.lifecycle import lifecycle_from_flags
+    assert lifecycle_from_flags() is None
+    lc = lifecycle_from_flags(coldstart="openwhisk")
+    assert lc.keepalive == "FIXED_TTL" and lc.ttl_s == math.inf
+    lc = lifecycle_from_flags(max_idle=4)
+    assert lc.ttl_s == math.inf and lc.max_idle == 4
+    lc = lifecycle_from_flags("hybrid_hist", 30.0, 2, "aws-lambda")
+    assert lc == LifecycleCfg("HYBRID_HIST", 30.0, 2, "aws-lambda")
+    with pytest.raises(ValueError, match="unknown keep-alive"):
+        lifecycle_from_flags("NOPE")
+    with pytest.raises(ValueError, match="unknown cold-start preset"):
+        lifecycle_from_flags(coldstart="NOPE")
+    # the infinite window runs through the engines in parity
+    wl = _wl(0.8, 250, 1)
+    cl = CLUSTER._replace(lifecycle=lifecycle_from_flags(
+        coldstart="openwhisk"))
+    _agree(HERMES, cl, wl)
+
+
+def test_inprocess_worker_keepalive_expiry():
+    from repro.serving.backends import InProcessWorker
+    w = InProcessWorker(registry=None, keepalive_s=5.0)
+    w.warm = {"a": object(), "b": object()}
+    w.lru = ["a", "b"]
+    w.idle_since = {"a": 10.0, "b": 14.0}
+    assert w.expire_idle(now=16.0) == 1          # 'a' idle 6s > 5s
+    assert list(w.warm) == ["b"] and w.lru == ["b"]
+    assert w.expire_idle(now=16.0) == 0

@@ -217,6 +217,53 @@ def test_resample_workloads_mixed_shapes():
         resample_workloads([w1, w2], n=max(w1.n, w2.n) + 1)
 
 
+def test_fixture_replay_recovers_reported_percentiles():
+    """Real-dataset validation harness (ROADMAP): the bundled Azure
+    fixture slice, loaded through the ``allow_missing_durations=True``
+    join a real dataset slice needs, replays into duration percentiles
+    within tolerance of the slice's *reported* ``percentile_Average_*``
+    columns — the regression gate a full Azure day-slice run reuses."""
+    from repro.trace.catalog import (FIXTURE_DURATIONS,
+                                     FIXTURE_INVOCATIONS)
+    trace = load_trace(FIXTURE_INVOCATIONS, FIXTURE_DURATIONS,
+                       allow_missing_durations=True)
+    wl = replay_trace(trace, CLUSTER, n_arrivals=25000, seed=11)
+    checked = 0
+    for i, fn in enumerate(trace.functions):
+        svc_ms = wl.service[wl.func == i] * 1000.0
+        if len(svc_ms) < 1000:
+            continue
+        assert np.percentile(svc_ms, 50) == pytest.approx(
+            fn.duration_ms[50], rel=0.12), f"fn{i} p50"
+        assert np.percentile(svc_ms, 75) == pytest.approx(
+            fn.duration_ms[75], rel=0.18), f"fn{i} p75"
+        checked += 1
+    assert checked >= 4       # the fixture's hot functions qualify
+
+
+def test_fixture_missing_duration_rows_fall_back_to_default(tmp_path):
+    """The same join with duration rows genuinely missing (the real
+    dataset's imperfect join): dropped functions sample the Azure
+    default Log-normal, the rest keep their reported percentiles."""
+    from repro.trace.catalog import (FIXTURE_DURATIONS,
+                                     FIXTURE_INVOCATIONS)
+    lines = open(FIXTURE_DURATIONS).read().splitlines()
+    short = tmp_path / "short_dur.csv"
+    short.write_text("\n".join(lines[:-2]) + "\n")   # drop 2 functions
+    trace = load_trace(FIXTURE_INVOCATIONS, str(short),
+                       allow_missing_durations=True)
+    assert trace.n_functions == 12                   # join kept them all
+    expect = lognormal_percentiles_ms(AZURE_MU, AZURE_SIGMA)
+    for fn in trace.functions[-2:]:
+        assert fn.duration_ms == expect
+    wl = replay_trace(trace, CLUSTER, n_arrivals=8000, seed=3)
+    assert np.isfinite(wl.service).all() and (wl.service > 0).all()
+    # a kept function still matches its reported median
+    svc0 = wl.service[wl.func == 0] * 1000.0
+    assert np.percentile(svc0, 50) == pytest.approx(
+        trace.functions[0].duration_ms[50], rel=0.15)
+
+
 # ---------------------------------------------------------------- cache
 
 
