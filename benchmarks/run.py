@@ -266,6 +266,12 @@ def main() -> None:
         print(f"  {r['scheduler']:16s} {r['impl']:14s} "
               f"{r['decisions_per_s']:12.0f} dec/s")
 
+    print("== analysis: jaxpr eqn budgets ==", flush=True)
+    from repro.analysis import bench_rows
+    analysis_rows, analysis_ok, analysis_detail = bench_rows()
+    ok &= _claim("Analysis: every engine within its jaxpr eqn budget",
+                 analysis_ok, analysis_detail)
+
     from repro.core.simulator import engine_cache_stats
     from .common import OUT_DIR
     elapsed = time.time() - t_start
@@ -275,6 +281,7 @@ def main() -> None:
         "ok": bool(ok),
         "checks": _CHECKS,
         "engine_cache": engine_cache_stats(),
+        "analysis": analysis_rows,
         "figures": {"fig2": f2, "fig3": f3, "fig4": f4, "fig6": f6,
                     "fig8": f8, "fig9": f9, "fig10": f10, "fig11": f11,
                     "fig12": f12, "tab_overhead": tov},

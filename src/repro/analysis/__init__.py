@@ -1,0 +1,62 @@
+"""repro.analysis — contract & determinism auditor.
+
+Three passes gate every engine in CI:
+
+1. **AST lint** (:mod:`repro.analysis.linter` /
+   :mod:`repro.analysis.rules`) — determinism (``DET*``), traced
+   hot-path (``HOT*``) and parity-lane dtype (``PAR*``) rules over
+   ``src/`` and ``benchmarks/``, with inline
+   ``# repro-lint: disable=<ID>`` escape hatches.
+2. **Jaxpr audit** (:mod:`repro.analysis.jaxpr_audit`) — traces every
+   registered (balancer × backend) engine plus each keep-alive lane
+   and walks the ClosedJaxpr for weak types, carry drift, host
+   callbacks and cache-key incompleteness (``JXP*``).
+3. **Contracts & budgets** (:mod:`repro.analysis.contracts` /
+   :mod:`repro.analysis.budgets`) — registry completeness (``CON*``)
+   and per-engine jaxpr equation budgets (``BGT001``) recorded into
+   ``experiments/BENCH_report.json``.
+
+Run ``python -m repro.analysis --strict`` for the CI gate;
+see the README "Static analysis" section for the rule catalog.
+"""
+from .budgets import BASELINES, bench_rows, check_budgets
+from .contracts import check_contracts
+from .findings import Finding
+from .jaxpr_audit import (audit_cache_key, audit_engines, audit_fn,
+                          audit_jaxpr, count_eqns, iter_engine_specs,
+                          run_audit, trace_engine)
+from .linter import lint_file, lint_paths
+from .registry import register_traced, traced
+from .rules import RULES
+
+__all__ = [
+    "BASELINES", "Finding", "RULES",
+    "audit_cache_key", "audit_engines", "audit_fn", "audit_jaxpr",
+    "bench_rows", "check_budgets", "check_contracts", "count_eqns",
+    "iter_engine_specs", "lint_file", "lint_paths", "register_traced",
+    "run_audit", "run_all", "trace_engine", "traced",
+]
+
+
+def run_all(paths=None, *, jaxpr: bool = True
+            ) -> tuple[list[Finding], list[dict]]:
+    """Every pass in order; returns (findings, budget rows).
+
+    ``paths`` defaults to the repo's ``src`` and ``benchmarks`` trees
+    (resolved relative to this package's parent checkout).
+    """
+    if paths is None:
+        from pathlib import Path
+        root = Path(__file__).resolve().parents[3]
+        paths = [p for p in (root / "src", root / "benchmarks")
+                 if p.is_dir()]
+    findings = list(lint_paths(paths))
+    rows: list[dict] = []
+    if jaxpr:
+        stats, jf = run_audit()
+        findings.extend(jf)
+        findings.extend(check_contracts())
+        brows, bf = check_budgets(stats)
+        rows = brows
+        findings.extend(bf)
+    return findings, rows

@@ -1,0 +1,70 @@
+"""CLI for the repro.analysis gate.
+
+Usage::
+
+    python -m repro.analysis                  # lint + jaxpr audit, report
+    python -m repro.analysis --strict         # exit 1 on any finding (CI)
+    python -m repro.analysis src/repro/core   # lint specific paths only
+    python -m repro.analysis --no-jaxpr       # fast: skip engine tracing
+    python -m repro.analysis --list-rules     # rule catalog
+    python -m repro.analysis --print-baselines  # paste-ready eqn budgets
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="AST lint + jaxpr audit + contract/budget gate.")
+    ap.add_argument("paths", nargs="*",
+                    help="files/directories to lint "
+                         "(default: src/ and benchmarks/)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero if any finding survives")
+    ap.add_argument("--no-jaxpr", action="store_true",
+                    help="skip the jaxpr/contract/budget passes "
+                         "(pure AST lint, no jax import)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    ap.add_argument("--print-baselines", action="store_true",
+                    help="trace every engine and print a paste-ready "
+                         "BASELINES literal for budgets.py")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        from .rules import RULES
+        for rid, rule in sorted(RULES.items()):
+            print(f"{rid:8s} {rule.title}")
+            print(f"         fix: {rule.hint}")
+        return 0
+
+    if args.print_baselines:
+        from .budgets import format_baselines
+        from .jaxpr_audit import audit_engines
+        stats, _ = audit_engines()
+        print(format_baselines(stats))
+        return 0
+
+    from . import run_all
+    findings, rows = run_all(args.paths or None,
+                             jaxpr=not args.no_jaxpr)
+    for f in findings:
+        print(f.format())
+    if rows:
+        traced = len(rows)
+        over = [r["label"] for r in rows if not r["ok"]]
+        print(f"[analysis] {traced} engines traced; "
+              + (f"OVER BUDGET: {', '.join(over)}" if over
+                 else "all within eqn budgets"))
+    n = len(findings)
+    print(f"[analysis] {n} finding{'s' if n != 1 else ''}")
+    if findings and args.strict:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,113 @@
+"""Per-engine jaxpr complexity budgets (``BGT001``).
+
+Fusion regressions show up as equation-count blowups long before they
+show up as wall-clock noise: a carry dtype drift de-fuses the scan
+body, a new host sync splits the program, an accidental ``vmap`` of a
+scalar path multiplies the eqn count.  This pass traces every
+registered engine (see :func:`repro.analysis.jaxpr_audit
+.iter_engine_specs`), counts jaxpr equations recursively, and fails if
+any engine exceeds its recorded budget.
+
+Budgets are *measured baselines × headroom* — loose enough to allow
+normal drift (new policy features change counts by a few eqns), tight
+enough that a structural break (≥ ~50%) trips.  An engine with no
+recorded baseline gets :data:`DEFAULT_BUDGET`; re-baseline with
+``python -m repro.analysis --print-baselines`` after intentional
+engine surgery.
+
+:func:`bench_rows` is the ``benchmarks/run.py`` hook: it returns the
+rows recorded under ``analysis`` in ``BENCH_report.json`` alongside a
+REPRO-CHECK-style ``(ok, detail)`` verdict.
+"""
+from __future__ import annotations
+
+from .findings import Finding
+from .rules import RULES
+
+#: Measured eqn-count baselines per engine label (AUDIT_N=8 arrivals,
+#: AUDIT_F=3 functions, AUDIT_W=3 workers — counts are shape-dependent,
+#: keep in sync with :mod:`repro.analysis.jaxpr_audit`).
+BASELINES: dict[str, int] = {
+    "E/LOC/PS|jax": 608,
+    "E/LOC/PS|pallas": 608,
+    "E/R/PS|jax": 592,
+    "E/R/PS|pallas": 592,
+    "E/LL/PS|jax": 579,
+    "E/LL/PS|pallas": 579,
+    "E/H/PS|jax": 601,
+    "E/H/PS|pallas": 623,
+    "E/JSQ2/PS|jax": 607,
+    "E/JSQ2/PS|pallas": 607,
+    "E/RR/PS|jax": 614,
+    "E/RR/PS|pallas": 614,
+    "E/HIKU/PS|jax": 779,
+    "E/HIKU/PS|pallas": 779,
+    "E/DD/PS|jax": 695,
+    "E/DD/PS|pallas": 695,
+    "E/LL/PS|jax|ka=NONE": 756,
+    "E/LL/PS|jax|ka=FIXED_TTL": 756,
+    "E/LL/PS|jax|ka=HYBRID_HIST": 860,
+    "L/LL/FCFS|jax": 1306,
+}
+
+#: Headroom multiplier over the measured baseline.
+HEADROOM: float = 1.5
+
+#: Budget for engines with no recorded baseline (new policies land
+#: before re-baselining; this only guards against gross blowups).
+DEFAULT_BUDGET: int = 2000
+
+
+def budget_for(label: str) -> int:
+    base = BASELINES.get(label)
+    if base is None:
+        return DEFAULT_BUDGET
+    return int(base * HEADROOM)
+
+
+def check_budgets(stats=None) -> tuple[list[dict], list[Finding]]:
+    """Trace every engine, compare eqn counts against budgets.
+
+    Returns ``(rows, findings)`` where ``rows`` are JSON-ready dicts
+    (one per engine: label, eqns, budget, baseline, ok) and
+    ``findings`` carry a ``BGT001`` per over-budget engine.
+    """
+    if stats is None:
+        from .jaxpr_audit import audit_engines
+        stats, _ = audit_engines()
+    rows: list[dict] = []
+    findings: list[Finding] = []
+    for st in stats:
+        budget = budget_for(st.label)
+        row = st.row()
+        row["baseline"] = BASELINES.get(st.label)
+        row["budget"] = budget
+        row["ok"] = st.eqns <= budget
+        rows.append(row)
+        if not row["ok"]:
+            findings.append(Finding(
+                path=f"<engine:{st.label}>", line=0, rule="BGT001",
+                message=(f"jaxpr has {st.eqns} eqns, budget {budget} "
+                         f"(baseline {row['baseline']}) — a fusion or "
+                         f"carry-structure regression"),
+                hint=RULES["BGT001"].hint))
+    return rows, findings
+
+
+def bench_rows() -> tuple[list[dict], bool, str]:
+    """Budget gate for ``benchmarks/run.py``: (rows, ok, detail)."""
+    rows, findings = check_budgets()
+    over = [f.path for f in findings]
+    detail = (f"{len(rows)} engines traced, "
+              + (f"over budget: {', '.join(over)}" if over
+                 else "all within eqn budgets"))
+    return rows, not over, detail
+
+
+def format_baselines(stats) -> str:
+    """Render measured stats as a paste-ready ``BASELINES`` literal."""
+    lines = ["BASELINES: dict[str, int] = {"]
+    for st in stats:
+        lines.append(f'    "{st.label}": {st.eqns},')
+    lines.append("}")
+    return "\n".join(lines)

@@ -1,0 +1,271 @@
+"""Registry contract-completeness checks (``CON*`` findings).
+
+The engines never branch on policy names — they trust the registries.
+That trust is a contract this pass makes checkable:
+
+* **Balancers** (``CON001``): every declared backend factory must be
+  callable and instantiable at a probe shape; a balancer must ship both
+  ``np`` and ``jax`` backends (otherwise it silently drops out of the
+  oracle-vs-engine parity lane); stateful balancers
+  (``init_state`` set) must return ``(select, on_complete)`` pairs
+  from *every* backend factory and a non-empty state pytree, stateless
+  ones must return bare callables.
+* **Scheds** (``CON002``): ``make_np`` and ``make_jax`` both present
+  and instantiable (both engines resolve rate assignment).
+* **Keep-alives** (``CON003``): factories return ``(windows,
+  observe)``; ``observe`` is non-None iff the policy declares
+  ``init_state``; the np backend's ``windows`` must produce per-
+  function ``(pre, keep)`` vectors of the probed length.
+* **Kernel packages** (``CON004``): every ``repro.kernels`` subpackage
+  ships the ``kernel.py`` + ``ops.py`` + ``ref.py`` trio; each public
+  op has a ``<op>_ref`` reference whose required signature the op can
+  satisfy (the op may add batch arguments and tuning keywords; the
+  reference must not require more).
+"""
+from __future__ import annotations
+
+import importlib
+import inspect
+from pathlib import Path
+
+from .findings import Finding
+from .rules import RULES
+
+_PROBE_CORES, _PROBE_SLOTS = 2, 4
+_PROBE_W, _PROBE_F = 2, 3
+
+
+def _find(findings, loc: str, rule: str, msg: str) -> None:
+    findings.append(Finding(path=loc, line=0, rule=rule, message=msg,
+                            hint=RULES[rule].hint))
+
+
+# --------------------------------------------------------------------------
+# balancers / scheds / keep-alives
+# --------------------------------------------------------------------------
+
+def check_balancers() -> list[Finding]:
+    from repro.policy.registry import BALANCERS, _load_builtins
+    _load_builtins()
+    findings: list[Finding] = []
+    for name, bal in sorted(BALANCERS.items()):
+        loc = f"<registry:balancer:{name}>"
+        if bal.make_np is None or bal.make_jax is None:
+            _find(findings, loc, "CON001",
+                  f"missing {'np' if bal.make_np is None else 'jax'} "
+                  f"backend — not sweepable by every engine "
+                  f"(has: {bal.backends()})")
+        for bname, factory in (("np", bal.make_np), ("jax", bal.make_jax),
+                               ("pallas", bal.make_pallas),
+                               ("batch", bal.make_batch)):
+            if factory is None:
+                continue
+            if not callable(factory):
+                _find(findings, loc, "CON001",
+                      f"make_{bname} is not callable")
+                continue
+            try:
+                made = factory(_PROBE_CORES, _PROBE_SLOTS)
+            except Exception as e:  # noqa: BLE001 — report, don't crash
+                _find(findings, loc, "CON001",
+                      f"make_{bname}({_PROBE_CORES}, {_PROBE_SLOTS}) "
+                      f"raised {type(e).__name__}: {e}")
+                continue
+            if bname == "batch":
+                if not callable(made):
+                    _find(findings, loc, "CON001",
+                          "make_batch must return a callable")
+                continue
+            if bal.stateful:
+                if not (isinstance(made, tuple) and len(made) == 2
+                        and all(callable(f) for f in made)):
+                    _find(findings, loc, "CON001",
+                          f"stateful balancer's make_{bname} must "
+                          f"return a (select, on_complete) pair of "
+                          f"callables, got {type(made).__name__}")
+            elif not callable(made) or isinstance(made, tuple):
+                _find(findings, loc, "CON001",
+                      f"stateless balancer's make_{bname} must return "
+                      f"a bare select callable, got "
+                      f"{type(made).__name__}")
+        if bal.stateful:
+            try:
+                st = bal.init_state(_PROBE_W, _PROBE_F)
+            except Exception as e:  # noqa: BLE001
+                _find(findings, loc, "CON001",
+                      f"init_state({_PROBE_W}, {_PROBE_F}) raised "
+                      f"{type(e).__name__}: {e}")
+            else:
+                if not isinstance(st, dict) or not st:
+                    _find(findings, loc, "CON001",
+                          "init_state must return a non-empty dict "
+                          "state pytree")
+    return findings
+
+
+def check_scheds() -> list[Finding]:
+    from repro.policy.registry import SCHEDS, _load_builtins
+    _load_builtins()
+    findings: list[Finding] = []
+    for name, sd in sorted(SCHEDS.items()):
+        loc = f"<registry:sched:{name}>"
+        for bname, factory in (("np", sd.make_np), ("jax", sd.make_jax)):
+            if factory is None:
+                _find(findings, loc, "CON002",
+                      f"missing make_{bname} — both engines resolve "
+                      f"rate assignment through the registry")
+                continue
+            try:
+                made = factory(_PROBE_CORES)
+            except Exception as e:  # noqa: BLE001
+                _find(findings, loc, "CON002",
+                      f"make_{bname}({_PROBE_CORES}) raised "
+                      f"{type(e).__name__}: {e}")
+                continue
+            if not callable(made):
+                _find(findings, loc, "CON002",
+                      f"make_{bname} must return a rates callable")
+    return findings
+
+
+def check_keepalives() -> list[Finding]:
+    from repro.lifecycle.config import LifecycleCfg
+    from repro.lifecycle.registry import KEEPALIVES, _load_builtins
+    _load_builtins()
+    findings: list[Finding] = []
+    for name, ka in sorted(KEEPALIVES.items()):
+        loc = f"<registry:keepalive:{name}>"
+        cfg = LifecycleCfg(keepalive=name)
+        for bname, factory in (("np", ka.make_np), ("jax", ka.make_jax)):
+            if factory is None:
+                _find(findings, loc, "CON003",
+                      f"missing make_{bname} backend "
+                      f"(has: {ka.backends()})")
+                continue
+            try:
+                made = factory(cfg, _PROBE_F)
+            except Exception as e:  # noqa: BLE001
+                _find(findings, loc, "CON003",
+                      f"make_{bname}(cfg, {_PROBE_F}) raised "
+                      f"{type(e).__name__}: {e}")
+                continue
+            if not (isinstance(made, tuple) and len(made) == 2
+                    and callable(made[0])):
+                _find(findings, loc, "CON003",
+                      f"make_{bname} must return a (windows, observe) "
+                      f"pair, got {type(made).__name__}")
+                continue
+            windows, observe = made
+            if ka.stateful and observe is None:
+                _find(findings, loc, "CON003",
+                      f"stateful keep-alive's make_{bname} must return "
+                      f"a non-None observe hook")
+            if not ka.stateful and observe is not None:
+                _find(findings, loc, "CON003",
+                      f"stateless keep-alive's make_{bname} returned "
+                      f"an observe hook but no init_state is declared")
+            if bname == "np":
+                state = None
+                if ka.stateful:
+                    state = ka.init_state(cfg, _PROBE_W, _PROBE_F)
+                try:
+                    pre, keep = windows(state)
+                except Exception as e:  # noqa: BLE001
+                    _find(findings, loc, "CON003",
+                          f"windows(state) raised "
+                          f"{type(e).__name__}: {e}")
+                    continue
+                if getattr(pre, "shape", None) != (_PROBE_F,) \
+                        or getattr(keep, "shape", None) != (_PROBE_F,):
+                    _find(findings, loc, "CON003",
+                          f"windows must return per-function "
+                          f"(pre[F], keep[F]) vectors, got shapes "
+                          f"{getattr(pre, 'shape', None)} / "
+                          f"{getattr(keep, 'shape', None)}")
+        if ka.stateful:
+            st = ka.init_state(cfg, _PROBE_W, _PROBE_F)
+            if not isinstance(st, dict) or not st:
+                _find(findings, loc, "CON003",
+                      "init_state must return a non-empty dict state "
+                      "pytree")
+    return findings
+
+
+# --------------------------------------------------------------------------
+# kernel packages
+# --------------------------------------------------------------------------
+
+def _public_functions(mod) -> dict:
+    # jitted ops are PjitFunction wrappers, not plain functions — accept
+    # any callable defined in the module (functools.wraps preserves
+    # __module__ through jax.jit).
+    return {n: f for n, f in vars(mod).items()
+            if callable(f) and not n.startswith("_")
+            and not inspect.isclass(f) and not inspect.ismodule(f)
+            and getattr(f, "__module__", None) == mod.__name__}
+
+
+def check_kernels() -> list[Finding]:
+    import repro.kernels as kpkg
+    findings: list[Finding] = []
+    root = Path(kpkg.__file__).parent
+    for pkg_dir in sorted(p for p in root.iterdir() if p.is_dir()
+                          and p.name != "__pycache__"):
+        name = pkg_dir.name
+        loc = f"<kernels:{name}>"
+        missing = [m for m in ("kernel.py", "ops.py", "ref.py")
+                   if not (pkg_dir / m).exists()]
+        if missing:
+            _find(findings, loc, "CON004",
+                  f"kernel package missing {', '.join(missing)}")
+            continue
+        try:
+            ops = importlib.import_module(f"repro.kernels.{name}.ops")
+            ref = importlib.import_module(f"repro.kernels.{name}.ref")
+        except Exception as e:  # noqa: BLE001
+            _find(findings, loc, "CON004",
+                  f"import failed: {type(e).__name__}: {e}")
+            continue
+        ops_fns = _public_functions(ops)
+        ref_fns = _public_functions(ref)
+        if not ops_fns:
+            _find(findings, loc, "CON004", "ops.py exposes no public op")
+        if not any(n.endswith("_ref") for n in ref_fns):
+            _find(findings, loc, "CON004",
+                  "ref.py exposes no *_ref reference implementation")
+        for op_name, op in ops_fns.items():
+            ref_fn = ref_fns.get(f"{op_name}_ref")
+            if ref_fn is None:
+                _find(findings, loc, "CON004",
+                      f"no {op_name}_ref in ref.py for op '{op_name}'")
+                continue
+            op_sig = inspect.signature(op)
+            ref_sig = inspect.signature(ref_fn)
+
+            def required(sig, kinds):
+                return [p.name for p in sig.parameters.values()
+                        if p.kind in kinds
+                        and p.default is inspect.Parameter.empty]
+
+            pos = (inspect.Parameter.POSITIONAL_ONLY,
+                   inspect.Parameter.POSITIONAL_OR_KEYWORD)
+            kw = (inspect.Parameter.KEYWORD_ONLY,)
+            if len(required(op_sig, pos)) < len(required(ref_sig, pos)):
+                _find(findings, loc, "CON004",
+                      f"'{op_name}' takes fewer required array args "
+                      f"than {op_name}_ref "
+                      f"({required(op_sig, pos)} vs "
+                      f"{required(ref_sig, pos)})")
+            missing_kw = [p for p in required(ref_sig, kw)
+                          if p not in op_sig.parameters]
+            if missing_kw:
+                _find(findings, loc, "CON004",
+                      f"'{op_name}' is missing required keyword(s) of "
+                      f"{op_name}_ref: {missing_kw}")
+    return findings
+
+
+def check_contracts() -> list[Finding]:
+    """Every registry + kernel-package contract check."""
+    return (check_balancers() + check_scheds() + check_keepalives()
+            + check_kernels())

@@ -1,0 +1,30 @@
+"""The :class:`Finding` record shared by every analysis pass.
+
+A finding is one concrete violation: a rule id from the catalog
+(:mod:`repro.analysis.rules`), a location (file:line for AST findings,
+a symbolic location like ``<registry:balancer:DD>`` for registry/jaxpr
+findings), a one-line message and a fix hint.  Findings are plain
+frozen dataclasses so passes can be unit-tested by comparing them
+directly and the CLI can render/sort them uniformly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One concrete analysis violation."""
+
+    path: str          # file path, or "<registry:...>" / "<jaxpr:...>"
+    line: int          # 1-based; 0 for non-file findings
+    rule: str          # catalog id, e.g. "DET001"
+    message: str
+    hint: str = ""
+
+    def format(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        out = f"{loc}: {self.rule} {self.message}"
+        if self.hint:
+            out += f"\n    hint: {self.hint}"
+        return out

@@ -1,0 +1,361 @@
+"""Jaxpr-level determinism & contract audit of the compiled engines.
+
+Where the AST lint sees source, this pass sees what XLA will actually
+compile: each registered (balancer × backend) engine — plus one lane
+per registered keep-alive policy — is traced via :func:`jax.make_jaxpr`
+at a tiny shape (tracing only, no compilation) and the ClosedJaxpr is
+walked for hazards that historically showed up as flaky parity
+failures:
+
+* ``JXP001`` — weak-typed engine outputs or scan/while carries (weak
+  types re-promote at the next op and can diverge from the numpy
+  oracle or recompile per call site),
+* ``JXP002`` — carry pytree structure / dtype drift between scan
+  iterations (jax itself errors on hard mismatches; the audit reports
+  the aval diff readably and also covers while_loop carries),
+* ``JXP003`` — 64-bit values in lanes declared 32-bit (the simulator
+  engines are float64 *by design* and audit with ``allow_64=True``;
+  kernel/toy lanes can pin 32-bit),
+* ``JXP004`` — host callbacks (``debug_callback`` / ``pure_callback``
+  / ``io_callback`` / infeed/outfeed) inside the compiled hot path,
+* ``JXP005`` — engine-cache-key incompleteness: every
+  ``ClusterCfg`` / ``LifecycleCfg`` field is perturbed and the
+  :func:`repro.core.simulator._cache_key` is probed — a field that
+  changes the traced program but not the key would silently share a
+  compiled engine between different configs.
+
+:func:`audit_engines` also returns one stats row per engine (jaxpr eqn
+count, scan count, carry leaves/bytes) — the raw material for the
+budget gate in :mod:`repro.analysis.budgets`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterable, Optional
+
+import numpy as np
+
+from .findings import Finding
+from .rules import RULES
+
+#: Primitive names that run code on host mid-program.
+HOST_CALLBACK_PRIMS = frozenset({
+    "debug_callback", "pure_callback", "io_callback", "callback",
+    "infeed", "outfeed", "host_callback_call",
+})
+
+#: Tiny audit shape — tracing cost only, results never executed.
+AUDIT_N, AUDIT_F, AUDIT_W = 8, 3, 3
+
+
+def _jax():
+    import jax  # deferred so `--no-jaxpr` lint runs never import jax
+    return jax
+
+
+# --------------------------------------------------------------------------
+# jaxpr walking helpers
+# --------------------------------------------------------------------------
+
+def _sub_jaxprs(params: dict):
+    from jax.core import Jaxpr
+    from jax.extend.core import ClosedJaxpr  # type: ignore
+    for v in params.values():
+        vals = v if isinstance(v, (list, tuple)) else (v,)
+        for item in vals:
+            if isinstance(item, ClosedJaxpr):
+                yield item.jaxpr
+            elif isinstance(item, Jaxpr):
+                yield item
+            elif hasattr(item, "jaxpr") and hasattr(item, "consts"):
+                yield item.jaxpr
+
+
+def iter_eqns(jaxpr) -> Iterable:
+    """All eqns of ``jaxpr`` and (recursively) its sub-jaxprs."""
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)  # unwrap ClosedJaxpr
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for sub in _sub_jaxprs(eqn.params):
+            yield from iter_eqns(sub)
+
+
+def count_eqns(jaxpr) -> int:
+    return sum(1 for _ in iter_eqns(jaxpr))
+
+
+def _aval_str(aval) -> str:
+    weak = ", weak" if getattr(aval, "weak_type", False) else ""
+    return f"{getattr(aval, 'dtype', '?')}{getattr(aval, 'shape', '?')}" \
+           f"{weak}"
+
+
+def _avals_mismatch(a, b) -> bool:
+    return (getattr(a, "shape", None) != getattr(b, "shape", None)
+            or getattr(a, "dtype", None) != getattr(b, "dtype", None)
+            or getattr(a, "weak_type", False)
+            != getattr(b, "weak_type", False))
+
+
+# --------------------------------------------------------------------------
+# single-program audit (also the unit-testable entry point)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class JaxprStats:
+    label: str
+    eqns: int
+    scans: int
+    whiles: int
+    carry_leaves: int
+    carry_bytes: int
+    outputs: int
+
+    def row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def audit_jaxpr(closed, *, label: str = "<fn>",
+                allow_64: bool = True,
+                allow_weak_outputs: bool = False
+                ) -> tuple[JaxprStats, list[Finding]]:
+    """Walk one ClosedJaxpr; returns (stats, findings)."""
+    findings: list[Finding] = []
+    loc = f"<jaxpr:{label}>"
+
+    def find(rule: str, msg: str):
+        findings.append(Finding(path=loc, line=0, rule=rule,
+                                message=msg, hint=RULES[rule].hint))
+
+    scans = whiles = 0
+    carry_leaves = 0
+    carry_bytes = 0
+    for eqn in iter_eqns(closed):
+        prim = eqn.primitive.name
+        if prim in HOST_CALLBACK_PRIMS or prim.endswith("_callback"):
+            find("JXP004", f"host callback primitive '{prim}' in "
+                           f"compiled program")
+        if prim == "scan":
+            scans += 1
+            body = eqn.params["jaxpr"]
+            nc = eqn.params["num_carry"]
+            nconsts = eqn.params["num_consts"]
+            cin = list(body.in_avals)[nconsts:nconsts + nc]
+            cout = list(body.out_avals)[:nc]
+            for i, (a, b) in enumerate(zip(cin, cout)):
+                if _avals_mismatch(a, b):
+                    find("JXP002",
+                         f"scan carry leaf {i} drifts across "
+                         f"iterations: {_aval_str(a)} -> {_aval_str(b)}")
+            carry_leaves += nc
+            for a in cin:
+                carry_bytes += int(np.prod(a.shape, dtype=np.int64)
+                                   * a.dtype.itemsize)
+                if getattr(a, "weak_type", False):
+                    find("JXP001", f"weak-typed scan carry leaf "
+                                   f"{_aval_str(a)}")
+        elif prim == "while":
+            whiles += 1
+            body = eqn.params["body_jaxpr"]
+            nconsts = eqn.params["body_nconsts"]
+            cin = list(body.in_avals)[nconsts:]
+            cout = list(body.out_avals)
+            for i, (a, b) in enumerate(zip(cin, cout)):
+                if _avals_mismatch(a, b):
+                    find("JXP002",
+                         f"while carry leaf {i} drifts across "
+                         f"iterations: {_aval_str(a)} -> {_aval_str(b)}")
+                if getattr(a, "weak_type", False):
+                    find("JXP001", f"weak-typed while carry leaf "
+                                   f"{_aval_str(a)}")
+
+    out_avals = closed.out_avals
+    for i, a in enumerate(out_avals):
+        if getattr(a, "weak_type", False) and not allow_weak_outputs:
+            find("JXP001", f"weak-typed program output {i}: "
+                           f"{_aval_str(a)}")
+        if not allow_64 and getattr(a, "dtype", None) is not None \
+                and a.dtype.itemsize == 8 \
+                and a.dtype.kind in ("f", "i", "u", "c"):
+            find("JXP003", f"64-bit output {i} ({_aval_str(a)}) in a "
+                           f"lane declared 32-bit")
+    if not allow_64:
+        for eqn in iter_eqns(closed):
+            for v in eqn.outvars:
+                a = getattr(v, "aval", None)
+                dt = getattr(a, "dtype", None)
+                if dt is not None and dt.itemsize == 8 \
+                        and dt.kind in ("f", "i", "u", "c"):
+                    find("JXP003",
+                         f"64-bit intermediate from primitive "
+                         f"'{eqn.primitive.name}' ({_aval_str(a)})")
+                    break
+            else:
+                continue
+            break
+
+    stats = JaxprStats(label=label, eqns=count_eqns(closed), scans=scans,
+                       whiles=whiles, carry_leaves=carry_leaves,
+                       carry_bytes=carry_bytes, outputs=len(out_avals))
+    return stats, findings
+
+
+def audit_fn(fn: Callable, *example_args, label: str = "<fn>",
+             allow_64: bool = True, allow_weak_outputs: bool = False
+             ) -> tuple[JaxprStats, list[Finding]]:
+    """Trace ``fn`` on example args/ShapeDtypeStructs and audit it."""
+    jax = _jax()
+    closed = jax.make_jaxpr(fn)(*example_args)
+    return audit_jaxpr(closed, label=label, allow_64=allow_64,
+                       allow_weak_outputs=allow_weak_outputs)
+
+
+# --------------------------------------------------------------------------
+# engine enumeration + tracing
+# --------------------------------------------------------------------------
+
+def _audit_cluster(lifecycle=None):
+    from repro.core.cluster import ClusterCfg
+    return ClusterCfg(n_workers=AUDIT_W, cores=2, capacity_factor=2,
+                      lifecycle=lifecycle)
+
+
+def iter_engine_specs(*, balancers: Optional[Iterable[str]] = None,
+                      sched: str = "PS") -> list[tuple]:
+    """(label, policy, cluster, backend) per audited engine.
+
+    Covers every (balancer × traceable backend) pair in the registry —
+    backends are ``jax`` plus ``pallas`` (balancers without a kernel
+    run their jax implementation under the pallas backend, exactly as
+    :func:`repro.policy.registry._pallas_select` dispatches them) —
+    plus one ``jax`` lane per registered keep-alive policy (balancer
+    ``LL``) so lifecycle carries are audited too.
+    """
+    from repro.core.taxonomy import Binding, PolicySpec
+    from repro.lifecycle import LifecycleCfg
+    from repro.lifecycle.registry import keepalive_names
+    from repro.policy import balancer_names
+    names = tuple(balancers) if balancers is not None \
+        else balancer_names()
+    specs: list[tuple] = []
+    plain = _audit_cluster()
+    for bname in names:
+        pol = PolicySpec(Binding.EARLY, bname, sched)
+        for backend in ("jax", "pallas"):
+            specs.append((f"{pol.name}|{backend}", pol, plain, backend))
+    if balancers is None:
+        pol = PolicySpec(Binding.EARLY, "LL", sched)
+        for ka in keepalive_names():
+            cl = _audit_cluster(LifecycleCfg(keepalive=ka))
+            specs.append((f"{pol.name}|jax|ka={ka}", pol, cl, "jax"))
+        # the late-binding engine (no balancer axis, controller queue)
+        late = PolicySpec(Binding.LATE, "LL", "FCFS")
+        specs.append((f"{late.name}|jax", late, plain, "jax"))
+    return specs
+
+
+def trace_engine(policy, cluster, backend: str = "jax",
+                 n_arrivals: int = AUDIT_N, n_functions: int = AUDIT_F):
+    """``jax.make_jaxpr`` of the raw scan engine (tracing only)."""
+    jax = _jax()
+    import jax.numpy as jnp
+    from repro.core.simulator import _build_engine
+    run = _build_engine(policy, cluster, n_arrivals, n_functions,
+                        backend)
+    N, F = n_arrivals, n_functions
+    f64 = jax.ShapeDtypeStruct((N,), jnp.float64)
+    i64 = jax.ShapeDtypeStruct((N,), jnp.int64)
+    homes = jax.ShapeDtypeStruct((F,), jnp.int64)
+    return jax.make_jaxpr(run)(f64, i64, f64, f64, homes)
+
+
+def audit_engines(*, balancers: Optional[Iterable[str]] = None
+                  ) -> tuple[list[JaxprStats], list[Finding]]:
+    """Trace + audit every engine spec; returns (stats, findings)."""
+    all_stats: list[JaxprStats] = []
+    findings: list[Finding] = []
+    for label, policy, cluster, backend in iter_engine_specs(
+            balancers=balancers):
+        closed = trace_engine(policy, cluster, backend)
+        stats, fs = audit_jaxpr(closed, label=label, allow_64=True)
+        all_stats.append(stats)
+        findings.extend(fs)
+    return all_stats, findings
+
+
+# --------------------------------------------------------------------------
+# engine-cache-key completeness probe (JXP005)
+# --------------------------------------------------------------------------
+
+def _perturb(value: Any, field: str):
+    """A different-but-valid value for a config field, or None to skip."""
+    if field == "keepalive":
+        from repro.lifecycle.registry import keepalive_names
+        others = [k for k in keepalive_names() if k != value]
+        return others[0] if others else None
+    if field == "coldstart":
+        return "paper-sim" if value != "paper-sim" else "scalar"
+    if isinstance(value, bool):
+        return not value
+    if isinstance(value, int):
+        return value + 1
+    if isinstance(value, float):
+        return value + 1.0
+    if isinstance(value, str):
+        return value + "_x"
+    return None
+
+
+def audit_cache_key() -> list[Finding]:
+    """Probe ``build_simulator``'s memo key against every config field.
+
+    For each ``ClusterCfg`` field (and each ``LifecycleCfg`` sub-field)
+    a perturbed config is built; if the engine-cache key does not
+    change, two different configs would share one compiled engine —
+    the bug class the PR-6 satellite regression test locks in.
+    """
+    from repro.core.simulator import _cache_key
+    from repro.core.taxonomy import parse_policy
+    from repro.lifecycle import LifecycleCfg
+    findings: list[Finding] = []
+    policy = parse_policy("E/LL/PS")
+
+    def probe(base, changed, field: str):
+        k0 = _cache_key(policy, base, AUDIT_N, AUDIT_F, False, "jax")
+        k1 = _cache_key(policy, changed, AUDIT_N, AUDIT_F, False, "jax")
+        if k0 == k1:
+            findings.append(Finding(
+                path=f"<cache-key:{field}>", line=0, rule="JXP005",
+                message=f"configs differing in '{field}' share an "
+                        f"engine cache key", hint=RULES["JXP005"].hint))
+
+    base = _audit_cluster()
+    for field in type(base)._fields:
+        value = getattr(base, field)
+        if field == "lifecycle":
+            probe(base, base._replace(lifecycle=LifecycleCfg()),
+                  "lifecycle")
+            continue
+        new = _perturb(value, field)
+        if new is None:
+            continue
+        probe(base, base._replace(**{field: new}), field)
+
+    lbase = _audit_cluster(LifecycleCfg())
+    for field in LifecycleCfg._fields:
+        value = getattr(lbase.lifecycle, field)
+        new = _perturb(value, field)
+        if new is None:
+            continue
+        probe(lbase, lbase._replace(
+            lifecycle=lbase.lifecycle._replace(**{field: new})),
+            f"lifecycle.{field}")
+    return findings
+
+
+def run_audit(*, balancers: Optional[Iterable[str]] = None
+              ) -> tuple[list[JaxprStats], list[Finding]]:
+    """Full jaxpr pass: engine audits + cache-key probe."""
+    stats, findings = audit_engines(balancers=balancers)
+    findings.extend(audit_cache_key())
+    return stats, findings

@@ -1,0 +1,259 @@
+"""Visitor-based AST lint engine over ``src/`` and ``benchmarks/``.
+
+:func:`lint_file` parses one file, figures out its lane flags (hot
+path / parity lane, from :mod:`repro.analysis.registry` plus the
+``# repro-lint: hot-path`` / ``# repro-lint: parity-lane`` marker
+comments), tracks which functions are traced (``@traced`` / jit
+decorators / the name registry) and runs every rule check from
+:mod:`repro.analysis.rules`.  Findings silenced by an inline
+``# repro-lint: disable=<ID>`` on any physical line of the offending
+statement (or a file-level ``disable-file=``) are dropped.
+
+:func:`lint_paths` walks directories recursively (``*.py`` only,
+skipping ``__pycache__`` and hidden directories).
+"""
+from __future__ import annotations
+
+import ast
+import io
+import re
+import tokenize
+from pathlib import Path
+from typing import Iterable, Optional
+
+from .findings import Finding
+from .registry import (is_hot_path_file, is_parity_lane_file,
+                       nesting_path_matches, traced_patterns_for)
+from .rules import (RULES, LintContext, check_branch, check_call,
+                    check_import, check_iteration)
+
+_DIRECTIVE = re.compile(
+    r"#\s*repro-lint:\s*(disable(?:-file)?)\s*=\s*([A-Za-z0-9_,\s]+)")
+_MARKER = re.compile(r"#\s*repro-lint:\s*(hot-path|parity-lane)\b")
+
+
+def _scan_comments(text: str):
+    """(line → disabled-ids, file-disabled-ids, marker set)."""
+    per_line: dict[int, set[str]] = {}
+    file_wide: set[str] = set()
+    markers: set[str] = set()
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(text).readline)
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = _MARKER.search(tok.string)
+            if m:
+                markers.add(m.group(1))
+            m = _DIRECTIVE.search(tok.string)
+            if not m:
+                continue
+            ids = {p.strip().upper() for p in m.group(2).split(",")
+                   if p.strip()}
+            ids = {i for i in ids if i in RULES}
+            if m.group(1) == "disable-file":
+                file_wide |= ids
+            else:
+                per_line.setdefault(tok.start[0], set()).update(ids)
+    except tokenize.TokenError:
+        pass
+    return per_line, file_wide, markers
+
+
+def _is_traced_decorator(dec: ast.AST) -> bool:
+    """``@traced``, ``@jit``, ``@jax.jit``, ``@partial(jax.jit, ...)``."""
+    def name_of(node):
+        parts = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if isinstance(node, ast.Name):
+            parts.append(node.id)
+        return ".".join(reversed(parts))
+
+    n = name_of(dec)
+    if n in ("traced", "jit", "jax.jit") or n.endswith(".traced"):
+        return True
+    if isinstance(dec, ast.Call):
+        fn = name_of(dec.func)
+        if fn in ("jit", "jax.jit"):
+            return True
+        if fn.endswith("partial") and dec.args:
+            return name_of(dec.args[0]) in ("jit", "jax.jit")
+    return False
+
+
+def _static_argnames(decorator_list) -> set[str]:
+    """Names pinned static by ``@partial(jax.jit, static_argnames=...)``.
+
+    Static args are trace-time Python values — the ``HOT*`` rules must
+    not treat them as traced.
+    """
+    names: set[str] = set()
+    for dec in decorator_list:
+        if not isinstance(dec, ast.Call):
+            continue
+        for kw in dec.keywords:
+            if kw.arg != "static_argnames":
+                continue
+            vals = kw.value.elts if isinstance(
+                kw.value, (ast.Tuple, ast.List)) else [kw.value]
+            for v in vals:
+                if isinstance(v, ast.Constant) and isinstance(v.value,
+                                                              str):
+                    names.add(v.value)
+    return names
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, ctx: LintContext,
+                 traced_patterns: tuple[str, ...]):
+        self.ctx = ctx
+        self.patterns = traced_patterns
+        self.findings: list[tuple[ast.AST, Finding]] = []
+        self._stack: list[str] = []
+
+    # -- imports (aliases are collected in lint_file's pre-pass) ------
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        self._emit(node, check_import(node, self.ctx))
+        self.generic_visit(node)
+
+    # -- function nesting / traced tracking --------------------------
+    def _visit_function(self, node):
+        self._stack.append(node.name)
+        dotted = ".".join(self._stack)
+        was_traced = self.ctx.in_traced
+        becomes_traced = was_traced \
+            or any(_is_traced_decorator(d) for d in node.decorator_list) \
+            or nesting_path_matches(dotted, self.patterns)
+        saved_params = self.ctx.traced_params
+        if becomes_traced:
+            params = {a.arg for a in (node.args.args
+                                      + node.args.posonlyargs
+                                      + node.args.kwonlyargs)}
+            if node.args.vararg:
+                params.add(node.args.vararg.arg)
+            if node.args.kwarg:
+                params.add(node.args.kwarg.arg)
+            params -= _static_argnames(node.decorator_list)
+            base = self.ctx.traced_params if was_traced else set()
+            self.ctx.traced_params = (base or set()) | params
+            self.ctx.traced_depth += 1
+        self.generic_visit(node)
+        if becomes_traced:
+            self.ctx.traced_depth -= 1
+        self.ctx.traced_params = saved_params
+        self._stack.pop()
+
+    visit_FunctionDef = _visit_function
+    visit_AsyncFunctionDef = _visit_function
+
+    def visit_ClassDef(self, node: ast.ClassDef):
+        self._stack.append(node.name)
+        self.generic_visit(node)
+        self._stack.pop()
+
+    # -- rule dispatch ------------------------------------------------
+    def visit_Call(self, node: ast.Call):
+        self._emit(node, check_call(node, self.ctx))
+        self.generic_visit(node)
+
+    def _visit_branch(self, node):
+        self._emit(node, check_branch(node, self.ctx))
+        self.generic_visit(node)
+
+    visit_If = _visit_branch
+    visit_While = _visit_branch
+    visit_IfExp = _visit_branch
+    visit_Assert = _visit_branch
+
+    def visit_For(self, node: ast.For):
+        self._emit(node, check_iteration(node, self.ctx))
+        self.generic_visit(node)
+
+    def _visit_comp(self, node):
+        for comp in node.generators:
+            self._emit(comp.iter, check_iteration(comp, self.ctx))
+        self.generic_visit(node)
+
+    visit_ListComp = _visit_comp
+    visit_SetComp = _visit_comp
+    visit_DictComp = _visit_comp
+    visit_GeneratorExp = _visit_comp
+
+    def _emit(self, node: ast.AST, findings: Iterable[Finding]):
+        for f in findings:
+            self.findings.append((node, f))  # disables applied in lint_file
+
+
+def lint_file(path, *, text: Optional[str] = None) -> list[Finding]:
+    """Lint one file; returns findings with disables already applied."""
+    p = Path(path)
+    if text is None:
+        text = p.read_text()
+    posix = p.as_posix()
+    per_line, file_wide, markers = _scan_comments(text)
+    try:
+        tree = ast.parse(text, filename=str(p))
+    except SyntaxError as e:
+        return [Finding(path=str(p), line=int(e.lineno or 0),
+                        rule="LNT000", message=str(e.msg),
+                        hint=RULES["LNT000"].hint)]
+    ctx = LintContext(
+        path=str(p), np_aliases=set(), jnp_aliases=set(),
+        random_aliases=set(),
+        is_hot_path=is_hot_path_file(posix) or "hot-path" in markers,
+        is_parity=is_parity_lane_file(posix) or "parity-lane" in markers)
+    # Alias pre-pass: function-local `import jax.numpy as jnp` must be
+    # visible to rule checks in functions defined earlier in the file.
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                bound = a.asname or a.name.split(".")[0]
+                if a.name == "numpy":
+                    ctx.np_aliases.add(bound)
+                elif a.name == "jax.numpy" and a.asname:
+                    ctx.jnp_aliases.add(a.asname)
+                elif a.name == "random":
+                    ctx.random_aliases.add(bound)
+        elif isinstance(node, ast.ImportFrom):
+            if node.level == 0 and node.module == "jax":
+                for a in node.names:
+                    if a.name == "numpy":
+                        ctx.jnp_aliases.add(a.asname or "numpy")
+    visitor = _Visitor(ctx, traced_patterns_for(posix))
+    visitor.visit(tree)
+    out: list[Finding] = []
+    for node, f in visitor.findings:
+        if f.rule in file_wide:
+            continue
+        start = getattr(node, "lineno", f.line) or f.line
+        end = getattr(node, "end_lineno", start) or start
+        if any(f.rule in per_line.get(ln, ())
+               for ln in range(start, end + 1)):
+            continue
+        out.append(f)
+    out.sort(key=lambda f: (f.line, f.rule))
+    return out
+
+
+def iter_python_files(paths: Iterable) -> list[Path]:
+    files: list[Path] = []
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            files.extend(sorted(
+                f for f in p.rglob("*.py")
+                if "__pycache__" not in f.parts
+                and not any(part.startswith(".") for part in f.parts)))
+        elif p.suffix == ".py":
+            files.append(p)
+    return files
+
+
+def lint_paths(paths: Iterable) -> list[Finding]:
+    """Lint every ``*.py`` under ``paths`` (files or directories)."""
+    findings: list[Finding] = []
+    for f in iter_python_files(paths):
+        findings.extend(lint_file(f))
+    return findings

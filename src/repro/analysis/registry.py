@@ -1,0 +1,139 @@
+"""Analysis-time registries: traced functions, hot paths, parity lanes.
+
+The hot-path lint rules (``HOT*``) need to know which functions are
+*traced* — executed under ``jax.jit`` / inside the scan engine — and
+which modules are engine hot paths or np ≡ jax ≡ pallas parity lanes.
+Three sources feed that knowledge:
+
+1. **The ``@traced`` decorator** — a zero-cost marker for code that is
+   called from inside a jitted program but not itself decorated with
+   ``jax.jit`` (helper functions, registered balancer closures in
+   downstream projects).  The linter also recognizes ``@jax.jit``,
+   ``@jit`` and ``@partial(jax.jit, ...)`` decorators directly.
+2. **The name registry** ``TRACED_FUNCTIONS`` — dotted-path patterns
+   per file for functions that cannot carry a decorator (closures built
+   inside engine factories, e.g. ``_build_engine.step`` in
+   :mod:`repro.core.simulator`).  Patterns are ``fnmatch``-style and
+   match the lexical nesting path of a ``def``; any function nested
+   inside a matched one is traced too.  Extend with
+   :func:`register_traced`.
+3. **File-level marker comments** — ``# repro-lint: hot-path`` and
+   ``# repro-lint: parity-lane`` opt a new module into the
+   corresponding rule sets without touching this registry.
+"""
+from __future__ import annotations
+
+from fnmatch import fnmatch
+from typing import Callable, TypeVar
+
+F = TypeVar("F", bound=Callable)
+
+
+def traced(fn: F) -> F:
+    """Mark ``fn`` as executed under a jax trace (lint marker, no-op).
+
+    The hot-path rules (``HOT001``/``HOT002``) apply inside functions
+    carrying this decorator, exactly as they do inside ``@jax.jit``-ed
+    ones.  Runtime behavior is unchanged.
+    """
+    fn.__repro_traced__ = True
+    return fn
+
+
+#: Dotted-nesting-path patterns of traced functions, per file suffix.
+#: A function whose path (e.g. ``_build_engine.step``) matches a
+#: pattern — or that is lexically nested inside a matched function —
+#: is treated as traced by the hot-path rules.
+TRACED_FUNCTIONS: dict[str, tuple[str, ...]] = {
+    "repro/core/simulator.py": (
+        "_build_engine.rates_of",
+        "_build_engine.place",
+        "_build_engine.pop_all",
+        "_build_engine.advance",
+        "_build_engine.step",
+        "_build_engine.run",
+    ),
+    "repro/policy/balancers.py": (
+        "*_jax.select", "*_jax.on_complete", "*_pallas.select",
+        "*_batch.batch",
+    ),
+    "repro/policy/scheds.py": ("*_jax.rates", "_rank_rows"),
+    "repro/lifecycle/policies.py": (
+        "*_jax.windows", "*_jax.observe", "*_jax.make.windows",
+    ),
+    "repro/kernels/*/kernel.py": ("_kernel", "*_kernel"),
+}
+
+#: Engine hot-path modules: the per-arrival event loops and everything
+#: they call per decision.  ``HOT003`` (registry dict iteration) applies
+#: here — iteration order over an open registry depends on registration
+#: order, which is a determinism hazard inside an engine.
+HOT_PATH_MODULES: tuple[str, ...] = (
+    "repro/core/simulator.py",
+    "repro/core/sim_ref.py",
+    "repro/serving/engine.py",
+    "repro/policy/balancers.py",
+    "repro/policy/scheds.py",
+    "repro/lifecycle/runtime.py",
+    "repro/lifecycle/policies.py",
+)
+
+#: Files participating in the bitwise np ≡ jax ≡ pallas parity lanes.
+#: ``PAR*`` rules apply here: every array must carry an explicit dtype
+#: so XLA's weak-type promotion can never diverge from numpy.
+PARITY_LANE_FILES: tuple[str, ...] = (
+    "repro/core/simulator.py",
+    "repro/policy/balancers.py",
+    "repro/policy/scheds.py",
+    "repro/lifecycle/policies.py",
+    "repro/kernels/*/kernel.py",
+    "repro/kernels/*/ops.py",
+    "repro/kernels/*/ref.py",
+)
+
+#: Open-registry dict names whose raw iteration inside a hot path is a
+#: registration-order hazard (``HOT003``).
+REGISTRY_NAMES: frozenset[str] = frozenset({
+    "BALANCERS", "SCHEDS", "BINDINGS", "KEEPALIVES", "WORKLOADS",
+})
+
+
+def register_traced(file_pattern: str, *patterns: str) -> None:
+    """Register traced-function name patterns for ``file_pattern``.
+
+    ``file_pattern`` is matched against the end of the posix file path
+    (``repro/mypkg/engine.py``); ``patterns`` are dotted nesting paths
+    (``build.step``; ``fnmatch`` wildcards allowed).  Use this for
+    closures that cannot carry the :func:`traced` decorator.
+    """
+    existing = TRACED_FUNCTIONS.get(file_pattern, ())
+    TRACED_FUNCTIONS[file_pattern] = tuple(existing) + tuple(patterns)
+
+
+def _path_matches(posix_path: str, pattern: str) -> bool:
+    return fnmatch(posix_path, pattern) or fnmatch(posix_path,
+                                                  "*/" + pattern)
+
+
+def traced_patterns_for(posix_path: str) -> tuple[str, ...]:
+    """All registered traced-name patterns applying to this file."""
+    out: list[str] = []
+    for file_pat, pats in TRACED_FUNCTIONS.items():
+        if _path_matches(posix_path, file_pat):
+            out.extend(pats)
+    return tuple(out)
+
+
+def is_hot_path_file(posix_path: str) -> bool:
+    return any(_path_matches(posix_path, p) for p in HOT_PATH_MODULES)
+
+
+def is_parity_lane_file(posix_path: str) -> bool:
+    return any(_path_matches(posix_path, p) for p in PARITY_LANE_FILES)
+
+
+def nesting_path_matches(dotted: str, patterns: tuple[str, ...]) -> bool:
+    """True if ``dotted`` or any of its ancestors matches a pattern."""
+    parts = dotted.split(".")
+    prefixes = [".".join(parts[:i]) for i in range(1, len(parts) + 1)]
+    return any(fnmatch(pref, pat) for pref in prefixes for pat in patterns)

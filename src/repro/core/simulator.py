@@ -435,26 +435,30 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
                 # +1 pad col: completion scatters park on the pad when
                 # nothing completed, exactly like ``warm``.  -1 marks a
                 # pool with no completion history (masks observations)
-                "idle_since": jnp.full((W, F + 1), -1.0),
-                "pre": jnp.asarray(pre0), "keep": jnp.asarray(keep0),
+                "idle_since": jnp.full((W, F + 1), -1.0,
+                                       dtype=jnp.float64),
+                # explicit dtype also strips any weak type a keep-alive
+                # policy's windows() may have produced
+                "pre": jnp.asarray(pre0, dtype=jnp.float64),
+                "keep": jnp.asarray(keep0, dtype=jnp.float64),
                 "ka": ka0,
             }
         st = SimState(
-            remaining=jnp.full((W, S), jnp.inf),
-            task_arr=jnp.zeros((W, S)),
+            remaining=jnp.full((W, S), jnp.inf, dtype=jnp.float64),
+            task_arr=jnp.zeros((W, S), dtype=jnp.float64),
             task_idx=jnp.full((W, S), -1, dtype=jnp.int32),
             warm=jnp.zeros((W, F + 1), dtype=jnp.int32),
             q=jnp.zeros((Q,), dtype=jnp.int32),
             q_head=jnp.int32(0), q_tail=jnp.int32(0),
             now=jnp.float64(0.0),
-            resp=jnp.full((N + 1,), jnp.nan),
+            resp=jnp.full((N + 1,), jnp.nan, dtype=jnp.float64),
             cold=jnp.zeros((N + 1,), dtype=bool),
             rejected=jnp.zeros((N + 1,), dtype=bool),
             worker_of=jnp.full((N + 1,), -1, dtype=jnp.int32),
             server_time=jnp.float64(0.0), core_time=jnp.float64(0.0),
             lb=lb0, life=life0,
         )
-        xs = (jnp.arange(N), arrivals, funcs, u_lb)
+        xs = (jnp.arange(N, dtype=jnp.int64), arrivals, funcs, u_lb)
         st, _ = lax.scan(
             partial(step, funcs=funcs, services=services, arrivals=arrivals,
                     homes=homes), st, xs)

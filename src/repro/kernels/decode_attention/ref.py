@@ -17,7 +17,7 @@ def decode_attention_ref(q, k, v, pos):
     qf = q.astype(jnp.float32).reshape(B, KV, g, Dh)
     s = jnp.einsum("bkgd,btkd->bkgt", qf, k.astype(jnp.float32))
     s = s / math.sqrt(Dh)
-    t = jnp.arange(S)
+    t = jnp.arange(S, dtype=pos.dtype)
     mask = t[None, :] <= pos[:, None]
     s = jnp.where(mask[:, None, None, :], s, NEG_INF)
     a = jax.nn.softmax(s, axis=-1)

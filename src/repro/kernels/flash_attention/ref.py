@@ -18,7 +18,7 @@ def flash_attention_ref(q, k, v):
     kf = k.astype(jnp.float32)
     vf = v.astype(jnp.float32)
     s = jnp.einsum("bqkgd,btkd->bkgqt", qf, kf) / math.sqrt(Dh)
-    pos = jnp.arange(S)
+    pos = jnp.arange(S, dtype=jnp.int32)
     mask = pos[:, None] >= pos[None, :]
     s = jnp.where(mask[None, None, None], s, NEG_INF)
     a = jax.nn.softmax(s, axis=-1)

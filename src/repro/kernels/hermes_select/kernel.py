@@ -55,9 +55,11 @@ def _kernel(active_ref, warm_ref, out_ref, active_out_ref, act_ref,
         act_ref[0] = jnp.where(
             ok & (jax.lax.iota(jnp.int32, active.shape[0]) == w),
             active + 1, active)
-        return 0
+        return _
 
-    jax.lax.fori_loop(0, n, body, 0)
+    # strong-typed bounds/carry: Python-int literals would thread a
+    # weak int64 carry through the loop (repro.analysis JXP001)
+    jax.lax.fori_loop(jnp.int32(0), jnp.int32(n), body, jnp.int32(0))
     active_out_ref[...] = act_ref[...]
 
 

@@ -135,8 +135,12 @@ def _hybrid_jax(cfg, n_functions):
         cdf = jnp.cumsum(hist, axis=1)
         head = jnp.argmax(cdf >= HIST_HEAD_Q * n_obs[:, None], axis=1)
         tail = jnp.argmax(cdf >= HIST_TAIL_Q * n_obs[:, None], axis=1)
-        pre = head * bin_s * (1.0 - HIST_MARGIN)
-        end = (tail + 1.0) * bin_s * (1.0 + HIST_MARGIN)
+        # .astype first: int64 * python-float stays weak-typed and
+        # would thread weak f64 carries through the engine scan.  Same
+        # association as the np oracle above — bitwise identical.
+        pre = head.astype(jnp.float64) * bin_s * (1.0 - HIST_MARGIN)
+        end = (tail.astype(jnp.float64) + 1.0) * bin_s \
+            * (1.0 + HIST_MARGIN)
         learned = n_obs >= HIST_MIN_OBS
         pre = jnp.where(learned, pre, 0.0)
         keep = jnp.where(learned, end - pre, ttl)

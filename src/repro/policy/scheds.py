@@ -63,9 +63,10 @@ def _rank_rows(jnp, key):
     """Per-row rank of each element (0 = smallest). Stable."""
     order = jnp.argsort(key, axis=1)
     ranks = jnp.zeros_like(order)
-    rows = jnp.arange(key.shape[0])[:, None]
+    rows = jnp.arange(key.shape[0], dtype=order.dtype)[:, None]
     return ranks.at[rows, order].set(
-        jnp.broadcast_to(jnp.arange(key.shape[1]), key.shape))
+        jnp.broadcast_to(jnp.arange(key.shape[1], dtype=order.dtype),
+                         key.shape))
 
 
 def _ps_jax(cores: int):

@@ -1,0 +1,6 @@
+"""Fixture: legacy numpy global RNG -> exactly one DET001."""
+import numpy as np
+
+
+def draw():
+    return np.random.rand(4)

@@ -1,0 +1,6 @@
+"""Fixture: stdlib random global instance -> exactly one DET002."""
+import random
+
+
+def draw():
+    return random.random()

@@ -1,0 +1,13 @@
+"""Fixture: every violation justified inline -> zero findings."""
+# repro-lint: parity-lane
+import numpy as np
+import jax.numpy as jnp
+
+
+def draw():
+    return np.random.rand(4)  # repro-lint: disable=DET001 -- fixture
+
+def zeros():
+    # multi-line statement: a disable on any physical line applies
+    return jnp.zeros(
+        (3,))  # repro-lint: disable=PAR001 -- fixture

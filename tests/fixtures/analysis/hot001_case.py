@@ -1,0 +1,7 @@
+"""Fixture: host sync inside a @traced function -> exactly one HOT001."""
+from repro.analysis import traced
+
+
+@traced
+def f(x):
+    return float(x)

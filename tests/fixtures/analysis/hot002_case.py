@@ -1,0 +1,9 @@
+"""Fixture: Python branch on a traced param -> exactly one HOT002."""
+from repro.analysis import traced
+
+
+@traced
+def f(x):
+    if x > 0:
+        return x
+    return -x

@@ -1,0 +1,8 @@
+"""Fixture: registry iteration in a hot path -> exactly one HOT003."""
+# repro-lint: hot-path
+
+BALANCERS = {}
+
+
+def sweep():
+    return [name for name in BALANCERS]

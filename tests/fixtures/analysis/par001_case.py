@@ -1,0 +1,7 @@
+"""Fixture: weak-dtype jnp constructor -> exactly one PAR001."""
+# repro-lint: parity-lane
+import jax.numpy as jnp
+
+
+def zeros():
+    return jnp.zeros((3,))

@@ -1,0 +1,6 @@
+"""Fixture: builtin-type astype -> exactly one PAR002."""
+# repro-lint: parity-lane
+
+
+def widen(x):
+    return x.astype(float)
