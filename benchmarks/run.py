@@ -44,19 +44,42 @@ def main() -> None:
                            "what CI's bench-smoke job runs)")
     mode.add_argument("--full", action="store_true",
                       help="paper-scale sweeps (hours)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="enable span tracing (repro.telemetry): exports "
+                         "a Perfetto-loadable Chrome trace JSON with "
+                         "engine build/compile/run and figure-phase "
+                         "spans")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="trace JSON path (default "
+                         "experiments/trace_bench.json; implies "
+                         "--telemetry)")
     args = ap.parse_args()
     quick = not args.full
-    t_start = time.time()
+    # monotonic clock for elapsed time (immune to wall-clock steps);
+    # wall-clock start is recorded separately in the manifest
+    t_start = time.perf_counter()
     ok = True
 
-    from . import (fig2_policy_space, fig3_srpt, fig4_scale, fig6_slowdown,
-                   fig7_coldstarts, fig8_resources, fig9_robustness,
-                   fig10_trace_replay, fig11_policy_zoo, fig12_keepalive,
-                   tab_overhead)
+    from repro.telemetry import (collect_manifest, configure_tracing,
+                                 get_tracer, wall_split_from_aggregate)
+    trace_on = bool(args.telemetry or args.trace_out)
+    if trace_on:
+        configure_tracing(True)
+    tracer = get_tracer()
+    manifest = collect_manifest(
+        seeds={"workload_base": 0},
+        args={"mode": "quick" if quick else "full",
+              "telemetry": trace_on})
+
+    from . import (bench_telemetry, fig2_policy_space, fig3_srpt,
+                   fig4_scale, fig6_slowdown, fig7_coldstarts,
+                   fig8_resources, fig9_robustness, fig10_trace_replay,
+                   fig11_policy_zoo, fig12_keepalive, tab_overhead)
 
     print("== fig2: policy space (4x12 cores, Azure workload) ==",
           flush=True)
-    f2 = fig2_policy_space.run(quick)
+    with tracer.span("fig2"):
+        f2 = fig2_policy_space.run(quick)
     hi = [r for r in f2 if r["load"] == 0.8]
     ps = next(r for r in hi if r["policy"] == "E/LL/PS")
     late = next(r for r in hi if r["policy"] == "L/LL/FCFS")
@@ -81,7 +104,8 @@ def main() -> None:
                  f"LL={ll2['slow_mean']:.3f} @0.3")
 
     print("== fig3: SRPT vs PS ==", flush=True)
-    f3 = fig3_srpt.run(quick)
+    with tracer.span("fig3"):
+        f3 = fig3_srpt.run(quick)
     hi3 = [r for r in f3 if r["load"] == max(r["load"] for r in f3)]
     srpt = next(r for r in hi3 if r["policy"] == "E/LL/SRPT")
     psr = next(r for r in hi3 if r["policy"] == "E/LL/PS")
@@ -96,7 +120,8 @@ def main() -> None:
           f"(paper expects SRPT ≫ PS; see EXPERIMENTS.md)")
 
     print("== fig4: 100-server scale ==", flush=True)
-    f4 = fig4_scale.run(quick)
+    with tracer.span("fig4"):
+        f4 = fig4_scale.run(quick)
     hi4 = [r for r in f4 if r["load"] == 0.9]
     ll = next(r for r in hi4 if r["policy"] == "E/LL/PS")
     lb100 = next(r for r in hi4 if r["policy"] == "L/LL/FCFS")
@@ -125,7 +150,8 @@ def main() -> None:
           f"Late p99={lb97['slow_p99']:.1f} (paper: LL wins >0.96)")
 
     print("== fig6/7/8: serving platform (cold starts) ==", flush=True)
-    f6 = fig6_slowdown.run(quick)
+    with tracer.span("fig6"):
+        f6 = fig6_slowdown.run(quick)
     lo = _by(f6, workload="ms-trace", load=0.3)
     hermes = next(r for r in lo if r["scheduler"] == "hermes")
     vanilla = next(r for r in lo if r["scheduler"] == "vanilla-ow")
@@ -145,17 +171,20 @@ def main() -> None:
                  hermes["cold_frac"] < ll6["cold_frac"],
                  f"{100*hermes['cold_frac']:.1f}% < "
                  f"{100*ll6['cold_frac']:.1f}%")
-    f8 = fig8_resources.run(quick)
+    with tracer.span("fig8"):
+        f8 = fig8_resources.run(quick)
     lo8 = [r for r in f8 if r["load"] == 0.3]
     h8 = next(r for r in lo8 if r["scheduler"] == "hermes")
     l8 = next(r for r in lo8 if r["scheduler"] == "least-loaded")
     ok &= _claim("§6.4: Hermes uses fewer servers than least-loaded "
                  "at low load", h8["mean_servers"] < l8["mean_servers"],
                  f"{h8['mean_servers']:.2f} < {l8['mean_servers']:.2f}")
-    fig7_coldstarts.run(quick)
+    with tracer.span("fig7"):
+        fig7_coldstarts.run(quick)
 
     print("== fig9: homogeneous exec times ==", flush=True)
-    f9 = fig9_robustness.run(quick)
+    with tracer.span("fig9"):
+        f9 = fig9_robustness.run(quick)
     hi9 = _by(f9, load=0.7)
     h9 = next(r for r in hi9 if r["scheduler"] == "hermes")
     l9 = next(r for r in hi9 if r["scheduler"] == "least-loaded")
@@ -165,7 +194,8 @@ def main() -> None:
 
     print("== fig10: non-stationary Azure-schema trace replay ==",
           flush=True)
-    f10 = fig10_trace_replay.run(quick)
+    with tracer.span("fig10"):
+        f10 = fig10_trace_replay.run(quick)
     d10 = _by(f10, workload="azure-diurnal", load=0.5)
     h10 = next(r for r in d10 if r["scheduler"] == "hermes")
     v10 = next(r for r in d10 if r["scheduler"] == "vanilla-ow")
@@ -192,7 +222,8 @@ def main() -> None:
 
     print("== fig11: policy zoo (full registry: JSQ2, RR, HIKU, DD) ==",
           flush=True)
-    f11 = fig11_policy_zoo.run(quick)
+    with tracer.span("fig11"):
+        f11 = fig11_policy_zoo.run(quick)
     hi11 = _by(f11, workload="ms-trace", load=0.9)
     jsq2 = next(r for r in hi11 if r["policy"] == "E/JSQ2/PS")
     r11 = next(r for r in hi11 if r["policy"] == "E/R/PS")
@@ -228,7 +259,8 @@ def main() -> None:
               f"LL p99={ml['slow_p99']:.1f}")
 
     print("== fig12: container lifecycle / keep-alive axis ==", flush=True)
-    f12 = fig12_keepalive.run(quick)
+    with tracer.span("fig12"):
+        f12 = fig12_keepalive.run(quick)
     bud = _by(f12, workload=fig12_keepalive.BUDGET_WORKLOAD,
               scheduler="hermes")
     cold_of = {ka: sum(r["cold_frac"] for r in bud if r["keepalive"] == ka)
@@ -255,7 +287,8 @@ def main() -> None:
                  f"(summed cold_frac across loads)")
 
     print("== §6.6: scheduler overhead ==", flush=True)
-    tov = tab_overhead.run(quick)
+    with tracer.span("tab_overhead"):
+        tov = tab_overhead.run(quick)
     py = {r["scheduler"]: r for r in tov if r["impl"] == "python"}
     ok &= _claim("§6.6: Hermes decision cost ≈ least-loaded (<2x)",
                  py["hermes(H)"]["us_per_decision"]
@@ -266,6 +299,20 @@ def main() -> None:
         print(f"  {r['scheduler']:16s} {r['impl']:14s} "
               f"{r['decisions_per_s']:12.0f} dec/s")
 
+    print("== telemetry: streaming sketch vs exact percentiles ==",
+          flush=True)
+    with tracer.span("bench_telemetry"):
+        ftel = bench_telemetry.run(quick)
+    worst50 = max(r["rel_err_p50"] for r in ftel)
+    worst99 = max(r["rel_err_p99"] for r in ftel)
+    ok &= _claim("Telemetry: sketch p50/p99 slowdown within "
+                 f"{bench_telemetry.TOL_REL:.0%} of exact "
+                 "summarize_batch for every registered balancer at "
+                 f"loads {bench_telemetry.LOADS}",
+                 all(r["ok"] for r in ftel),
+                 f"{len(ftel)} cells; worst rel err "
+                 f"p50={worst50:.4f} p99={worst99:.4f}")
+
     print("== analysis: jaxpr eqn budgets ==", flush=True)
     from repro.analysis import bench_rows
     analysis_rows, analysis_ok, analysis_detail = bench_rows()
@@ -274,25 +321,44 @@ def main() -> None:
 
     from repro.core.simulator import engine_cache_stats
     from .common import OUT_DIR
-    elapsed = time.time() - t_start
+    elapsed = time.perf_counter() - t_start
+    cache = engine_cache_stats()
+    manifest.duration_s = round(elapsed, 3)
+    manifest.engine_cache = cache
+    manifest.wall_split = wall_split_from_aggregate(tracer.aggregate())
+    os.makedirs(OUT_DIR, exist_ok=True)
+    trace_path = None
+    if trace_on:
+        trace_path = args.trace_out or \
+            os.path.join(OUT_DIR, "trace_bench.json")
+        tracer.export(trace_path)
     report = {
         "mode": "quick" if quick else "full",
+        "started_at": manifest.started_at,
         "elapsed_s": round(elapsed, 1),
         "ok": bool(ok),
         "checks": _CHECKS,
-        "engine_cache": engine_cache_stats(),
+        "engine_cache": cache,
+        "manifest": manifest.as_dict(),
+        "trace": trace_path,
         "analysis": analysis_rows,
         "figures": {"fig2": f2, "fig3": f3, "fig4": f4, "fig6": f6,
                     "fig8": f8, "fig9": f9, "fig10": f10, "fig11": f11,
-                    "fig12": f12, "tab_overhead": tov},
+                    "fig12": f12, "tab_overhead": tov,
+                    "bench_telemetry": ftel},
     }
-    os.makedirs(OUT_DIR, exist_ok=True)
     report_path = os.path.join(OUT_DIR, "BENCH_report.json")
     with open(report_path, "w") as f:
         json.dump(report, f, indent=1, default=float)
+    hit_total = max(cache["hits"] + cache["misses"], 1)
+    print(f"engine cache: {cache['entries']}/{cache['capacity']} "
+          f"resident, {cache['hits']} hits / {cache['misses']} misses "
+          f"({100 * cache['hits'] / hit_total:.0f}% hit rate), "
+          f"{cache['evictions']} evictions")
+    if trace_path:
+        print(f"trace: {trace_path} (load at https://ui.perfetto.dev)")
     print(f"\nbenchmarks done in {elapsed:.0f}s; CSVs in "
           f"experiments/; report: {report_path}; "
-          f"compiled engines: {engine_cache_stats()}; "
           f"overall: {'PASS' if ok else 'FAIL'}")
     sys.exit(0 if ok else 1)
 

@@ -54,7 +54,8 @@ def run(quick: bool = True):
         rows.append({"scheduler": name, "impl": "python",
                      "keepalive": "-",
                      "decisions_per_s": N / dt,
-                     "us_per_decision": dt / N * 1e6})
+                     "us_per_decision": dt / N * 1e6,
+                     "compile_s": 0.0, "run_s": round(dt, 6)})
     # carried-state balancers go through the stateful contract (the
     # stateless shim rejects them): decision cost includes the
     # functional state update, the honest per-arrival price
@@ -73,7 +74,8 @@ def run(quick: bool = True):
         rows.append({"scheduler": label, "impl": "python",
                      "keepalive": "-",
                      "decisions_per_s": N / dt,
-                     "us_per_decision": dt / N * 1e6})
+                     "us_per_decision": dt / N * 1e6,
+                     "compile_s": 0.0, "run_s": round(dt, 6)})
     # keep-alive decision cost (repro.lifecycle): per placement, the
     # materialized warm-column mask + (adaptive policies) the idle-gap
     # observation and window refit — the honest lifecycle overhead a
@@ -101,25 +103,32 @@ def run(quick: bool = True):
         rows.append({"scheduler": f"keepalive({ka})",
                      "impl": "lifecycle-np", "keepalive": ka,
                      "decisions_per_s": N / dt,
-                     "us_per_decision": dt / N * 1e6})
+                     "us_per_decision": dt / N * 1e6,
+                     "compile_s": 0.0, "run_s": round(dt, 6)})
     # batched Pallas kernel (Hermes) — sequential semantics preserved
     from repro.kernels.hermes_select.ops import hermes_select
     import jax.numpy as jnp
     a_j = jnp.asarray(active, jnp.int32)
     w_j = jnp.asarray(warm, jnp.int32)
     f_j = jnp.asarray(funcs, jnp.int32)
+    t0 = time.perf_counter()
     out = hermes_select(a_j, w_j, f_j, cores=cl.cores, slots=cl.slots)
-    out[0].block_until_ready()                 # compile
+    out[0].block_until_ready()                 # compile-inclusive first call
+    compile_s = time.perf_counter() - t0
     t0 = time.perf_counter()
     reps = 3
     for _ in range(reps):
         out = hermes_select(a_j, w_j, f_j, cores=cl.cores, slots=cl.slots)
         out[0].block_until_ready()
     dt = (time.perf_counter() - t0) / reps
+    # compile-vs-run split: first-call wall (trace + XLA compile + run)
+    # against a steady-state dispatch — the §6.6 "overhead" decomposition
     rows.append({"scheduler": "hermes(H)", "impl": "pallas-batched",
                  "keepalive": "-",
                  "decisions_per_s": N / dt,
-                 "us_per_decision": dt / N * 1e6})
+                 "us_per_decision": dt / N * 1e6,
+                 "compile_s": round(compile_s, 6),
+                 "run_s": round(dt, 6)})
     write_csv("tab_overhead.csv", rows)
     return rows
 

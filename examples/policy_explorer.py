@@ -90,6 +90,13 @@ def main() -> None:
                          ">1 adds ±95%% CI columns")
     ap.add_argument("--list-policies", action="store_true",
                     help="print registered balancers/schedulers and exit")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="carry streaming telemetry (repro.telemetry) "
+                         "through the sweep and print per-policy sketch "
+                         "summaries")
+    ap.add_argument("--trace-out", metavar="PATH", default=None,
+                    help="export a Perfetto-loadable Chrome trace JSON "
+                         "of the sweep (implies --telemetry)")
     args = ap.parse_args()
 
     if args.list_policies:
@@ -129,6 +136,13 @@ def main() -> None:
                                      args.max_idle, args.cold_start_preset)
     cl = ClusterCfg(n_workers=args.workers, cores=args.cores,
                     lifecycle=lifecycle)
+    telemetry_on = bool(args.telemetry or args.trace_out)
+    tel_cfg = None
+    tracer = None
+    if telemetry_on:
+        from repro.telemetry import TelemetryCfg, configure_tracing
+        tel_cfg = TelemetryCfg()
+        tracer = configure_tracing(True)
     wfn = WORKLOADS[args.workload]
     ci = " ±ci95" if args.reps > 1 and args.engine == "sim" else ""
     print(f"{'policy':10s} {'load':>5s} {'slow50':>8s} "
@@ -141,7 +155,8 @@ def main() -> None:
         results = {}
         for ptext in args.policies:
             pol = parse_policy(ptext)
-            results[pol.name] = (pol, simulate_many(pol, cl, wb))
+            results[pol.name] = (pol, simulate_many(pol, cl, wb,
+                                                    telemetry=tel_cfg))
         for li, load in enumerate(args.loads):
             sl = slice(li * args.reps, (li + 1) * args.reps)
             for pname, (pol, out) in results.items():
@@ -152,19 +167,41 @@ def main() -> None:
                 print(f"{pname:10s} {load:5.2f} {s.slow_p50:8.2f} "
                       f"{s.slow_p99:10.1f}{ci_txt} {s.lat_p99:9.2f} "
                       f"{100*s.cold_frac:6.1f} {s.mean_servers:8.2f}")
+        if telemetry_on:
+            print("telemetry (pooled sketch over the whole batch):")
+            for pname, (pol, out) in results.items():
+                t = out.telemetry.summary()
+                print(f"  {pname:10s} sketch slow p50/p99 = "
+                      f"{t['slow_p50']:.2f} / {t['slow_p99']:.1f}  "
+                      f"cold={t['n_cold']} warm={t['n_warm']} "
+                      f"evict={t['n_evict']} reject={t['n_reject']}")
+        if args.trace_out:
+            tracer.export(args.trace_out)
+            print(f"trace: {args.trace_out} "
+                  f"(load at https://ui.perfetto.dev)")
         return
 
     for load in args.loads:
         wl = wfn(cl, load, args.n, seed=args.seed)
         for ptext in args.policies:
             pol = parse_policy(ptext)
-            out = ServingCluster(ServeCfg(cluster=cl), pol).run(wl)
+            sc = ServingCluster(ServeCfg(cluster=cl), pol,
+                                telemetry=tel_cfg)
+            if tracer is not None:
+                with tracer.span("explore.serve", policy=pol.name,
+                                 load=load, n=args.n):
+                    out = sc.run(wl)
+            else:
+                out = sc.run(wl)
             s = summarize(out.response, wl.service, out.cold,
                           out.rejected, out.server_time, out.core_time,
                           out.end_time)
             print(f"{pol.name:10s} {load:5.2f} {s.slow_p50:8.2f} "
                   f"{s.slow_p99:10.1f} {s.lat_p99:9.2f} "
                   f"{100*s.cold_frac:6.1f} {s.mean_servers:8.2f}")
+    if args.trace_out:
+        tracer.export(args.trace_out)
+        print(f"trace: {args.trace_out} (load at https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

@@ -48,6 +48,15 @@ BASELINES: dict[str, int] = {
     "E/LL/PS|jax|ka=FIXED_TTL": 756,
     "E/LL/PS|jax|ka=HYBRID_HIST": 860,
     "L/LL/FCFS|jax": 1306,
+    # telemetry-on lanes (streaming histogram/counter carry in the
+    # scan); the telemetry-off baselines above are unchanged — the
+    # disabled path traces the identical pre-telemetry program
+    "E/LL/PS|jax|tel": 819,
+    "E/H/PS|jax|tel": 841,
+    "E/HIKU/PS|jax|tel": 1019,
+    "E/H/PS|pallas|tel": 863,
+    "E/LL/PS|jax|ka=FIXED_TTL|tel": 996,
+    "L/LL/FCFS|jax|tel": 1596,
 }
 
 #: Headroom multiplier over the measured baseline.

@@ -222,19 +222,23 @@ def _audit_cluster(lifecycle=None):
 
 def iter_engine_specs(*, balancers: Optional[Iterable[str]] = None,
                       sched: str = "PS") -> list[tuple]:
-    """(label, policy, cluster, backend) per audited engine.
+    """(label, policy, cluster, backend, telemetry) per audited engine.
 
     Covers every (balancer × traceable backend) pair in the registry —
     backends are ``jax`` plus ``pallas`` (balancers without a kernel
     run their jax implementation under the pallas backend, exactly as
     :func:`repro.policy.registry._pallas_select` dispatches them) —
     plus one ``jax`` lane per registered keep-alive policy (balancer
-    ``LL``) so lifecycle carries are audited too.
+    ``LL``) so lifecycle carries are audited too, plus ``|tel`` lanes
+    (telemetry-on variants of representative engines: stateless,
+    kernel, carried-state, lifecycle and late binding) so the streaming
+    telemetry carry is covered by the jaxpr rules and eqn budgets.
     """
     from repro.core.taxonomy import Binding, PolicySpec
     from repro.lifecycle import LifecycleCfg
     from repro.lifecycle.registry import keepalive_names
     from repro.policy import balancer_names
+    from repro.telemetry import TelemetryCfg
     names = tuple(balancers) if balancers is not None \
         else balancer_names()
     specs: list[tuple] = []
@@ -242,26 +246,41 @@ def iter_engine_specs(*, balancers: Optional[Iterable[str]] = None,
     for bname in names:
         pol = PolicySpec(Binding.EARLY, bname, sched)
         for backend in ("jax", "pallas"):
-            specs.append((f"{pol.name}|{backend}", pol, plain, backend))
+            specs.append((f"{pol.name}|{backend}", pol, plain, backend,
+                          None))
     if balancers is None:
         pol = PolicySpec(Binding.EARLY, "LL", sched)
         for ka in keepalive_names():
             cl = _audit_cluster(LifecycleCfg(keepalive=ka))
-            specs.append((f"{pol.name}|jax|ka={ka}", pol, cl, "jax"))
+            specs.append((f"{pol.name}|jax|ka={ka}", pol, cl, "jax",
+                          None))
         # the late-binding engine (no balancer axis, controller queue)
         late = PolicySpec(Binding.LATE, "LL", "FCFS")
-        specs.append((f"{late.name}|jax", late, plain, "jax"))
+        specs.append((f"{late.name}|jax", late, plain, "jax", None))
+        # telemetry-on lanes — one per engine family, not the full
+        # product (the telemetry carry is policy-independent)
+        tel = TelemetryCfg()
+        for bname in ("LL", "H", "HIKU"):
+            p = PolicySpec(Binding.EARLY, bname, sched)
+            specs.append((f"{p.name}|jax|tel", p, plain, "jax", tel))
+        ph = PolicySpec(Binding.EARLY, "H", sched)
+        specs.append((f"{ph.name}|pallas|tel", ph, plain, "pallas", tel))
+        cl = _audit_cluster(LifecycleCfg(keepalive="FIXED_TTL"))
+        specs.append((f"{pol.name}|jax|ka=FIXED_TTL|tel", pol, cl,
+                      "jax", tel))
+        specs.append((f"{late.name}|jax|tel", late, plain, "jax", tel))
     return specs
 
 
 def trace_engine(policy, cluster, backend: str = "jax",
-                 n_arrivals: int = AUDIT_N, n_functions: int = AUDIT_F):
+                 n_arrivals: int = AUDIT_N, n_functions: int = AUDIT_F,
+                 telemetry=None):
     """``jax.make_jaxpr`` of the raw scan engine (tracing only)."""
     jax = _jax()
     import jax.numpy as jnp
     from repro.core.simulator import _build_engine
     run = _build_engine(policy, cluster, n_arrivals, n_functions,
-                        backend)
+                        backend, telemetry=telemetry)
     N, F = n_arrivals, n_functions
     f64 = jax.ShapeDtypeStruct((N,), jnp.float64)
     i64 = jax.ShapeDtypeStruct((N,), jnp.int64)
@@ -274,9 +293,10 @@ def audit_engines(*, balancers: Optional[Iterable[str]] = None
     """Trace + audit every engine spec; returns (stats, findings)."""
     all_stats: list[JaxprStats] = []
     findings: list[Finding] = []
-    for label, policy, cluster, backend in iter_engine_specs(
+    for label, policy, cluster, backend, telemetry in iter_engine_specs(
             balancers=balancers):
-        closed = trace_engine(policy, cluster, backend)
+        closed = trace_engine(policy, cluster, backend,
+                              telemetry=telemetry)
         stats, fs = audit_jaxpr(closed, label=label, allow_64=True)
         all_stats.append(stats)
         findings.extend(fs)
@@ -350,6 +370,29 @@ def audit_cache_key() -> list[Finding]:
         probe(lbase, lbase._replace(
             lifecycle=lbase.lifecycle._replace(**{field: new})),
             f"lifecycle.{field}")
+
+    # telemetry is part of the traced program (python-gated carry), so
+    # it must be part of the key: off vs on, and every TelemetryCfg
+    # field perturbed
+    from repro.telemetry import TelemetryCfg
+
+    def probe_tel(t0, t1, field: str):
+        k0 = _cache_key(policy, base, AUDIT_N, AUDIT_F, False, "jax", t0)
+        k1 = _cache_key(policy, base, AUDIT_N, AUDIT_F, False, "jax", t1)
+        if k0 == k1:
+            findings.append(Finding(
+                path=f"<cache-key:{field}>", line=0, rule="JXP005",
+                message=f"configs differing in '{field}' share an "
+                        f"engine cache key", hint=RULES["JXP005"].hint))
+
+    tbase = TelemetryCfg()
+    probe_tel(None, tbase, "telemetry")
+    for field in TelemetryCfg._fields:
+        new = _perturb(getattr(tbase, field), field)
+        if new is None:
+            continue
+        probe_tel(tbase, tbase._replace(**{field: new}),
+                  f"telemetry.{field}")
     return findings
 
 

@@ -62,6 +62,12 @@ TRACED_FUNCTIONS: dict[str, tuple[str, ...]] = {
         "*_jax.windows", "*_jax.observe", "*_jax.make.windows",
     ),
     "repro/kernels/*/kernel.py": ("_kernel", "*_kernel"),
+    # telemetry scan-carry updates: called from inside the engines'
+    # jitted scan bodies (repro.core.simulator place/advance/step)
+    "repro/telemetry/engine.py": (
+        "bin_index", "on_place", "on_advance", "on_complete",
+        "on_evict", "on_reject",
+    ),
 }
 
 #: Engine hot-path modules: the per-arrival event loops and everything
@@ -76,6 +82,8 @@ HOT_PATH_MODULES: tuple[str, ...] = (
     "repro/policy/scheds.py",
     "repro/lifecycle/runtime.py",
     "repro/lifecycle/policies.py",
+    "repro/telemetry/engine.py",
+    "repro/telemetry/state.py",
 )
 
 #: Files participating in the bitwise np ≡ jax ≡ pallas parity lanes.
@@ -89,6 +97,7 @@ PARITY_LANE_FILES: tuple[str, ...] = (
     "repro/kernels/*/kernel.py",
     "repro/kernels/*/ops.py",
     "repro/kernels/*/ref.py",
+    "repro/telemetry/engine.py",
 )
 
 #: Open-registry dict names whose raw iteration inside a hot path is a

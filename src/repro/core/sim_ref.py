@@ -56,6 +56,10 @@ import numpy as np
 
 from repro.lifecycle import LifecycleRuntime, resolve_lifecycle
 from repro.policy import resolve
+from repro.telemetry.state import (TelemetryCfg, TelemetryResult, init_np,
+                                   on_advance_np, on_complete_np,
+                                   on_evict_np, on_place_np, on_reject_np,
+                                   warmup_cutoff)
 
 from .cluster import ClusterCfg
 from .taxonomy import PolicySpec
@@ -83,10 +87,14 @@ class SimResult:
     server_time: float      # ∫ #workers-with-≥1-active dt
     core_time: float        # ∫ Σ_w min(n_w, C) dt
     end_time: float
+    #: streaming metrics (None unless ``telemetry=`` was passed); the
+    #: oracle twin of the scan engine's carry — integer planes bitwise
+    #: np ≡ jax, float integrals to float64 accumulation order
+    telemetry: TelemetryResult | None = None
 
 
-def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload
-                 ) -> SimResult:
+def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload,
+                 *, telemetry: TelemetryCfg | None = None) -> SimResult:
     W, C, S = cluster.n_workers, cluster.cores, cluster.slots
     F = wl.n_functions
     N = wl.n
@@ -113,6 +121,10 @@ def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload
     # container lifecycle (None = legacy infinite keep-alive, bit-exact)
     lres = resolve_lifecycle(cluster, backend="np", n_functions=F)
     life = LifecycleRuntime(lres, W, F) if lres is not None else None
+    # streaming telemetry — updated at the same event boundaries as the
+    # scan engine's carry (place / advance / complete / reject)
+    tel = init_np(W) if telemetry is not None else None
+    tel_cutoff = warmup_cutoff(N, telemetry) if telemetry is not None else 0
 
     def set_rates(w: int) -> None:
         ts = tasks[w]
@@ -131,6 +143,7 @@ def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload
         f = int(wl.func[arr_idx])
         avail = int(warm[w, f]) if life is None \
             else life.materialized_at(w, f, warm[w, f], now)
+        evicted = False
         if avail > 0:
             warm[w, f] -= 1
             is_cold = False
@@ -145,6 +158,9 @@ def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload
                 victim = int(np.argmax(warm[w])) if life is None \
                     else life.evict_victim(warm[w], w, now)
                 warm[w, victim] -= 1
+                evicted = True
+        if tel is not None:
+            on_place_np(tel, w, is_cold, evicted)
         cold[arr_idx] = is_cold
         worker_of[arr_idx] = w
         svc = float(wl.service[arr_idx])
@@ -193,6 +209,12 @@ def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload
             # integrals with pre-advance occupancy (rates constant over tau)
             server_time += tau * sum(1 for w in range(W) if tasks[w])
             core_time += tau * sum(min(len(tasks[w]), C) for w in range(W))
+            if tel is not None:
+                on_advance_np(
+                    tel, tau,
+                    np.array([bool(tasks[w]) for w in range(W)]),
+                    np.array([len(tasks[w]) for w in range(W)]),
+                    len(queue))
             now += tau
             dt_left -= tau
             for w in range(W):
@@ -202,10 +224,17 @@ def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload
                     t.remaining -= t.rate * tau
                     if t.remaining <= EPS:
                         response[t.arr_idx] = now - t.arrival
+                        if tel is not None:
+                            on_complete_np(tel, response[t.arr_idx],
+                                           float(wl.service[t.arr_idx]),
+                                           t.arr_idx, tel_cutoff)
                         if life is None:
                             warm[w, t.func] += 1
                         else:
-                            life.on_complete(warm, w, t.func, now)
+                            budget_evicted = life.on_complete(
+                                warm, w, t.func, now)
+                            if budget_evicted and tel is not None:
+                                on_evict_np(tel)
                         n_alive -= 1
                         if lb_state is not None:
                             lb_state = res.on_complete(
@@ -240,10 +269,14 @@ def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload
                                float(wl.u_lb[i]), i)
             if w < 0:
                 rejected[i] = True
+                if tel is not None:
+                    on_reject_np(tel)
             else:
                 start_task(w, i, True)
 
     advance(math.inf)  # drain
     return SimResult(response=response, cold=cold, rejected=rejected,
                      worker=worker_of, server_time=server_time,
-                     core_time=core_time, end_time=now)
+                     core_time=core_time, end_time=now,
+                     telemetry=None if tel is None
+                     else TelemetryResult.from_state(tel, cfg=telemetry))

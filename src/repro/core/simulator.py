@@ -77,6 +77,10 @@ from jax import lax
 
 from repro.lifecycle import resolve_lifecycle
 from repro.policy import default_backend, resolve
+from repro.telemetry import engine as tel_engine
+from repro.telemetry.spans import get_tracer
+from repro.telemetry.state import (TelemetryCfg, TelemetryResult,
+                                   warmup_cutoff)
 
 from .cluster import ClusterCfg
 from .taxonomy import PolicySpec
@@ -103,6 +107,7 @@ class SimState(NamedTuple):
     core_time: jax.Array    # f64
     lb: Any                 # balancer carried state (pytree; () stateless)
     life: Any               # lifecycle carried state (pytree; () disabled)
+    tel: Any                # telemetry carried state (pytree; () disabled)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,6 +119,8 @@ class SimOutput:
     server_time: float
     core_time: float
     end_time: float
+    #: streaming in-engine metrics (None unless ``telemetry=`` was passed)
+    telemetry: TelemetryResult | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,6 +134,8 @@ class BatchSimOutput:
     server_time: np.ndarray  # [R] f64
     core_time: np.ndarray    # [R] f64
     end_time: np.ndarray     # [R] f64
+    #: batched streaming metrics, leading axis R (None unless enabled)
+    telemetry: TelemetryResult | None = None
 
     @property
     def n_reps(self) -> int:
@@ -139,7 +148,9 @@ class BatchSimOutput:
             rejected=self.rejected[r], worker=self.worker[r],
             server_time=float(self.server_time[r]),
             core_time=float(self.core_time[r]),
-            end_time=float(self.end_time[r]))
+            end_time=float(self.end_time[r]),
+            telemetry=None if self.telemetry is None
+            else self.telemetry.rep(r))
 
     def __getitem__(self, sl: slice) -> "BatchSimOutput":
         """A sub-batch over a slice of the replication axis."""
@@ -147,12 +158,15 @@ class BatchSimOutput:
             response=self.response[sl], cold=self.cold[sl],
             rejected=self.rejected[sl], worker=self.worker[sl],
             server_time=self.server_time[sl], core_time=self.core_time[sl],
-            end_time=self.end_time[sl])
+            end_time=self.end_time[sl],
+            telemetry=None if self.telemetry is None
+            else self.telemetry[sl])
 
 
 def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
                   n_arrivals: int, n_functions: int,
-                  backend: str = "jax"):
+                  backend: str = "jax",
+                  telemetry: TelemetryCfg | None = None):
     """Build the raw (un-jitted) scan engine for (policy, cluster, N, F).
 
     ``backend`` selects how worker selection dispatches (``"jax"`` or
@@ -161,6 +175,13 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
     homes) -> SimState`` is pure and rank-polymorphic under
     :func:`jax.vmap`: mapping every argument over a leading replication
     axis yields the batched engine used by :func:`simulate_many`.
+
+    ``telemetry`` opts the carry into streaming in-engine metrics
+    (:mod:`repro.telemetry`): histogram sketches, cold/evict/reject
+    counters and occupancy integrals updated inside the scan.
+    ``tel_on`` python-gates every update exactly like ``life_on``, so
+    the default ``telemetry=None`` traces the bit-identical
+    pre-telemetry program (golden contract).
     """
     W, C, S = cluster.n_workers, cluster.cores, cluster.slots
     F = n_functions
@@ -184,6 +205,12 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
         life_max_idle = lres.max_idle
         life_costs = None if lres.cold_costs is None \
             else jnp.asarray(lres.cold_costs)
+    # streaming telemetry (repro.telemetry).  tel_on gates every update
+    # at trace time — telemetry=None traces the pre-telemetry program.
+    tel_on = telemetry is not None
+    if tel_on:
+        tel_cutoff = warmup_cutoff(N, telemetry)
+        tel_edges = tel_engine.edges_for_trace()
 
     def rates_of(st: SimState) -> jax.Array:
         active = st.task_idx >= 0
@@ -238,6 +265,11 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
         warm = warm.at[w, victim].add(jnp.where(need_evict, -1, 0))
         slot = jnp.argmax(st.task_idx[w] < 0)
         svc = services[arr_idx] + jnp.where(is_cold, pen_f, 0.0)
+        tel = st.tel
+        if tel_on:
+            # one placement record per accepted arrival (rejections are
+            # counted in step; place is never reached for them)
+            tel = tel_engine.on_place(tel, w, is_cold, need_evict)
         return st._replace(
             remaining=st.remaining.at[w, slot].set(svc),
             task_arr=st.task_arr.at[w, slot].set(arrivals[arr_idx]),
@@ -246,6 +278,7 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
             cold=st.cold.at[arr_idx].set(is_cold),
             worker_of=st.worker_of.at[arr_idx].set(w.astype(jnp.int32)),
             life=life,
+            tel=tel,
         )
 
     def pop_all(st: SimState, funcs, services, arrivals) -> SimState:
@@ -303,6 +336,13 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
             n_w = active.sum(axis=1)
             server_time = st.server_time + tau * (n_w > 0).sum()
             core_time = st.core_time + tau * jnp.minimum(n_w, C).sum()
+            tel = st.tel
+            if tel_on:
+                # busy/depth/queue-length time integrals, pre-advance
+                # occupancy — the same left-Riemann convention as
+                # server_time/core_time just above
+                tel = tel_engine.on_advance(tel, tau, n_w > 0, n_w,
+                                            st.q_tail - st.q_head)
             now = st.now + tau
             remaining = st.remaining - rates * tau
             # complete the argmin slot only (idx N / col F are scratch);
@@ -317,6 +357,14 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
                 ((tid >= 0) & (st.remaining[wj, sj] <= EPS))
             resp = st.resp.at[jnp.where(completed, tid, N)].set(
                 jnp.where(completed, now - st.task_arr[wj, sj], 0.0))
+            if tel_on:
+                # histogram scatter for the (masked) completion; warmup
+                # tasks are dropped inside on_complete to match
+                # summarize's post-warmup population
+                tel = tel_engine.on_complete(
+                    tel, now - st.task_arr[wj, sj],
+                    services[jnp.maximum(tid, 0)], tid, completed,
+                    tel_cutoff, tel_edges)
             f_j = funcs[jnp.maximum(tid, 0)]
             w_pad = jnp.where(completed, wj, 0)
             f_pad = jnp.where(completed, f_j, F)
@@ -348,6 +396,8 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
                     warm = warm.at[jnp.where(over, wj, 0),
                                    jnp.where(over, evict, F)].add(
                         -over.astype(jnp.int32))
+                    if tel_on:
+                        tel = tel_engine.on_evict(tel, over)
             else:
                 warm = st.warm.at[w_pad, f_pad].add(
                     completed.astype(jnp.int32))
@@ -373,7 +423,7 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
                 remaining=remaining, task_idx=task_idx,
                 warm=warm, now=now, resp=resp,
                 server_time=server_time, core_time=core_time, lb=lb,
-                life=life)
+                life=life, tel=tel)
             return st, dt_left - tau
 
         st, _ = lax.while_loop(cond, body, (st, dt))
@@ -413,6 +463,8 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
             else:
                 w = select(active, wcol, f_i, homes, u_i, i)
             st = st._replace(rejected=st.rejected.at[i].set(w < 0))
+            if tel_on:
+                st = st._replace(tel=tel_engine.on_reject(st.tel, w < 0))
             st = lax.cond(w >= 0,
                           lambda s: place(s, i, jnp.maximum(w, 0), funcs,
                                           services, arrivals),
@@ -443,6 +495,7 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
                 "keep": jnp.asarray(keep0, dtype=jnp.float64),
                 "ka": ka0,
             }
+        tel0 = tel_engine.init_state(W) if tel_on else ()
         st = SimState(
             remaining=jnp.full((W, S), jnp.inf, dtype=jnp.float64),
             task_arr=jnp.zeros((W, S), dtype=jnp.float64),
@@ -456,7 +509,7 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
             rejected=jnp.zeros((N + 1,), dtype=bool),
             worker_of=jnp.full((N + 1,), -1, dtype=jnp.int32),
             server_time=jnp.float64(0.0), core_time=jnp.float64(0.0),
-            lb=lb0, life=life0,
+            lb=lb0, life=life0, tel=tel0,
         )
         xs = (jnp.arange(N, dtype=jnp.int64), arrivals, funcs, u_lb)
         st, _ = lax.scan(
@@ -494,6 +547,9 @@ ENGINE_CACHE_MAX = 64
 
 _ENGINE_CACHE: "OrderedDict[tuple, object]" = OrderedDict()
 _ENGINE_CACHE_CAPACITY = ENGINE_CACHE_MAX
+#: Lifetime lookup counters (reset together with the cache); exported by
+#: :func:`engine_cache_stats` and surfaced in BENCH_report.json.
+_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
 
 
 def _resolve_backend(policy: PolicySpec, backend: str) -> str:
@@ -505,30 +561,48 @@ def _resolve_backend(policy: PolicySpec, backend: str) -> str:
 
 def _cache_key(policy: PolicySpec, cluster: ClusterCfg,
                n_arrivals: int, n_functions: int, batched: bool,
-               backend: str) -> tuple:
+               backend: str,
+               telemetry: TelemetryCfg | None = None) -> tuple:
+    # telemetry-on engines trace a different program, so the cfg is part
+    # of the key (None = the golden pre-telemetry program)
     return (tuple(policy), tuple(cluster), int(n_arrivals),
-            int(n_functions), batched, backend)
+            int(n_functions), batched, backend,
+            None if telemetry is None else tuple(telemetry))
 
 
 def _cache_get_or_build(key: tuple, build):
+    """Return ``(engine, fresh)``; ``fresh`` marks a cache-miss build.
+
+    The build is wrapped in an ``engine.build`` tracer span, so with
+    tracing on every compile-cache miss is visible on the timeline
+    (hits cost one dict lookup and no span).
+    """
     fn = _ENGINE_CACHE.get(key)
     if fn is not None:
+        _CACHE_STATS["hits"] += 1
         _ENGINE_CACHE.move_to_end(key)
-        return fn
-    fn = build()
+        return fn, False
+    _CACHE_STATS["misses"] += 1
+    with get_tracer().span("engine.build", backend=key[5],
+                           batched=key[4], n=key[2]):
+        fn = build()
     _ENGINE_CACHE[key] = fn
     while len(_ENGINE_CACHE) > _ENGINE_CACHE_CAPACITY:
         _ENGINE_CACHE.popitem(last=False)
-    return fn
+        _CACHE_STATS["evictions"] += 1
+    return fn, True
 
 
 def engine_cache_stats() -> dict:
-    """Introspection helper: number of distinct compiled engines."""
+    """Cache occupancy + lifetime hit/miss/eviction counters."""
     keys = list(_ENGINE_CACHE)
     return {"entries": len(keys),
             "batched": sum(1 for k in keys if k[4]),
             "single": sum(1 for k in keys if not k[4]),
-            "capacity": _ENGINE_CACHE_CAPACITY}
+            "capacity": _ENGINE_CACHE_CAPACITY,
+            "hits": _CACHE_STATS["hits"],
+            "misses": _CACHE_STATS["misses"],
+            "evictions": _CACHE_STATS["evictions"]}
 
 
 def engine_cache_capacity() -> int:
@@ -543,15 +617,40 @@ def set_engine_cache_capacity(capacity: int) -> None:
     _ENGINE_CACHE_CAPACITY = int(capacity)
     while len(_ENGINE_CACHE) > _ENGINE_CACHE_CAPACITY:
         _ENGINE_CACHE.popitem(last=False)
+        _CACHE_STATS["evictions"] += 1
 
 
 def clear_engine_cache() -> None:
+    """Drop all compiled engines and reset the lookup counters."""
     _ENGINE_CACHE.clear()
+    for k in _CACHE_STATS:
+        _CACHE_STATS[k] = 0
+
+
+def _get_engine(policy: PolicySpec, cluster: ClusterCfg,
+                n_arrivals: int, n_functions: int, batched: bool,
+                backend: str, telemetry: TelemetryCfg | None):
+    """Cached engine lookup; returns ``(engine, fresh)``.
+
+    ``fresh`` marks a cache-miss build — the next dispatch through the
+    callable pays XLA compilation, which :func:`simulate` /
+    :func:`simulate_many` surface as an ``engine.first_run`` span
+    (vs ``engine.run`` for steady-state cached dispatches).
+    """
+    backend = _resolve_backend(policy, backend)
+    key = _cache_key(policy, cluster, n_arrivals, n_functions, batched,
+                     backend, telemetry)
+    raw = lambda: _build_engine(policy, cluster, n_arrivals, n_functions,
+                                backend, telemetry=telemetry)
+    if batched:
+        return _cache_get_or_build(key, lambda: jax.jit(jax.vmap(raw())))
+    return _cache_get_or_build(key, lambda: jax.jit(raw()))
 
 
 def build_simulator(policy: PolicySpec, cluster: ClusterCfg, *,
                     n_arrivals: int, n_functions: int,
-                    backend: str = "auto"):
+                    backend: str = "auto",
+                    telemetry: TelemetryCfg | None = None):
     """Jitted single-workload simulator, memoized on (policy, cluster, N, F).
 
     Repeated calls with an equal key return the *same* compiled callable, so
@@ -561,18 +660,19 @@ def build_simulator(policy: PolicySpec, cluster: ClusterCfg, *,
     ships one — see :func:`repro.policy.default_backend`).  The memo is a
     bounded LRU (``ENGINE_CACHE_MAX`` entries by default; resize with
     :func:`set_engine_cache_capacity`); a key evicted by newer shapes is
-    transparently rebuilt on the next call.
+    transparently rebuilt on the next call.  ``telemetry`` selects the
+    streaming-metrics variant (a distinct cache entry — the carry shape
+    differs).
     """
-    backend = _resolve_backend(policy, backend)
-    key = _cache_key(policy, cluster, n_arrivals, n_functions, False,
-                     backend)
-    return _cache_get_or_build(key, lambda: jax.jit(
-        _build_engine(policy, cluster, n_arrivals, n_functions, backend)))
+    fn, _ = _get_engine(policy, cluster, n_arrivals, n_functions, False,
+                        backend, telemetry)
+    return fn
 
 
 def build_batch_simulator(policy: PolicySpec, cluster: ClusterCfg, *,
                           n_arrivals: int, n_functions: int,
-                          backend: str = "auto"):
+                          backend: str = "auto",
+                          telemetry: TelemetryCfg | None = None):
     """Jitted ``vmap``-ed simulator over a leading replication axis.
 
     All five inputs carry a leading ``R`` axis (``arrivals/funcs/services/
@@ -583,21 +683,31 @@ def build_batch_simulator(policy: PolicySpec, cluster: ClusterCfg, *,
     :mod:`repro.kernels.hermes_select` dispatch serves every stacked
     replication per arrival.
     """
-    backend = _resolve_backend(policy, backend)
-    key = _cache_key(policy, cluster, n_arrivals, n_functions, True,
-                     backend)
-    return _cache_get_or_build(key, lambda: jax.jit(jax.vmap(
-        _build_engine(policy, cluster, n_arrivals, n_functions, backend))))
+    fn, _ = _get_engine(policy, cluster, n_arrivals, n_functions, True,
+                        backend, telemetry)
+    return fn
 
 
 def simulate(policy: PolicySpec, cluster: ClusterCfg, wl: Workload,
-             *, backend: str = "auto") -> SimOutput:
-    """Run the JAX simulator on a workload; returns host-side results."""
-    run = build_simulator(policy, cluster, n_arrivals=wl.n,
-                          n_functions=wl.n_functions, backend=backend)
-    st = run(jnp.asarray(wl.arrival), jnp.asarray(wl.func),
-             jnp.asarray(wl.service), jnp.asarray(wl.u_lb),
-             jnp.asarray(wl.func_home))
+             *, backend: str = "auto",
+             telemetry: TelemetryCfg | None = None) -> SimOutput:
+    """Run the JAX simulator on a workload; returns host-side results.
+
+    With ``telemetry`` set, the returned output carries a
+    :class:`~repro.telemetry.TelemetryResult` accumulated inside the
+    scan (histogram percentile sketches, counters, occupancy
+    integrals).
+    """
+    run, fresh = _get_engine(policy, cluster, wl.n, wl.n_functions,
+                             False, backend, telemetry)
+    tr = get_tracer()
+    with tr.span("engine.first_run" if fresh else "engine.run",
+                 policy=str(policy), backend=backend, n=wl.n):
+        st = run(jnp.asarray(wl.arrival), jnp.asarray(wl.func),
+                 jnp.asarray(wl.service), jnp.asarray(wl.u_lb),
+                 jnp.asarray(wl.func_home))
+        if tr.enabled:
+            st = jax.block_until_ready(st)
     return SimOutput(
         response=np.asarray(st.resp[:wl.n]),
         cold=np.asarray(st.cold[:wl.n]),
@@ -606,11 +716,15 @@ def simulate(policy: PolicySpec, cluster: ClusterCfg, wl: Workload,
         server_time=float(st.server_time),
         core_time=float(st.core_time),
         end_time=float(st.now),
+        telemetry=None if telemetry is None else TelemetryResult.from_state(
+            jax.tree_util.tree_map(np.asarray, st.tel), cfg=telemetry),
     )
 
 
 def simulate_many(policy: PolicySpec, cluster: ClusterCfg,
-                  workloads, *, backend: str = "auto") -> BatchSimOutput:
+                  workloads, *, backend: str = "auto",
+                  telemetry: TelemetryCfg | None = None
+                  ) -> BatchSimOutput:
     """Run ``R`` stacked workload replications through one compiled program.
 
     ``workloads`` is a :class:`~repro.core.workload.WorkloadBatch` or a
@@ -618,15 +732,24 @@ def simulate_many(policy: PolicySpec, cluster: ClusterCfg,
     here).  Semantically identical to ``R`` independent :func:`simulate`
     calls — the batched engine is the same scan program under ``vmap`` —
     but compiles once and advances every replication per XLA dispatch.
+    With ``telemetry`` set, the output's
+    :class:`~repro.telemetry.TelemetryResult` keeps the leading ``R``
+    axis; its percentile readers pool across it (matching
+    ``summarize_batch``'s pooled statistics).
     """
     wb = workloads if isinstance(workloads, WorkloadBatch) \
         else stack_workloads(workloads)
-    run = build_batch_simulator(policy, cluster, n_arrivals=wb.n,
-                                n_functions=wb.n_functions,
-                                backend=backend)
-    st = run(jnp.asarray(wb.arrival), jnp.asarray(wb.func),
-             jnp.asarray(wb.service), jnp.asarray(wb.u_lb),
-             jnp.asarray(wb.func_home))
+    run, fresh = _get_engine(policy, cluster, wb.n, wb.n_functions,
+                             True, backend, telemetry)
+    tr = get_tracer()
+    with tr.span("engine.first_run" if fresh else "engine.run",
+                 policy=str(policy), backend=backend, n=wb.n,
+                 reps=wb.n_reps):
+        st = run(jnp.asarray(wb.arrival), jnp.asarray(wb.func),
+                 jnp.asarray(wb.service), jnp.asarray(wb.u_lb),
+                 jnp.asarray(wb.func_home))
+        if tr.enabled:
+            st = jax.block_until_ready(st)
     return BatchSimOutput(
         response=np.asarray(st.resp[:, :wb.n]),
         cold=np.asarray(st.cold[:, :wb.n]),
@@ -635,4 +758,6 @@ def simulate_many(policy: PolicySpec, cluster: ClusterCfg,
         server_time=np.asarray(st.server_time),
         core_time=np.asarray(st.core_time),
         end_time=np.asarray(st.now),
+        telemetry=None if telemetry is None else TelemetryResult.from_state(
+            jax.tree_util.tree_map(np.asarray, st.tel), cfg=telemetry),
     )

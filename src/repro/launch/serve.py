@@ -78,6 +78,14 @@ def main() -> None:
                          "controller kernel (policies whose balancer "
                          "ships one, e.g. E/H/*)")
     ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--telemetry", action="store_true",
+                    help="collect streaming platform telemetry "
+                         "(repro.telemetry) and print its summary; "
+                         "with --trace-out also records per-task "
+                         "virtual-time lifecycle events")
+    ap.add_argument("--trace-out", metavar="PATH", default=None,
+                    help="export a Perfetto-loadable Chrome trace JSON "
+                         "of the run (implies --telemetry)")
     args = ap.parse_args()
 
     if args.backend == "models":
@@ -134,9 +142,22 @@ def main() -> None:
         wl = WORKLOADS[args.workload](cl, args.load, args.n,
                                       seed=args.seed)
         wname = args.workload
+    telemetry_on = bool(args.telemetry or args.trace_out)
+    tel_cfg = None
+    tracer = None
+    if telemetry_on:
+        from repro.telemetry import TelemetryCfg, configure_tracing
+        tel_cfg = TelemetryCfg()
+        tracer = configure_tracing(True)
     cfg = ServeCfg(cluster=cl, cold_start_s=args.cold_start)
-    out = ServingCluster(cfg, parse_policy(args.policy),
-                         use_kernel=args.use_kernel).run(wl)
+    sc = ServingCluster(cfg, parse_policy(args.policy),
+                        use_kernel=args.use_kernel, telemetry=tel_cfg)
+    if tracer is not None:
+        with tracer.span("serve.run", policy=args.policy,
+                         workload=wname, load=args.load, n=args.n):
+            out = sc.run(wl)
+    else:
+        out = sc.run(wl)
     s = summarize(out.response, wl.service, out.cold, out.rejected,
                   out.server_time, out.core_time, out.end_time)
     ka = lifecycle.keepalive if lifecycle else "legacy-inf"
@@ -147,6 +168,17 @@ def main() -> None:
     print(f"  lat  p50/p99 = {s.lat_p50:.2f}s / {s.lat_p99:.2f}s")
     print(f"  cold starts  = {100*s.cold_frac:.1f}%   "
           f"servers = {s.mean_servers:.2f}   rejected = {s.n_rejected}")
+    if out.telemetry is not None:
+        t = out.telemetry.summary()
+        print(f"  telemetry    : sketch slow p50/p99 = "
+              f"{t['slow_p50']:.2f} / {t['slow_p99']:.1f}  "
+              f"cold={t['n_cold']} warm={t['n_warm']} "
+              f"evict={t['n_evict']} reject={t['n_reject']}  "
+              f"busy={t['busy_time_s']:.1f}s")
+    if args.trace_out:
+        tracer.export(args.trace_out)
+        print(f"  trace        : {args.trace_out} "
+              f"(load at https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

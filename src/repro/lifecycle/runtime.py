@@ -119,13 +119,15 @@ class LifecycleRuntime:
     # ------------------------------------------------------------- updates
 
     def on_complete(self, warm: np.ndarray, w: int, f: int,
-                    now: float) -> None:
+                    now: float) -> bool:
         """A task of function ``f`` completed on worker ``w`` at ``now``.
 
         Zeroes a stale pool before the increment (no resurrection of
         expired executors), refreshes the idle clock, and enforces the
         ``max_idle`` warm-pool budget by LRU eviction.  Mirrors the
-        scan engine's per-completion lifecycle block.
+        scan engine's per-completion lifecycle block.  Returns whether
+        the budget evicted an executor (telemetry counts it — the scan
+        engine's ``over`` flag).
         """
         age = now - self.idle_since[w, f]
         if age > self.pre[f] + self.keep[f]:
@@ -138,6 +140,8 @@ class LifecycleRuntime:
                 v = int(np.argmin(np.where(eff > 0, self.idle_since[w],
                                            np.inf)))
                 warm[w, v] -= 1
+                return True
+        return False
 
     def observe_place(self, w: int, f: int, now: float) -> None:
         """Feed the keep-alive policy the placed pool's idle age.

@@ -30,6 +30,11 @@ from repro.core.taxonomy import PolicySpec, HERMES
 from repro.core.workload import Workload
 from repro.lifecycle import LifecycleRuntime, resolve_lifecycle
 from repro.policy import resolve
+from repro.telemetry.spans import get_tracer
+from repro.telemetry.state import (TelemetryCfg, TelemetryResult, init_np,
+                                   on_advance_np, on_complete_np,
+                                   on_evict_np, on_place_np, on_reject_np,
+                                   warmup_cutoff)
 
 EPS = 1e-9
 
@@ -89,16 +94,21 @@ class ServeResult:
     end_time: float
     n_cold: int
     n_redispatch: int
+    #: streaming metrics (None unless the cluster was built with a
+    #: TelemetryCfg) — same layout as the simulators' telemetry
+    telemetry: TelemetryResult | None = None
 
 
 class ServingCluster:
     """Event-driven serving cluster under a scheduling policy."""
 
     def __init__(self, cfg: ServeCfg, policy: PolicySpec = HERMES,
-                 use_kernel: bool = False):
+                 use_kernel: bool = False,
+                 telemetry: TelemetryCfg | None = None):
         self.cfg = cfg
         self.policy = policy
         self.use_kernel = use_kernel
+        self.telemetry = telemetry
         # numpy-backend resolution drives the virtual-time loop; the
         # balancer's batched kernel (if registered) serves the
         # ``use_kernel`` controller path
@@ -131,6 +141,11 @@ class ServingCluster:
         # threads (None = legacy infinite keep-alive)
         lres = resolve_lifecycle(cl, backend="np", n_functions=F)
         life = LifecycleRuntime(lres, W, F) if lres is not None else None
+        # streaming telemetry + virtual-time task lifecycle events
+        tel = init_np(W) if self.telemetry is not None else None
+        tel_cutoff = warmup_cutoff(N, self.telemetry) \
+            if self.telemetry is not None else 0
+        tracer = get_tracer()
         response = np.full(N, np.nan)
         cold = np.zeros(N, dtype=bool)
         rejected = np.zeros(N, dtype=bool)
@@ -160,6 +175,7 @@ class ServingCluster:
             f = int(wl.func[arr_idx])
             avail = int(warm[w, f]) if life is None \
                 else life.materialized_at(w, f, warm[w, f], now)
+            evicted = False
             if avail > 0 and work is None:
                 warm[w, f] -= 1
                 is_cold = False
@@ -171,6 +187,14 @@ class ServingCluster:
                     victim = int(np.argmax(warm[w])) if life is None \
                         else life.evict_victim(warm[w], w, now)
                     warm[w, victim] -= 1
+                    evicted = True
+            if tel is not None:
+                if not migration:
+                    on_place_np(tel, w, is_cold, evicted)
+                elif evicted:
+                    # a migration's slot-pressure eviction is real even
+                    # though the placement itself is not a decision
+                    on_evict_np(tel)
             cold_s = cfg.cold_start_s if life is None \
                 else life.cold_cost(f, cfg.cold_start_s)
             if life is not None:
@@ -250,6 +274,12 @@ class ServingCluster:
                 server_time += tau * sum(1 for w in range(W) if tasks[w])
                 core_time += tau * sum(min(len(tasks[w]), C)
                                        for w in range(W))
+                if tel is not None:
+                    on_advance_np(
+                        tel, tau,
+                        np.array([bool(tasks[w]) for w in range(W)]),
+                        np.array([len(tasks[w]) for w in range(W)]),
+                        len(queue))
                 now += tau
                 dt_left -= tau
                 for w in range(W):
@@ -260,10 +290,28 @@ class ServingCluster:
                         if t.remaining <= EPS:
                             response[t.arr_idx] = now - t.arrival + \
                                 self.cfg.ctrl_latency_s
+                            if tel is not None:
+                                on_complete_np(
+                                    tel, response[t.arr_idx],
+                                    float(wl.service[t.arr_idx]),
+                                    t.arr_idx, tel_cutoff)
+                            if tracer.enabled:
+                                # one virtual-time event per task:
+                                # arrival → completion on its worker's
+                                # track (Perfetto pid "virtual-time")
+                                tracer.event_at(
+                                    f"f{t.func}", t.arrival,
+                                    response[t.arr_idx], tid=w,
+                                    task=t.arr_idx,
+                                    cold=bool(cold[t.arr_idx]),
+                                    migrations=t.migrations)
                             if life is None:
                                 warm[w, t.func] += 1
                             else:
-                                life.on_complete(warm, w, t.func, now)
+                                budget_evicted = life.on_complete(
+                                    warm, w, t.func, now)
+                                if budget_evicted and tel is not None:
+                                    on_evict_np(tel)
                             n_alive -= 1
                             if lb_state is not None:
                                 lb_state = res.on_complete(
@@ -316,6 +364,8 @@ class ServingCluster:
                                float(wl.u_lb[i]), i)
             if w < 0:
                 rejected[i] = True
+                if tel is not None:
+                    on_reject_np(tel)
             else:
                 place(w, i)
 
@@ -325,4 +375,6 @@ class ServingCluster:
             worker=worker_of, redispatched=redisp,
             server_time=server_time, core_time=core_time, end_time=now,
             n_cold=int(cold[~rejected].sum()),
-            n_redispatch=int(redisp.sum()))
+            n_redispatch=int(redisp.sum()),
+            telemetry=None if tel is None else TelemetryResult.from_state(
+                tel, cfg=self.telemetry))

@@ -1,0 +1,38 @@
+"""repro.telemetry — three-plane observability subsystem.
+
+Plane 1 — in-engine streaming metrics (:mod:`~repro.telemetry.state` /
+:mod:`~repro.telemetry.sketch`; jax twins in
+:mod:`~repro.telemetry.engine`): an opt-in ``TelemetryState`` pytree
+carried through the scan — log-spaced slowdown/latency histogram
+sketches, cold/warm/evict/reject counters, per-worker busy-time and
+queue-depth integrals, balancer decision histograms.
+
+Plane 2 — host-side span tracing (:mod:`~repro.telemetry.spans`):
+zero-dep nested spans exported as Perfetto-loadable Chrome trace JSON.
+
+Plane 3 — run provenance (:mod:`~repro.telemetry.manifest`):
+``RunManifest`` blocks attached to benchmark reports.
+
+This package is importable without jax — :mod:`repro.telemetry.engine`
+(the jax twins) is deliberately *not* imported here; the simulator
+imports it directly.
+"""
+from .manifest import RunManifest, collect as collect_manifest, \
+    wall_split_from_aggregate
+from .sketch import (HIST_HI, HIST_LO, N_BINS, bin_index_np, hist_edges,
+                     sketch_count, sketch_percentile)
+from .spans import (Tracer, configure_tracing, get_tracer, set_tracer,
+                    span)
+from .state import (TelemetryCfg, TelemetryResult, init_np,
+                    on_advance_np, on_complete_np, on_evict_np,
+                    on_place_np, on_reject_np, warmup_cutoff)
+
+__all__ = [
+    "N_BINS", "HIST_LO", "HIST_HI", "hist_edges", "bin_index_np",
+    "sketch_percentile", "sketch_count",
+    "TelemetryCfg", "TelemetryResult", "init_np", "warmup_cutoff",
+    "on_place_np", "on_advance_np", "on_complete_np", "on_evict_np",
+    "on_reject_np",
+    "Tracer", "configure_tracing", "get_tracer", "set_tracer", "span",
+    "RunManifest", "collect_manifest", "wall_split_from_aggregate",
+]

@@ -1,0 +1,105 @@
+"""Telemetry plane 3 — run provenance.
+
+A :class:`RunManifest` pins down *what produced a report*: git revision,
+library versions, platform/devices, the seeds and CLI args in play, the
+engine compile-cache counters and the compile-vs-run wall split derived
+from the tracer's span aggregate.  ``benchmarks.run`` attaches one to
+every ``BENCH_report.json`` so a figure can always be traced back to the
+exact code + environment that drew it.
+
+Everything here degrades gracefully: no git checkout, no jax install,
+no tracer — the corresponding fields just read ``None``/empty.
+"""
+from __future__ import annotations
+
+import dataclasses
+import datetime
+import platform
+import subprocess
+import sys
+from typing import Any, Mapping
+
+
+@dataclasses.dataclass
+class RunManifest:
+    git_sha: str | None
+    git_dirty: bool | None
+    python: str
+    platform: str
+    jax_version: str | None
+    numpy_version: str | None
+    devices: list[str]
+    started_at: str
+    duration_s: float | None = None
+    seeds: dict = dataclasses.field(default_factory=dict)
+    args: dict = dataclasses.field(default_factory=dict)
+    engine_cache: dict = dataclasses.field(default_factory=dict)
+    wall_split: dict = dataclasses.field(default_factory=dict)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _git(*argv: str) -> str | None:
+    try:
+        out = subprocess.run(["git", *argv], capture_output=True,
+                             text=True, timeout=10)
+        return out.stdout.strip() if out.returncode == 0 else None
+    except Exception:
+        return None
+
+
+def collect(seeds: Mapping[str, Any] | None = None,
+            args: Mapping[str, Any] | None = None) -> RunManifest:
+    """Snapshot provenance at run start; fill timing/cache fields later."""
+    jax_version = None
+    devices: list[str] = []
+    try:
+        import jax
+        jax_version = jax.__version__
+        devices = [str(d) for d in jax.devices()]
+    except Exception:
+        pass
+    numpy_version = None
+    try:
+        import numpy
+        numpy_version = numpy.__version__
+    except Exception:
+        pass
+    dirty = _git("status", "--porcelain")
+    return RunManifest(
+        git_sha=_git("rev-parse", "HEAD"),
+        git_dirty=None if dirty is None else bool(dirty),
+        python=sys.version.split()[0],
+        platform=platform.platform(),
+        jax_version=jax_version,
+        numpy_version=numpy_version,
+        devices=devices,
+        started_at=datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        seeds=dict(seeds or {}),
+        args=dict(args or {}),
+    )
+
+
+def wall_split_from_aggregate(agg: Mapping[str, Mapping[str, Any]]) -> dict:
+    """Compile-vs-run wall split from a tracer span aggregate.
+
+    ``engine.build`` spans cover trace+lowering on cache misses;
+    ``engine.first_run`` covers the XLA-compile-inclusive first
+    dispatch; ``engine.run`` covers steady-state cached dispatches.
+    """
+    def _get(name: str) -> tuple[int, float]:
+        a = agg.get(name, {})
+        return int(a.get("count", 0)), float(a.get("total_s", 0.0))
+
+    n_build, t_build = _get("engine.build")
+    n_first, t_first = _get("engine.first_run")
+    n_run, t_run = _get("engine.run")
+    return {
+        "build_s": round(t_build, 6), "builds": n_build,
+        "first_run_s": round(t_first, 6), "first_runs": n_first,
+        "run_s": round(t_run, 6), "runs": n_run,
+        "compile_heavy_s": round(t_build + t_first, 6),
+        "steady_state_s": round(t_run, 6),
+    }
