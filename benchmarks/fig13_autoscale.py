@@ -1,0 +1,121 @@
+"""Fig. 13 (extension) — heterogeneous fleets & latency-target autoscaling.
+
+The fleet subsystem (:mod:`repro.fleet`) adds two axes the paper's
+testbed holds fixed: per-worker speed and the number of provisioned
+workers.  Two lanes, both on ``azure-diurnal`` trace replay:
+
+* **balancer lane** — a two-generation fleet (half the workers at half
+  speed) under speed-blind least-loaded, Hermes, and the SWARM
+  balancer that learns per-worker slowness online from completion
+  times.  Expected shape: LL counts tasks without weighing where a
+  task runs slowly, so its tail pays for every task parked on a slow
+  worker; SWARM's learned inverse-speed priorities recover most of
+  that gap without being told the speeds.
+* **frontier lane** — provisioned core-seconds × p99 slowdown.  Static
+  fleets of ``W`` ∈ ``STATIC_WORKERS`` workers versus the
+  ``TARGET_P99`` autoscaler (telemetry-sketch sensor, half-target
+  setpoint, MIAD grow/shrink) allowed to scale within the same 8-worker
+  envelope.  Expected shape: under a diurnal arrival pattern the
+  autoscaler meets the p99 target while provisioning fewer
+  core-seconds than the smallest static fleet that also meets it —
+  static fleets pay for the peak all day.
+
+Every row carries ``lane`` / ``provision`` / ``prov_core_s`` columns so
+``BENCH_report.json`` can reconstruct the frontier.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import (ClusterCfg, E_LL_PS, E_SWARM_PS, FleetCfg, HERMES,
+                        PAPER_TESTBED, WORKLOADS, summarize)
+from repro.core.simulator import simulate
+from repro.telemetry import TelemetryCfg
+
+from .common import write_csv
+
+WORKLOAD = "azure-diurnal"
+
+# Balancer lane: two-generation fleet, gate anchored at load 0.8.
+BALANCER_FLEET = "two-gen"
+BALANCER_LOAD = 0.8
+BALANCER_SCHEDULERS = {"hermes": HERMES, "least-loaded": E_LL_PS,
+                       "swarm": E_SWARM_PS}
+
+# Frontier lane: static W sweep vs the TARGET_P99 closed loop.
+FRONTIER_LOAD = 0.85
+STATIC_WORKERS = (5, 6, 7, 8)
+STATIC_CORES = PAPER_TESTBED.cores
+TARGET_P99 = 3.0
+AUTO_FLEET = FleetCfg(preset="uniform", autoscale="TARGET_P99",
+                      target_p99=TARGET_P99, min_workers=2,
+                      cooldown_s=2.0)
+
+N_ARRIVALS = 6000
+
+
+def _row(lane, scheduler, fleet, provision, load, seed, wl, out, wall):
+    s = summarize(out.response, wl.service, out.cold, out.rejected,
+                  out.server_time, out.core_time, out.end_time)
+    return {"lane": lane, "workload": WORKLOAD, "scheduler": scheduler,
+            "fleet": fleet, "provision": provision, "load": load,
+            "seed": seed, "target_p99": TARGET_P99,
+            "wall_s": round(wall, 3), **s.row(),
+            "prov_core_s": float(out.prov_core_s)}
+
+
+def _balancer_lane(loads, seed):
+    wfn = WORKLOADS[WORKLOAD]
+    cl = PAPER_TESTBED._replace(fleet=FleetCfg(preset=BALANCER_FLEET))
+    rows = []
+    for load in loads:
+        wl = wfn(PAPER_TESTBED, load, N_ARRIVALS, seed=seed)
+        for name, pol in BALANCER_SCHEDULERS.items():
+            t0 = time.time()
+            out = simulate(pol, cl, wl, backend="jax")
+            rows.append(_row("balancer", name, BALANCER_FLEET, "static-8",
+                             load, seed, wl, out, time.time() - t0))
+    return rows
+
+
+def _frontier_lane(seeds):
+    wfn = WORKLOADS[WORKLOAD]
+    rows = []
+    for seed in seeds:
+        # same trace for every provisioning point of a seed
+        wl = wfn(PAPER_TESTBED, FRONTIER_LOAD, N_ARRIVALS, seed=seed)
+        for wn in STATIC_WORKERS:
+            t0 = time.time()
+            out = simulate(HERMES, ClusterCfg(n_workers=wn,
+                                              cores=STATIC_CORES),
+                           wl, backend="jax")
+            rows.append(_row("frontier", "hermes", "none", f"static-{wn}",
+                             FRONTIER_LOAD, seed, wl, out,
+                             time.time() - t0))
+        cl = PAPER_TESTBED._replace(fleet=AUTO_FLEET)
+        t0 = time.time()
+        out = simulate(HERMES, cl, wl, backend="jax",
+                       telemetry=TelemetryCfg())
+        rows.append(_row("frontier", "hermes", "uniform", "auto",
+                         FRONTIER_LOAD, seed, wl, out, time.time() - t0))
+    return rows
+
+
+def run(quick: bool = True):
+    # both tiers stay at the gate-verified N; full mode widens the
+    # figure (more loads on the balancer lane, more trace seeds on the
+    # frontier) rather than re-scaling it
+    bal_loads = [BALANCER_LOAD] if quick else [0.5, 0.65, BALANCER_LOAD]
+    seeds = (1,) if quick else (1, 2, 3)
+    rows = _balancer_lane(bal_loads, seed=1)
+    rows += _frontier_lane(seeds)
+    write_csv("fig13_autoscale.csv", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['lane']:9s} {r['provision']:9s} {r['scheduler']:13s} "
+              f"load={r['load']:.2f} seed={r['seed']} "
+              f"slow99={r['slow_p99']:8.2f} "
+              f"prov={r['prov_core_s']:9.0f}")

@@ -74,7 +74,8 @@ def main() -> None:
     from . import (bench_telemetry, fig2_policy_space, fig3_srpt,
                    fig4_scale, fig6_slowdown, fig7_coldstarts,
                    fig8_resources, fig9_robustness, fig10_trace_replay,
-                   fig11_policy_zoo, fig12_keepalive, tab_overhead)
+                   fig11_policy_zoo, fig12_keepalive, fig13_autoscale,
+                   tab_overhead)
 
     print("== fig2: policy space (4x12 cores, Azure workload) ==",
           flush=True)
@@ -286,6 +287,41 @@ def main() -> None:
                  f"hermes={h12:.3f} vs LL={l12:.3f} "
                  f"(summed cold_frac across loads)")
 
+    print("== fig13: heterogeneous fleet / latency-target autoscaling ==",
+          flush=True)
+    with tracer.span("fig13"):
+        f13 = fig13_autoscale.run(quick)
+    bal13 = _by(f13, lane="balancer", load=fig13_autoscale.BALANCER_LOAD)
+    sw13 = next(r for r in bal13 if r["scheduler"] == "swarm")
+    ll13 = next(r for r in bal13 if r["scheduler"] == "least-loaded")
+    ok &= _claim("Fleet: SWARM ≤ speed-blind LL p99 slowdown on a "
+                 "two-gen fleet @0.8 (learned per-worker slowness)",
+                 sw13["slow_p99"] <= ll13["slow_p99"],
+                 f"SWARM={sw13['slow_p99']:.2f} vs LL={ll13['slow_p99']:.2f}")
+    fr13 = _by(f13, lane="frontier")
+    tgt13 = fig13_autoscale.TARGET_P99
+    auto_ok, auto_bits = True, []
+    for seed in sorted({r["seed"] for r in fr13}):
+        sr = _by(fr13, seed=seed)
+        auto = next(r for r in sr if r["provision"] == "auto")
+        meet = [r for r in sr if r["provision"] != "auto"
+                and r["slow_p99"] <= tgt13]
+        # smallest static fleet that meets the target (upper bound inf
+        # if none does: the autoscaler then only has to meet the target)
+        best = min(meet, key=lambda r: r["prov_core_s"]) if meet else None
+        cap = best["prov_core_s"] if best else float("inf")
+        auto_ok &= (auto["slow_p99"] <= tgt13
+                    and auto["prov_core_s"] < cap)
+        auto_bits.append(
+            f"seed{seed}: p99={auto['slow_p99']:.2f} "
+            f"prov={auto['prov_core_s']:.0f} vs "
+            f"{best['provision'] if best else 'none'}="
+            f"{cap:.0f}")
+    ok &= _claim("Fleet: TARGET_P99 autoscaler meets the p99 target with "
+                 f"fewer provisioned core-seconds than the smallest "
+                 f"static fleet meeting it (target={tgt13})",
+                 auto_ok, "; ".join(auto_bits))
+
     print("== §6.6: scheduler overhead ==", flush=True)
     with tracer.span("tab_overhead"):
         tov = tab_overhead.run(quick)
@@ -344,7 +380,7 @@ def main() -> None:
         "analysis": analysis_rows,
         "figures": {"fig2": f2, "fig3": f3, "fig4": f4, "fig6": f6,
                     "fig8": f8, "fig9": f9, "fig10": f10, "fig11": f11,
-                    "fig12": f12, "tab_overhead": tov,
+                    "fig12": f12, "fig13": f13, "tab_overhead": tov,
                     "bench_telemetry": ftel},
     }
     report_path = os.path.join(OUT_DIR, "BENCH_report.json")

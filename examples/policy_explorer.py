@@ -54,6 +54,22 @@ cold-start presets::
     PYTHONPATH=src python examples/policy_explorer.py \
         --policies E/H/PS E/LL/PS --keepalive HYBRID_HIST --ttl 30 \
         --max-idle 8 --cold-start-preset openwhisk --loads 0.3 0.7
+
+Heterogeneous fleets & autoscaling
+----------------------------------
+``--fleet-preset`` / ``--speed`` give workers unequal speeds
+(:mod:`repro.fleet`; try the ``SWARM`` balancer, which learns the
+speeds online), and ``--autoscale TARGET_P99`` turns on the
+latency-target control loop (telemetry is enabled automatically when
+the autoscaler reads the sketch)::
+
+    PYTHONPATH=src python examples/policy_explorer.py \
+        --policies E/LL/PS E/SWARM/PS --fleet-preset two-gen \
+        --workload azure-diurnal --loads 0.5 0.8
+
+With every fleet flag at its default the explorer keeps the exact
+homogeneous fixed-W model; ``--list-policies`` prints the registered
+fleet presets and autoscale policies alongside the other axes.
 """
 import argparse
 
@@ -84,6 +100,24 @@ def main() -> None:
                     default="scalar",
                     help="per-function cold-start preset ('scalar' = "
                          "legacy single penalty)")
+    ap.add_argument("--fleet-preset", metavar="NAME",
+                    help="per-worker speed preset (repro.fleet registry); "
+                         "omit (with no other fleet flag) for the "
+                         "homogeneous pool")
+    ap.add_argument("--speed", nargs="+", type=float, metavar="S",
+                    help="explicit per-worker speeds (overrides "
+                         "--fleet-preset; length must equal --workers)")
+    ap.add_argument("--autoscale", metavar="NAME",
+                    help="active-worker autoscale policy (repro.fleet "
+                         "registry: STATIC, TARGET_P99, ...)")
+    ap.add_argument("--target-p99", type=float, default=5.0,
+                    help="autoscaler p99 slowdown ceiling")
+    ap.add_argument("--min-workers", type=int, default=1,
+                    help="autoscaler floor on active workers")
+    ap.add_argument("--cooldown", type=float, default=60.0,
+                    help="seconds between autoscale decisions")
+    ap.add_argument("--hysteresis", type=float, default=0.1,
+                    help="autoscaler dead-band half-width")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--reps", type=int, default=1,
                     help="seed replications per load point (sim engine); "
@@ -100,6 +134,8 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.list_policies:
+        from repro.fleet import (autoscaler_names, fleet_preset_names,
+                                 get_autoscaler)
         from repro.lifecycle import (cold_preset_names, get_keepalive,
                                      keepalive_names)
         from repro.policy import (balancer_names, get_balancer, get_sched,
@@ -118,12 +154,20 @@ def main() -> None:
             print(f"  {name:12s} [{','.join(ka.backends())}]  {ka.doc}")
         print(f"cold-start presets (--cold-start-preset): "
               f"{', '.join(cold_preset_names())}")
+        print(f"fleet presets (--fleet-preset): "
+              f"{', '.join(fleet_preset_names())}")
+        print("autoscale policies (--autoscale):")
+        for name in autoscaler_names():
+            pol = get_autoscaler(name)
+            tel = "telemetry" if pol.needs_telemetry else "no-telemetry"
+            print(f"  {name:12s} [{tel}]  {pol.doc}")
         return
 
     from repro.core import (ClusterCfg, WORKLOADS, parse_policy,
                             replicate_workload, summarize,
                             summarize_batch_sim)
     from repro.core.simulator import simulate_many
+    from repro.fleet import fleet_from_flags, get_autoscaler
     from repro.lifecycle import lifecycle_from_flags
     from repro.serving.engine import ServeCfg, ServingCluster
 
@@ -134,15 +178,24 @@ def main() -> None:
     # explicit --keepalive gets an infinite window (no surprise expiry)
     lifecycle = lifecycle_from_flags(args.keepalive, args.ttl,
                                      args.max_idle, args.cold_start_preset)
+    # same contract for the fleet axes: all defaults -> fleet=None
+    fleet = fleet_from_flags(args.fleet_preset, args.speed, args.autoscale,
+                             args.target_p99, args.min_workers,
+                             args.cooldown, args.hysteresis)
     cl = ClusterCfg(n_workers=args.workers, cores=args.cores,
-                    lifecycle=lifecycle)
-    telemetry_on = bool(args.telemetry or args.trace_out)
+                    lifecycle=lifecycle, fleet=fleet).validate()
+    # sketch-reading autoscalers need the telemetry carry even when no
+    # summary was requested
+    auto_needs_tel = (fleet is not None and
+                      get_autoscaler(fleet.autoscale).needs_telemetry)
+    telemetry_on = bool(args.telemetry or args.trace_out or auto_needs_tel)
     tel_cfg = None
     tracer = None
     if telemetry_on:
         from repro.telemetry import TelemetryCfg, configure_tracing
         tel_cfg = TelemetryCfg()
-        tracer = configure_tracing(True)
+        if args.telemetry or args.trace_out:   # span tracing stays opt-in
+            tracer = configure_tracing(True)
     wfn = WORKLOADS[args.workload]
     ci = " ±ci95" if args.reps > 1 and args.engine == "sim" else ""
     print(f"{'policy':10s} {'load':>5s} {'slow50':>8s} "

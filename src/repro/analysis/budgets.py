@@ -44,6 +44,8 @@ BASELINES: dict[str, int] = {
     "E/HIKU/PS|pallas": 779,
     "E/DD/PS|jax": 695,
     "E/DD/PS|pallas": 695,
+    "E/SWARM/PS|jax": 739,
+    "E/SWARM/PS|pallas": 739,
     "E/LL/PS|jax|ka=NONE": 756,
     "E/LL/PS|jax|ka=FIXED_TTL": 756,
     "E/LL/PS|jax|ka=HYBRID_HIST": 860,
@@ -57,6 +59,12 @@ BASELINES: dict[str, int] = {
     "E/H/PS|pallas|tel": 863,
     "E/LL/PS|jax|ka=FIXED_TTL|tel": 996,
     "L/LL/FCFS|jax|tel": 1596,
+    # heterogeneous-fleet lanes: the speed-vector divide costs ~4 eqns
+    # on a speed-blind engine; SWARM's learned-state carry and the
+    # TARGET_P99 autoscaler+telemetry lane are budgeted on top
+    "E/LL/PS|jax|fleet": 583,
+    "E/SWARM/PS|jax|fleet": 755,
+    "E/LL/PS|jax|fleet|auto|tel": 919,
 }
 
 #: Headroom multiplier over the measured baseline.

@@ -19,7 +19,8 @@ failures:
 * ``JXP004`` — host callbacks (``debug_callback`` / ``pure_callback``
   / ``io_callback`` / infeed/outfeed) inside the compiled hot path,
 * ``JXP005`` — engine-cache-key incompleteness: every
-  ``ClusterCfg`` / ``LifecycleCfg`` field is perturbed and the
+  ``ClusterCfg`` / ``LifecycleCfg`` / ``FleetCfg`` field is perturbed
+  and the
   :func:`repro.core.simulator._cache_key` is probed — a field that
   changes the traced program but not the key would silently share a
   compiled engine between different configs.
@@ -214,10 +215,10 @@ def audit_fn(fn: Callable, *example_args, label: str = "<fn>",
 # engine enumeration + tracing
 # --------------------------------------------------------------------------
 
-def _audit_cluster(lifecycle=None):
+def _audit_cluster(lifecycle=None, fleet=None):
     from repro.core.cluster import ClusterCfg
     return ClusterCfg(n_workers=AUDIT_W, cores=2, capacity_factor=2,
-                      lifecycle=lifecycle)
+                      lifecycle=lifecycle, fleet=fleet)
 
 
 def iter_engine_specs(*, balancers: Optional[Iterable[str]] = None,
@@ -232,9 +233,14 @@ def iter_engine_specs(*, balancers: Optional[Iterable[str]] = None,
     ``LL``) so lifecycle carries are audited too, plus ``|tel`` lanes
     (telemetry-on variants of representative engines: stateless,
     kernel, carried-state, lifecycle and late binding) so the streaming
-    telemetry carry is covered by the jaxpr rules and eqn budgets.
+    telemetry carry is covered by the jaxpr rules and eqn budgets,
+    plus ``|fleet`` lanes (heterogeneous two-gen speeds under the
+    speed-blind LL and the speed-learning SWARM balancers, and one
+    ``|fleet|auto|tel`` lane with the ``TARGET_P99`` autoscaler carry
+    riding the telemetry sketch).
     """
     from repro.core.taxonomy import Binding, PolicySpec
+    from repro.fleet import FleetCfg
     from repro.lifecycle import LifecycleCfg
     from repro.lifecycle.registry import keepalive_names
     from repro.policy import balancer_names
@@ -269,6 +275,19 @@ def iter_engine_specs(*, balancers: Optional[Iterable[str]] = None,
         specs.append((f"{pol.name}|jax|ka=FIXED_TTL|tel", pol, cl,
                       "jax", tel))
         specs.append((f"{late.name}|jax|tel", late, plain, "jax", tel))
+        # heterogeneous-fleet lanes: speed vectors thread the scan for
+        # a speed-blind and a speed-learning balancer, and one
+        # autoscaler lane carries the MIAD controller state (needs the
+        # telemetry sketch it reads)
+        het = _audit_cluster(fleet=FleetCfg(preset="two-gen"))
+        for bname in ("LL", "SWARM"):
+            p = PolicySpec(Binding.EARLY, bname, sched)
+            specs.append((f"{p.name}|jax|fleet", p, het, "jax", None))
+        auto = _audit_cluster(fleet=FleetCfg(
+            preset="two-gen", autoscale="TARGET_P99", target_p99=4.0,
+            min_workers=1, cooldown_s=1.0))
+        specs.append((f"{pol.name}|jax|fleet|auto|tel", pol, auto,
+                      "jax", tel))
     return specs
 
 
@@ -315,6 +334,12 @@ def _perturb(value: Any, field: str):
         return others[0] if others else None
     if field == "coldstart":
         return "paper-sim" if value != "paper-sim" else "scalar"
+    if field == "preset":
+        return "two-gen" if value != "two-gen" else "long-tail"
+    if field == "autoscale":
+        return "TARGET_P99" if value != "TARGET_P99" else "STATIC"
+    if field in ("speed", "mem"):
+        return (1.0,) * AUDIT_W if value == () else ()
     if isinstance(value, bool):
         return not value
     if isinstance(value, int):
@@ -329,13 +354,15 @@ def _perturb(value: Any, field: str):
 def audit_cache_key() -> list[Finding]:
     """Probe ``build_simulator``'s memo key against every config field.
 
-    For each ``ClusterCfg`` field (and each ``LifecycleCfg`` sub-field)
-    a perturbed config is built; if the engine-cache key does not
+    For each ``ClusterCfg`` field (and each ``LifecycleCfg`` /
+    ``FleetCfg`` sub-field) a perturbed config is built; if the
+    engine-cache key does not
     change, two different configs would share one compiled engine —
     the bug class the PR-6 satellite regression test locks in.
     """
     from repro.core.simulator import _cache_key
     from repro.core.taxonomy import parse_policy
+    from repro.fleet import FleetCfg
     from repro.lifecycle import LifecycleCfg
     findings: list[Finding] = []
     policy = parse_policy("E/LL/PS")
@@ -356,10 +383,23 @@ def audit_cache_key() -> list[Finding]:
             probe(base, base._replace(lifecycle=LifecycleCfg()),
                   "lifecycle")
             continue
+        if field == "fleet":
+            probe(base, base._replace(fleet=FleetCfg()), "fleet")
+            continue
         new = _perturb(value, field)
         if new is None:
             continue
         probe(base, base._replace(**{field: new}), field)
+
+    fbase = _audit_cluster(fleet=FleetCfg())
+    for field in FleetCfg._fields:
+        value = getattr(fbase.fleet, field)
+        new = _perturb(value, field)
+        if new is None:
+            continue
+        probe(fbase, fbase._replace(
+            fleet=fbase.fleet._replace(**{field: new})),
+            f"fleet.{field}")
 
     lbase = _audit_cluster(LifecycleCfg())
     for field in LifecycleCfg._fields:

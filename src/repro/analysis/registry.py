@@ -68,6 +68,8 @@ TRACED_FUNCTIONS: dict[str, tuple[str, ...]] = {
         "bin_index", "on_place", "on_advance", "on_complete",
         "on_evict", "on_reject",
     ),
+    # autoscaler decide() closures ride the engines' scan carry
+    "repro/fleet/policies.py": ("*_jax.decide",),
 }
 
 #: Engine hot-path modules: the per-arrival event loops and everything
@@ -84,6 +86,7 @@ HOT_PATH_MODULES: tuple[str, ...] = (
     "repro/lifecycle/policies.py",
     "repro/telemetry/engine.py",
     "repro/telemetry/state.py",
+    "repro/fleet/policies.py",
 )
 
 #: Files participating in the bitwise np ≡ jax ≡ pallas parity lanes.
@@ -98,12 +101,14 @@ PARITY_LANE_FILES: tuple[str, ...] = (
     "repro/kernels/*/ops.py",
     "repro/kernels/*/ref.py",
     "repro/telemetry/engine.py",
+    "repro/fleet/policies.py",
 )
 
 #: Open-registry dict names whose raw iteration inside a hot path is a
 #: registration-order hazard (``HOT003``).
 REGISTRY_NAMES: frozenset[str] = frozenset({
     "BALANCERS", "SCHEDS", "BINDINGS", "KEEPALIVES", "WORKLOADS",
+    "AUTOSCALERS",
 })
 
 

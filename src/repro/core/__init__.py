@@ -5,12 +5,13 @@ precision); all model code in this repo pins explicit dtypes, so this is
 safe process-wide.
 """
 from .cluster import ClusterCfg, PAPER_LARGE, PAPER_SMALL, PAPER_TESTBED
+from ..fleet import FleetCfg
 from ..lifecycle import LifecycleCfg
 from .taxonomy import (Binding, LoadBalance, PolicySpec, WorkerSched,
                        parse_policy, FIG2_POLICIES, EVAL_POLICIES, HERMES,
                        LATE_BINDING, E_LL_PS, E_LL_FCFS, E_LL_SRPT, E_LOC_PS,
                        E_LOC_FCFS, E_R_PS, E_R_FCFS, E_JSQ2_PS, E_RR_PS,
-                       E_HIKU_PS, E_DD_PS, ZOO_POLICIES)
+                       E_HIKU_PS, E_DD_PS, E_SWARM_PS, ZOO_POLICIES)
 from .workload import (Workload, WorkloadBatch, WORKLOADS, synth_workload,
                        validate_workload,
                        stack_workloads, replicate_workload, ms_trace,
@@ -27,12 +28,13 @@ from ..trace.catalog import TRACE_SCENARIOS
 WORKLOADS.update(TRACE_SCENARIOS)
 
 __all__ = [
-    "ClusterCfg", "LifecycleCfg", "PAPER_LARGE", "PAPER_SMALL",
+    "ClusterCfg", "FleetCfg", "LifecycleCfg", "PAPER_LARGE", "PAPER_SMALL",
     "PAPER_TESTBED",
     "Binding", "LoadBalance", "PolicySpec", "WorkerSched", "parse_policy",
     "FIG2_POLICIES", "EVAL_POLICIES", "HERMES", "LATE_BINDING", "E_LL_PS",
     "E_LL_FCFS", "E_LL_SRPT", "E_LOC_PS", "E_LOC_FCFS", "E_R_PS", "E_R_FCFS",
-    "E_JSQ2_PS", "E_RR_PS", "E_HIKU_PS", "E_DD_PS", "ZOO_POLICIES",
+    "E_JSQ2_PS", "E_RR_PS", "E_HIKU_PS", "E_DD_PS", "E_SWARM_PS",
+    "ZOO_POLICIES",
     "Workload", "WorkloadBatch", "WORKLOADS", "synth_workload",
     "validate_workload", "stack_workloads", "replicate_workload", "ms_trace",
     "ms_representative", "single_function", "multi_balanced",

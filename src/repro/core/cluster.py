@@ -3,6 +3,7 @@ from __future__ import annotations
 
 from typing import NamedTuple, Optional
 
+from repro.fleet.config import FleetCfg
 from repro.lifecycle.config import LifecycleCfg
 
 
@@ -29,6 +30,11 @@ class ClusterCfg(NamedTuple):
     # is the pre-lifecycle model, bit-for-bit: an ever-growing warm set
     # with no idle-timeout and the scalar penalty above.
     lifecycle: Optional[LifecycleCfg] = None
+    # Heterogeneous-fleet model (repro.fleet): per-worker speed/memory
+    # vectors and the autoscale control loop.  ``None`` — the default —
+    # is the pre-fleet model, bit-for-bit: every worker at unit speed
+    # and a fixed active set of all ``n_workers``.
+    fleet: Optional[FleetCfg] = None
 
     @property
     def slots(self) -> int:
@@ -38,6 +44,50 @@ class ClusterCfg(NamedTuple):
     @property
     def total_cores(self) -> int:
         return self.n_workers * self.cores
+
+    def validate(self) -> "ClusterCfg":
+        """Reject impossible configs with named errors.
+
+        Called by ``build_simulator`` / ``resolve`` so a bad cluster
+        fails at the API boundary instead of as an opaque numpy
+        broadcast error deep in the scan.  Returns ``self`` so call
+        sites can chain.
+        """
+        if int(self.n_workers) <= 0:
+            raise ValueError(
+                f"ClusterCfg.n_workers must be positive, got "
+                f"{self.n_workers}")
+        if int(self.cores) <= 0:
+            raise ValueError(
+                f"ClusterCfg.cores must be positive, got {self.cores}")
+        if int(self.capacity_factor) <= 0:
+            raise ValueError(
+                f"ClusterCfg.capacity_factor must be positive, got "
+                f"{self.capacity_factor}")
+        if self.fleet is not None:
+            W = int(self.n_workers)
+            for field in ("speed", "mem"):
+                vec = getattr(self.fleet, field)
+                if not vec:
+                    continue
+                if len(vec) != W:
+                    raise ValueError(
+                        f"FleetCfg.{field} has {len(vec)} entries for "
+                        f"{W} workers")
+                if any(not v > 0 for v in vec):
+                    raise ValueError(
+                        f"FleetCfg.{field} entries must be positive, "
+                        f"got {tuple(vec)}")
+            if not 1 <= int(self.fleet.min_workers) <= W:
+                raise ValueError(
+                    f"FleetCfg.min_workers must be in [1, n_workers="
+                    f"{W}], got {self.fleet.min_workers}")
+            # registry-validated names fail with their own named errors
+            from repro.fleet import parse_autoscale, parse_fleet_preset
+            if not self.fleet.speed:
+                parse_fleet_preset(self.fleet.preset)
+            parse_autoscale(self.fleet.autoscale)
+        return self
 
 
 # Setups used in the paper.

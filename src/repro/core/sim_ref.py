@@ -44,6 +44,13 @@ exactly):
   All lifecycle state transitions go through the shared
   :class:`repro.lifecycle.LifecycleRuntime`, which the vectorized
   engine mirrors op for op.
+* Heterogeneous fleet (``cluster.fleet`` set): every scheduler-assigned
+  rate is scaled by the worker's speed (service *work* stays nominal),
+  stateful balancers observe effective execution times, and a
+  non-``STATIC`` autoscale policy runs the same arrival-boundary
+  control loop as the scan engine: decide against the telemetry
+  slowdown-sketch window under a cooldown, mask deprovisioned workers
+  slot-full at selection, integrate provisioned time.
 * After the last arrival the cluster is drained to empty; only rejected
   invocations have NaN response.
 """
@@ -54,6 +61,7 @@ import math
 
 import numpy as np
 
+from repro.fleet import resolve_fleet
 from repro.lifecycle import LifecycleRuntime, resolve_lifecycle
 from repro.policy import resolve
 from repro.telemetry.state import (TelemetryCfg, TelemetryResult, init_np,
@@ -91,6 +99,9 @@ class SimResult:
     #: oracle twin of the scan engine's carry — integer planes bitwise
     #: np ≡ jax, float integrals to float64 accumulation order
     telemetry: TelemetryResult | None = None
+    #: provisioned core-seconds: the autoscaler's ``n_on × cores`` time
+    #: integral, or ``end_time × total_cores`` for a fixed fleet
+    prov_core_s: float = 0.0
 
 
 def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload,
@@ -125,18 +136,41 @@ def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload,
     # scan engine's carry (place / advance / complete / reject)
     tel = init_np(W) if telemetry is not None else None
     tel_cutoff = warmup_cutoff(N, telemetry) if telemetry is not None else 0
+    # heterogeneous fleet + autoscaling (None = homogeneous, bit-exact)
+    fres = resolve_fleet(cluster, backend="np")
+    fleet_on = fres is not None
+    auto_on = fleet_on and fres.auto_on
+    speeds = np.asarray(fres.speeds) if fleet_on else None
+    if auto_on:
+        if late:
+            raise ValueError(
+                f"autoscaler {fres.policy.name!r} requires early binding"
+                f" — late binding has no per-worker placement to mask")
+        if fres.policy.needs_telemetry and tel is None:
+            raise ValueError(
+                f"autoscaler {fres.policy.name!r} reads the telemetry "
+                f"slowdown sketch as its sensor; pass telemetry="
+                f"TelemetryCfg() to the simulator")
+        from repro.telemetry.sketch import N_BINS
+        auto_decide = fres.decide
+        auto_cool = float(fres.cfg.cooldown_s)
+        n_on = W                        # start fully provisioned
+        cool_until = 0.0
+        prov_time = 0.0
+        snap = np.zeros(N_BINS, dtype=np.int64)
 
     def set_rates(w: int) -> None:
         ts = tasks[w]
+        spd = float(speeds[w]) if fleet_on else 1.0
         if not ts:
             return
         if late:
             for t in ts:
-                t.rate = 1.0
+                t.rate = spd
             return
         rs = res.rates([t.remaining for t in ts], [t.seq for t in ts])
         for t, r in zip(ts, rs):
-            t.rate = r
+            t.rate = r * spd if fleet_on else r
 
     def start_task(w: int, arr_idx: int, start_service: bool) -> None:
         """Place arrival ``arr_idx`` on worker ``w`` (slot already free)."""
@@ -237,9 +271,14 @@ def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload,
                                 on_evict_np(tel)
                         n_alive -= 1
                         if lb_state is not None:
+                            # effective (wall-clock-equivalent) duration
+                            # when the fleet is heterogeneous — one f64
+                            # division, bitwise ≡ the scan engine's
+                            svc_obs = wl.service[t.arr_idx] / speeds[w] \
+                                if fleet_on else wl.service[t.arr_idx]
                             lb_state = res.on_complete(
-                                lb_state, w, t.func,
-                                float(wl.service[t.arr_idx]), n_alive)
+                                lb_state, w, t.func, float(svc_obs),
+                                n_alive)
                     else:
                         survivors.append(t)
                 tasks[w] = survivors
@@ -249,8 +288,13 @@ def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload,
                 break
 
     for i in range(N):
-        advance(float(wl.arrival[i]) - now)
-        now = float(wl.arrival[i])  # guard drift
+        t_i = float(wl.arrival[i])
+        if auto_on:
+            # provisioned-time integral over [now, t_i] at the current
+            # n_on (decisions only take effect at arrival boundaries)
+            prov_time += (t_i - now) * float(n_on)
+        advance(t_i - now)
+        now = t_i  # guard drift
         active = np.array([len(tasks[w]) for w in range(W)])
         if late:
             if active.min() < C:
@@ -261,11 +305,24 @@ def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload,
             f = int(wl.func[i])
             wcol = warm[:, f] if life is None \
                 else life.materialized_col(warm[:, f], f, now)
+            sel_active = active
+            if auto_on:
+                # autoscale decision: slowdown-sketch window since the
+                # last snapshot, gated by cooldown + non-empty window —
+                # same gating (and decide ops) as the scan engine
+                window = tel["slow_hist"] - snap
+                if t_i >= cool_until and int(window.sum()) >= 1:
+                    n_on = int(auto_decide(n_on, window))
+                    cool_until = t_i + auto_cool
+                    snap = tel["slow_hist"].copy()
+                # deprovisioned workers are masked slot-full at
+                # selection; their running tasks drain normally
+                sel_active = np.where(np.arange(W) < n_on, active, S)
             if lb_state is not None:
-                w, lb_state = res.select(lb_state, active, wcol, f,
+                w, lb_state = res.select(lb_state, sel_active, wcol, f,
                                          wl.func_home, float(wl.u_lb[i]), i)
             else:
-                w = res.select(active, wcol, f, wl.func_home,
+                w = res.select(sel_active, wcol, f, wl.func_home,
                                float(wl.u_lb[i]), i)
             if w < 0:
                 rejected[i] = True
@@ -274,9 +331,17 @@ def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload,
             else:
                 start_task(w, i, True)
 
+    t_last = now
     advance(math.inf)  # drain
+    if auto_on:
+        # drain tail: the fleet stays provisioned to the last completion
+        prov_time += (now - t_last) * float(n_on)
+        prov_core_s = prov_time * C
+    else:
+        prov_core_s = now * W * C
     return SimResult(response=response, cold=cold, rejected=rejected,
                      worker=worker_of, server_time=server_time,
                      core_time=core_time, end_time=now,
                      telemetry=None if tel is None
-                     else TelemetryResult.from_state(tel, cfg=telemetry))
+                     else TelemetryResult.from_state(tel, cfg=telemetry),
+                     prov_core_s=prov_core_s)

@@ -58,6 +58,22 @@ transition mirrors :class:`repro.lifecycle.LifecycleRuntime` op for op
 so the np ≡ jax parity contract extends to lifecycle state.  With the
 default ``lifecycle=None`` the traced program is exactly the
 pre-lifecycle one.
+
+With ``cluster.fleet`` set (:mod:`repro.fleet`), workers become
+heterogeneous: every rate the scheduler assigns is scaled by the
+worker's ``speed`` (service *work* stays nominal; fast workers drain
+it faster), cold-start penalties scale the same way, and stateful
+balancers observe *effective* (wall-clock-equivalent) execution times
+so throughput learners like ``SWARM`` can infer the speed vector
+online.  A non-``STATIC`` autoscale policy additionally threads an
+active-worker count ``n_on`` through the carry: arrivals only place on
+workers ``< n_on`` (the rest are masked slot-full at selection — the
+balancer contract is untouched), the registered ``decide`` hook
+grows/shrinks ``n_on`` against the telemetry slowdown sketch under a
+cooldown, and a provisioned-time integral accumulates the
+core-seconds the fleet actually held.  ``fleet=None`` — the default —
+python-gates all of it away (bit-for-bit golden contract, like
+``lifecycle`` and ``telemetry``).
 """
 from __future__ import annotations
 
@@ -75,6 +91,7 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 from jax import lax
 
+from repro.fleet import STATIC as _AUTO_STATIC, resolve_fleet
 from repro.lifecycle import resolve_lifecycle
 from repro.policy import default_backend, resolve
 from repro.telemetry import engine as tel_engine
@@ -108,6 +125,7 @@ class SimState(NamedTuple):
     lb: Any                 # balancer carried state (pytree; () stateless)
     life: Any               # lifecycle carried state (pytree; () disabled)
     tel: Any                # telemetry carried state (pytree; () disabled)
+    fleet: Any              # autoscaler carried state (pytree; () disabled)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -121,6 +139,9 @@ class SimOutput:
     end_time: float
     #: streaming in-engine metrics (None unless ``telemetry=`` was passed)
     telemetry: TelemetryResult | None = None
+    #: provisioned core-seconds: the autoscaler's ``n_on × cores`` time
+    #: integral, or ``end_time × total_cores`` for a fixed fleet
+    prov_core_s: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,6 +157,8 @@ class BatchSimOutput:
     end_time: np.ndarray     # [R] f64
     #: batched streaming metrics, leading axis R (None unless enabled)
     telemetry: TelemetryResult | None = None
+    #: provisioned core-seconds per replication ([R] f64)
+    prov_core_s: np.ndarray | None = None
 
     @property
     def n_reps(self) -> int:
@@ -150,7 +173,9 @@ class BatchSimOutput:
             core_time=float(self.core_time[r]),
             end_time=float(self.end_time[r]),
             telemetry=None if self.telemetry is None
-            else self.telemetry.rep(r))
+            else self.telemetry.rep(r),
+            prov_core_s=0.0 if self.prov_core_s is None
+            else float(self.prov_core_s[r]))
 
     def __getitem__(self, sl: slice) -> "BatchSimOutput":
         """A sub-batch over a slice of the replication axis."""
@@ -160,7 +185,9 @@ class BatchSimOutput:
             server_time=self.server_time[sl], core_time=self.core_time[sl],
             end_time=self.end_time[sl],
             telemetry=None if self.telemetry is None
-            else self.telemetry[sl])
+            else self.telemetry[sl],
+            prov_core_s=None if self.prov_core_s is None
+            else self.prov_core_s[sl])
 
 
 def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
@@ -211,12 +238,38 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
     if tel_on:
         tel_cutoff = warmup_cutoff(N, telemetry)
         tel_edges = tel_engine.edges_for_trace()
+    # heterogeneous fleet + autoscaling (repro.fleet).  fleet_on gates
+    # the speed scaling, auto_on the active-worker control loop; the
+    # disabled default traces the exact pre-fleet program.
+    fres = resolve_fleet(cluster, backend="jax")
+    fleet_on = fres is not None
+    auto_on = fleet_on and fres.auto_on
+    if fleet_on:
+        speed_arr = jnp.asarray(fres.speeds)          # [W] f64
+    if auto_on:
+        if late:
+            raise ValueError(
+                f"autoscaler {fres.policy.name!r} requires early binding"
+                f" — late binding has no per-worker placement to mask")
+        if fres.policy.needs_telemetry and not tel_on:
+            raise ValueError(
+                f"autoscaler {fres.policy.name!r} reads the telemetry "
+                f"slowdown sketch as its sensor; pass telemetry="
+                f"TelemetryCfg() to the simulator")
+        auto_decide = fres.decide
+        auto_cool = float(fres.cfg.cooldown_s)
 
     def rates_of(st: SimState) -> jax.Array:
         active = st.task_idx >= 0
         if late:
-            return active.astype(jnp.float64)
-        return res.rates(st.task_idx, st.remaining)
+            r = active.astype(jnp.float64)
+        else:
+            r = res.rates(st.task_idx, st.remaining)
+        if fleet_on:
+            # worker speed multiplies every scheduler-assigned rate:
+            # service *work* stays nominal, fast workers drain it faster
+            r = r * speed_arr[:, None]
+        return r
 
     def place(st: SimState, arr_idx, w, funcs, services, arrivals
               ) -> SimState:
@@ -414,9 +467,14 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
                 # zero-tau iteration each, lowest worker index first —
                 # the same order the numpy oracle applies its hooks)
                 n_after = (task_idx[wj] >= 0).sum()
-                upd = res.on_complete(lb, wj, f_j,
-                                      services[jnp.maximum(tid, 0)],
-                                      n_after)
+                svc_obs = services[jnp.maximum(tid, 0)]
+                if fleet_on:
+                    # the hook observes the *effective* execution time
+                    # on the completing worker (f64 division in both
+                    # backends — bitwise np ≡ jax), so throughput
+                    # learners see the heterogeneity
+                    svc_obs = svc_obs / speed_arr[wj]
+                upd = res.on_complete(lb, wj, f_j, svc_obs, n_after)
                 lb = jax.tree_util.tree_map(
                     lambda a, b: jnp.where(completed, a, b), upd, lb)
             st = st._replace(
@@ -433,6 +491,14 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
 
     def step(st: SimState, xs, funcs, services, arrivals, homes):
         i, t_i, f_i, u_i = xs
+        if auto_on:
+            # provisioned-time integral over [now, t_i] at the current
+            # n_on (decisions only take effect at arrival boundaries,
+            # so n_on is constant across the whole advance)
+            fl = st.fleet
+            st = st._replace(fleet=dict(fl, prov_time=(
+                fl["prov_time"]
+                + (t_i - st.now) * fl["n_on"].astype(jnp.float64))))
         st = advance(st, t_i - st.now, funcs, services, arrivals)
         st = st._replace(now=t_i)
         active = (st.task_idx >= 0).sum(axis=1).astype(jnp.int32)
@@ -456,12 +522,35 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
                 wcol = jnp.where(m, st.warm[:, f_i], 0)
             else:
                 wcol = st.warm[:, f_i]
+            sel_active = active
+            if auto_on:
+                # autoscale decision: read the slowdown-sketch window
+                # (counts since the last snapshot), decide only when the
+                # cooldown elapsed and the window is non-empty, then
+                # snapshot + re-arm — identical gating in the oracle
+                fl = st.fleet
+                window = st.tel["slow_hist"] - fl["snap"]
+                do = (t_i >= fl["cool_until"]) & (window.sum() >= 1)
+                n_new = auto_decide(fl["n_on"], window)
+                n_on = jnp.where(do, n_new, fl["n_on"]).astype(jnp.int32)
+                st = st._replace(fleet=dict(
+                    fl, n_on=n_on,
+                    cool_until=jnp.where(do, t_i + auto_cool,
+                                         fl["cool_until"]),
+                    snap=jnp.where(do, st.tel["slow_hist"], fl["snap"])))
+                # deprovisioned workers are masked slot-full at
+                # selection (the serving platform's health-mask idiom):
+                # the balancer contract is untouched, and running tasks
+                # on scaled-down workers drain normally
+                sel_active = jnp.where(
+                    jnp.arange(W, dtype=jnp.int32) < n_on, active,
+                    jnp.int32(S))
             if stateful:
-                w, lb = select(st.lb, active, wcol, f_i, homes,
+                w, lb = select(st.lb, sel_active, wcol, f_i, homes,
                                u_i, i)
                 st = st._replace(lb=lb)
             else:
-                w = select(active, wcol, f_i, homes, u_i, i)
+                w = select(sel_active, wcol, f_i, homes, u_i, i)
             st = st._replace(rejected=st.rejected.at[i].set(w < 0))
             if tel_on:
                 st = st._replace(tel=tel_engine.on_reject(st.tel, w < 0))
@@ -496,6 +585,19 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
                 "ka": ka0,
             }
         tel0 = tel_engine.init_state(W) if tel_on else ()
+        fleet0 = ()
+        if auto_on:
+            from repro.telemetry.sketch import N_BINS
+            fleet0 = {
+                # start fully provisioned; the controller scales down
+                # through troughs (min_workers floor) and back up
+                "n_on": jnp.int32(W),
+                "cool_until": jnp.float64(0.0),
+                "prov_time": jnp.float64(0.0),
+                # slowdown-sketch snapshot at the last decision; the
+                # decision window is slow_hist - snap
+                "snap": jnp.zeros((N_BINS,), dtype=jnp.int64),
+            }
         st = SimState(
             remaining=jnp.full((W, S), jnp.inf, dtype=jnp.float64),
             task_arr=jnp.zeros((W, S), dtype=jnp.float64),
@@ -509,13 +611,21 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
             rejected=jnp.zeros((N + 1,), dtype=bool),
             worker_of=jnp.full((N + 1,), -1, dtype=jnp.int32),
             server_time=jnp.float64(0.0), core_time=jnp.float64(0.0),
-            lb=lb0, life=life0, tel=tel0,
+            lb=lb0, life=life0, tel=tel0, fleet=fleet0,
         )
         xs = (jnp.arange(N, dtype=jnp.int64), arrivals, funcs, u_lb)
         st, _ = lax.scan(
             partial(step, funcs=funcs, services=services, arrivals=arrivals,
                     homes=homes), st, xs)
+        t_last = st.now
         st = advance(st, jnp.float64(_BIG_TIME), funcs, services, arrivals)
+        if auto_on:
+            # drain tail: the fleet stays provisioned until the last
+            # completion (advance stops accumulating when idle)
+            fl = st.fleet
+            st = st._replace(fleet=dict(fl, prov_time=(
+                fl["prov_time"]
+                + (st.now - t_last) * fl["n_on"].astype(jnp.float64))))
         return st
 
     return run
@@ -637,6 +747,7 @@ def _get_engine(policy: PolicySpec, cluster: ClusterCfg,
     :func:`simulate_many` surface as an ``engine.first_run`` span
     (vs ``engine.run`` for steady-state cached dispatches).
     """
+    cluster.validate()   # named errors instead of deep broadcast failures
     backend = _resolve_backend(policy, backend)
     key = _cache_key(policy, cluster, n_arrivals, n_functions, batched,
                      backend, telemetry)
@@ -688,6 +799,24 @@ def build_batch_simulator(policy: PolicySpec, cluster: ClusterCfg, *,
     return fn
 
 
+def _cluster_auto_on(cluster: ClusterCfg) -> bool:
+    """Whether this cluster runs an active autoscale control loop."""
+    fl = cluster.fleet
+    return fl is not None and \
+        str(fl.autoscale).strip().upper() != _AUTO_STATIC
+
+
+def _prov_core_s(st, cluster: ClusterCfg):
+    """Provisioned core-seconds: ∫ n_on(t)·cores dt (fig. 13 x-axis).
+
+    Without an autoscaler the active set is the whole fleet for the
+    whole run, so the integral degenerates to ``end_time × W × C``.
+    """
+    if _cluster_auto_on(cluster):
+        return np.asarray(st.fleet["prov_time"]) * cluster.cores
+    return np.asarray(st.now) * cluster.n_workers * cluster.cores
+
+
 def simulate(policy: PolicySpec, cluster: ClusterCfg, wl: Workload,
              *, backend: str = "auto",
              telemetry: TelemetryCfg | None = None) -> SimOutput:
@@ -718,6 +847,7 @@ def simulate(policy: PolicySpec, cluster: ClusterCfg, wl: Workload,
         end_time=float(st.now),
         telemetry=None if telemetry is None else TelemetryResult.from_state(
             jax.tree_util.tree_map(np.asarray, st.tel), cfg=telemetry),
+        prov_core_s=float(_prov_core_s(st, cluster)),
     )
 
 
@@ -760,4 +890,5 @@ def simulate_many(policy: PolicySpec, cluster: ClusterCfg,
         end_time=np.asarray(st.now),
         telemetry=None if telemetry is None else TelemetryResult.from_state(
             jax.tree_util.tree_map(np.asarray, st.tel), cfg=telemetry),
+        prov_core_s=np.asarray(_prov_core_s(st, cluster), dtype=np.float64),
     )

@@ -145,5 +145,8 @@ E_JSQ2_PS = PolicySpec(Binding.EARLY, "JSQ2", WorkerSched.PS)
 E_RR_PS = PolicySpec(Binding.EARLY, "RR", WorkerSched.PS)
 E_HIKU_PS = PolicySpec(Binding.EARLY, "HIKU", WorkerSched.PS)
 E_DD_PS = PolicySpec(Binding.EARLY, "DD", WorkerSched.PS)
-ZOO_POLICIES = (E_R_PS, E_RR_PS, E_JSQ2_PS, E_HIKU_PS, E_DD_PS, E_LL_PS,
-                HERMES)
+# SWARM learns per-worker slowness online (heterogeneous-fleet aware) —
+# see repro.policy.balancers and repro.fleet.
+E_SWARM_PS = PolicySpec(Binding.EARLY, "SWARM", WorkerSched.PS)
+ZOO_POLICIES = (E_R_PS, E_RR_PS, E_JSQ2_PS, E_HIKU_PS, E_DD_PS,
+                E_SWARM_PS, E_LL_PS, HERMES)

@@ -1,0 +1,68 @@
+"""repro.fleet — heterogeneous workers & latency-target autoscaling.
+
+Three planes (see ROADMAP "heterogeneous clusters" item):
+
+* **Heterogeneity** — :class:`FleetCfg` per-worker ``speed[W]`` /
+  ``mem[W]`` vectors (explicit or from the named presets ``uniform`` /
+  ``two-gen`` / ``long-tail``), embedded as ``ClusterCfg.fleet``;
+  ``None`` keeps today's homogeneous model bit-for-bit.
+* **SWARM balancing** — lives in :mod:`repro.policy.balancers` (the
+  ``SWARM`` registered balancer learns per-worker throughput online
+  and dispatches speed-aware without reading ``FleetCfg`` at all).
+* **Autoscaling** — the open :func:`register_autoscaler` registry
+  (``STATIC`` / ``TARGET_P99``) driving an active-worker mask through
+  every engine against a p99-slowdown target.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from .config import (FLEET_PRESETS, FleetCfg, STATIC, fleet_preset_names,
+                     mem_for, parse_fleet_preset, register_fleet_preset,
+                     speeds_for)
+from .registry import (AUTOSCALERS, AutoscalePolicy, ResolvedFleet,
+                       autoscaler_names, get_autoscaler, parse_autoscale,
+                       register_autoscaler, resolve_fleet,
+                       unregister_autoscaler)
+
+__all__ = [
+    "FLEET_PRESETS", "FleetCfg", "STATIC", "fleet_preset_names",
+    "mem_for", "parse_fleet_preset", "register_fleet_preset",
+    "speeds_for", "AUTOSCALERS", "AutoscalePolicy", "ResolvedFleet",
+    "autoscaler_names", "get_autoscaler", "parse_autoscale",
+    "register_autoscaler", "resolve_fleet", "unregister_autoscaler",
+    "fleet_from_flags",
+]
+
+
+def fleet_from_flags(preset: Optional[str] = None,
+                     speed: Optional[Sequence[float]] = None,
+                     autoscale: Optional[str] = None,
+                     target_p99: float = 5.0,
+                     min_workers: int = 1,
+                     cooldown_s: float = 60.0,
+                     hysteresis: float = 0.1) -> Optional[FleetCfg]:
+    """Build a :class:`FleetCfg` from CLI flags, or ``None``.
+
+    Mirrors :func:`repro.lifecycle.lifecycle_from_flags`: with every
+    fleet flag at its default the launcher keeps the exact homogeneous
+    fixed-W model (``fleet=None``), and preset / autoscale names are
+    validated against their registries up front so typos raise the
+    named ``ValueError`` instead of surfacing mid-run.  An autoscale
+    flag without an explicit preset runs on the ``uniform`` fleet
+    (autoscaling a homogeneous fleet is the common SLO scenario).
+    """
+    if preset is None and not speed and autoscale is None:
+        return None
+    kw = {}
+    if preset is not None:
+        kw["preset"] = parse_fleet_preset(preset)
+    if speed:
+        kw["speed"] = tuple(float(s) for s in speed)
+    if autoscale is not None:
+        kw["autoscale"] = parse_autoscale(autoscale)
+        kw["target_p99"] = float(target_p99)
+        kw["min_workers"] = int(min_workers)
+        kw["cooldown_s"] = float(cooldown_s)
+        kw["hysteresis"] = float(hysteresis)
+    return FleetCfg(**kw)

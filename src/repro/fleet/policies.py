@@ -1,0 +1,130 @@
+"""Built-in autoscale policies: ``STATIC`` and ``TARGET_P99``.
+
+``STATIC`` keeps the whole fleet active — the pass-through policy that
+makes a ``FleetCfg`` with default autoscale behave as "heterogeneity
+only".
+
+``TARGET_P99`` is the closed loop from the ROADMAP heterogeneity item:
+grow the active worker set when the observed p99 slowdown (read from
+the telemetry sketch window) overshoots, shrink it when the fleet is
+over-provisioned, with a hysteresis dead-band so the controller
+doesn't chatter and a cooldown (enforced by the engines) between
+decisions.  Two control choices make the configured ``target_p99`` a
+*ceiling* the pooled run-level p99 actually stays under:
+
+* the internal setpoint is ``target_p99 / 2`` — the sensor is a
+  completion-time signal read over the window since the last decision,
+  so it reports excursions only after they have already hurt the tail;
+  regulating to half the target leaves headroom for that lag;
+* growth is multiplicative (``n_on += max(1, n_on // 2)``) while
+  shrink is additive (``-1``) — a diurnal ramp out of a scaled-down
+  trough needs capacity *now*, while over-provisioning only costs
+  core-hours linearly (the MIAD asymmetry).
+
+The percentile read mirrors
+:func:`repro.telemetry.sketch.sketch_percentile` op-for-op — same
+``ceil``-rank, same ``searchsorted(cumsum, k, 'left')``, same
+geometric-midpoint value — so the np and jax controllers take
+identical integer decisions on identical windows (the parity lane
+checks this bitwise).
+"""
+# repro-lint: hot-path
+# repro-lint: parity-lane
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from .config import FleetCfg, STATIC
+from .registry import register_autoscaler
+
+
+def _static_np(cfg: FleetCfg, n_workers: int):
+    def decide(n_on, window):
+        return int(n_on)
+    return decide
+
+
+def _static_jax(cfg: FleetCfg, n_workers: int):
+    import jax.numpy as jnp
+
+    def decide(n_on, window):
+        return jnp.asarray(n_on, dtype=jnp.int32)
+    return decide
+
+
+def _p99_bounds(cfg: FleetCfg) -> tuple[float, float]:
+    """Hysteresis band edges, computed once in python so both backends
+    compare against bit-identical thresholds.
+
+    The band is centered on the internal setpoint ``target_p99 / 2``
+    (ceiling semantics — see the module docstring), not on the target
+    itself.
+    """
+    t = float(cfg.target_p99) * 0.5
+    h = float(cfg.hysteresis)
+    return t * (1.0 + h), t * (1.0 - h)
+
+
+def _target_p99_np(cfg: FleetCfg, n_workers: int):
+    from repro.telemetry.sketch import hist_edges
+    edges = hist_edges()
+    hi, lo = _p99_bounds(cfg)
+    min_w = int(cfg.min_workers)
+
+    def decide(n_on, window):
+        window = np.asarray(window, dtype=np.int64)
+        total = int(window.sum())
+        if total < 1:                  # engines gate on this too
+            return int(n_on)
+        # exact sketch_percentile op sequence (q = 99)
+        k = min(max(int(math.ceil(0.99 * total)), 1), total)
+        b = int(np.searchsorted(np.cumsum(window), k, side="left"))
+        p99 = math.sqrt(float(edges[b]) * float(edges[b + 1]))
+        # MIAD: multiplicative grow (ramp recovery), additive shrink
+        if p99 > hi:
+            n_new = int(n_on) + max(1, int(n_on) // 2)
+        elif p99 < lo:
+            n_new = int(n_on) - 1
+        else:
+            n_new = int(n_on)
+        return int(min(max(n_new, min_w), n_workers))
+    return decide
+
+
+def _target_p99_jax(cfg: FleetCfg, n_workers: int):
+    import jax.numpy as jnp
+
+    from repro.telemetry.sketch import hist_edges
+    edges = jnp.asarray(hist_edges())
+    hi, lo = _p99_bounds(cfg)
+    min_w = int(cfg.min_workers)
+
+    def decide(n_on, window):
+        window = window.astype(jnp.int64)
+        total = window.sum()
+        tot_f = total.astype(jnp.float64)
+        k = jnp.clip(jnp.ceil(0.99 * tot_f).astype(jnp.int64),
+                     jnp.int64(1), jnp.maximum(total, 1))
+        b = jnp.searchsorted(jnp.cumsum(window), k, side="left")
+        p99 = jnp.sqrt(edges[b] * edges[b + 1])
+        n_i = n_on.astype(jnp.int32)
+        # MIAD: multiplicative grow (ramp recovery), additive shrink
+        delta = jnp.where(p99 > hi, jnp.maximum(1, n_i // 2),
+                          jnp.where(p99 < lo, -1, 0))
+        scaled = jnp.clip(n_i + delta, min_w, n_workers)
+        # empty window -> no decision (engines gate on this too)
+        return jnp.where(total > 0, scaled, n_on).astype(jnp.int32)
+    return decide
+
+
+register_autoscaler(
+    STATIC, make_np=_static_np, make_jax=_static_jax,
+    needs_telemetry=False,
+    doc="fixed fleet: all W workers stay active (no control loop)")
+register_autoscaler(
+    "TARGET_P99", make_np=_target_p99_np, make_jax=_target_p99_jax,
+    doc="keep p99 slowdown under a target ceiling: telemetry-sketch "
+        "sensor, half-target setpoint, MIAD grow/shrink, hysteresis "
+        "band, engine cooldown")

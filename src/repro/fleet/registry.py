@@ -1,0 +1,210 @@
+"""Open autoscale-policy registry, mirroring :mod:`repro.lifecycle`.
+
+Capacity is the third scheduling axis: the balancer decides *where*,
+the worker scheduler decides *in what order*, and the autoscaler
+decides *how much fleet exists at all* — the closed control loop real
+providers run against latency SLOs (the ROADMAP's "millions of users
+on a finite fleet").  This module makes that axis an open registry so
+autoscalers are sweepable like balancers and keep-alive policies.
+
+**The autoscale contract.**  The engines maintain an *active-worker
+count* ``n_on`` (workers ``0..n_on-1`` accept placements; the rest are
+masked slot-full, so the balancer contract is untouched) plus a
+histogram *window* — the slowdown-sketch counts observed since the
+last decision (the PR-7 telemetry carry is the sensor).  A policy is a
+pair of backend factories::
+
+    make_np(cfg, n_workers)  -> decide
+    make_jax(cfg, n_workers) -> decide
+    decide(n_on, window) -> n_on'        # window: [N_BINS] int64
+
+``decide`` is pure: it reads the windowed sketch, compares against the
+config's target, and returns the new active count already clipped to
+``[cfg.min_workers, n_workers]``.  The engines call it only when the
+cooldown has elapsed *and* the window is non-empty, then snapshot the
+sketch and re-arm the cooldown — identical gating in the scan engine
+and the numpy oracle, so ``decide`` itself must be np ≡ jax on integer
+decisions (mirror :func:`repro.telemetry.sketch.sketch_percentile`'s
+exact op sequence when reading percentiles, as ``TARGET_P99`` does).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from .config import FleetCfg, STATIC, mem_for, speeds_for
+
+_BACKENDS = ("np", "jax")
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoscalePolicy:
+    """A registered autoscale strategy (see the module contract)."""
+
+    name: str
+    doc: str = ""
+    make_np: Optional[Callable[[FleetCfg, int], Callable]] = None
+    make_jax: Optional[Callable[[FleetCfg, int], Callable]] = None
+    #: ``True`` when ``decide`` reads the telemetry slowdown sketch —
+    #: the engines then require a ``TelemetryCfg`` (named error if
+    #: absent).  ``STATIC`` has no sensor and runs anywhere.
+    needs_telemetry: bool = True
+
+    def backends(self) -> tuple[str, ...]:
+        return tuple(b for b, fn in zip(
+            _BACKENDS, (self.make_np, self.make_jax)) if fn is not None)
+
+
+AUTOSCALERS: dict[str, AutoscalePolicy] = {}
+
+_builtin_lock = threading.Lock()
+_builtins_loaded = False
+
+
+def _load_builtins() -> None:
+    """Idempotently register the built-in policies (import side effect).
+
+    Same re-entrancy shape as the keep-alive registry: the flag is set
+    *before* the import (built-ins re-enter :func:`register_autoscaler`)
+    and reset if the import fails.
+    """
+    global _builtins_loaded
+    if _builtins_loaded:
+        return
+    with _builtin_lock:
+        if _builtins_loaded:
+            return
+        _builtins_loaded = True
+        try:
+            from . import policies  # noqa: F401  (registers on import)
+        except BaseException:
+            _builtins_loaded = False
+            raise
+
+
+def register_autoscaler(name: str, *, make_np=None, make_jax=None,
+                        needs_telemetry: bool = True, doc: str = "",
+                        overwrite: bool = False) -> AutoscalePolicy:
+    """Register an autoscale policy under ``name`` (upper-cased).
+
+    At least one of ``make_np`` / ``make_jax`` must be given; a policy
+    with both runs through every engine in the repo.  Returns the
+    :class:`AutoscalePolicy` record.
+    """
+    name = name.strip().upper()
+    if "/" in name or "*" in name or not name:
+        raise ValueError(f"invalid autoscale policy name {name!r}")
+    if make_np is None and make_jax is None:
+        raise ValueError(f"autoscaler {name!r} needs an np or jax backend")
+    # built-ins first so a collision with a built-in surfaces here
+    _load_builtins()
+    if not overwrite and name in AUTOSCALERS:
+        raise ValueError(f"autoscaler {name!r} already registered "
+                         f"(pass overwrite=True to replace)")
+    pol = AutoscalePolicy(name=name, doc=doc, make_np=make_np,
+                          make_jax=make_jax,
+                          needs_telemetry=needs_telemetry)
+    AUTOSCALERS[name] = pol
+    _engine_cache_clear()
+    return pol
+
+
+def unregister_autoscaler(name: str) -> None:
+    _load_builtins()
+    AUTOSCALERS.pop(str(name).strip().upper(), None)
+    _engine_cache_clear()
+
+
+def _engine_cache_clear() -> None:
+    # compiled simulator engines capture resolved decide closures;
+    # (re-)registration must drop them, like the policy registry does.
+    import sys
+    sim = sys.modules.get("repro.core.simulator")
+    clear = getattr(sim, "clear_engine_cache", None)
+    if clear is not None:
+        clear()
+
+
+def autoscaler_names() -> tuple[str, ...]:
+    _load_builtins()
+    return tuple(AUTOSCALERS)
+
+
+def get_autoscaler(name) -> AutoscalePolicy:
+    _load_builtins()
+    key = str(name).strip().upper()
+    try:
+        return AUTOSCALERS[key]
+    except KeyError:
+        raise ValueError(
+            f"unknown autoscale policy {key!r}; registered policies: "
+            f"{', '.join(sorted(AUTOSCALERS))}") from None
+
+
+def parse_autoscale(name: str) -> str:
+    """Validate a CLI autoscale token; returns the canonical name."""
+    return get_autoscaler(name).name
+
+
+# --------------------------------------------------------------------------
+# resolve — fleet cfg → speed vector + decide callable (engines' entry)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ResolvedFleet:
+    """A fleet config resolved against one backend and worker count.
+
+    ``speeds`` / ``mem`` are the concrete ``[W] float64`` vectors.
+    ``decide`` follows the module contract for the chosen backend;
+    ``auto_on`` is ``False`` for ``STATIC`` (no decisions, no carry —
+    the engines then apply speed scaling only).
+    """
+
+    cfg: FleetCfg
+    policy: AutoscalePolicy
+    backend: str
+    speeds: Any                        # np.ndarray [W] f64
+    mem: Any                           # np.ndarray [W] f64
+    decide: Optional[Callable]
+
+    @property
+    def auto_on(self) -> bool:
+        return self.cfg.autoscale.strip().upper() != STATIC
+
+    @property
+    def uniform(self) -> bool:
+        """True when every worker runs at exactly speed 1.0."""
+        return bool(np.all(self.speeds == 1.0))
+
+
+def resolve_fleet(cluster, *, backend: str = "np"
+                  ) -> Optional[ResolvedFleet]:
+    """Resolve ``cluster.fleet`` into the speed vector and decide hook.
+
+    Returns ``None`` when the cluster carries no fleet config (the
+    homogeneous fixed-W model) so engines can gate the whole subsystem
+    on one check.  ``backend`` is ``"np"`` or ``"jax"`` (``"pallas"``
+    select backends share the jax fleet path).
+    """
+    cfg = getattr(cluster, "fleet", None)
+    if cfg is None:
+        return None
+    _load_builtins()
+    if backend == "pallas":
+        backend = "jax"
+    if backend not in _BACKENDS:
+        raise ValueError(f"unknown fleet backend {backend!r}; "
+                         f"choose from {_BACKENDS}")
+    pol = get_autoscaler(cfg.autoscale)
+    make = pol.make_np if backend == "np" else pol.make_jax
+    if make is None:
+        raise ValueError(f"autoscaler {pol.name!r} has no {backend} "
+                         f"backend (has: {pol.backends()})")
+    W = int(cluster.n_workers)
+    rf = ResolvedFleet(cfg=cfg, policy=pol, backend=backend,
+                       speeds=speeds_for(cfg, W), mem=mem_for(cfg, W),
+                       decide=make(cfg, W))
+    return rf

@@ -20,12 +20,25 @@ per-function provider preset; both flags are validated against the
 lifecycle registry with named errors, like ``--policy`` is against the
 policy registry.
 
+Fleet & autoscaling: ``--fleet-preset`` / ``--speed`` make the worker
+pool heterogeneous (per-worker speeds from a :mod:`repro.fleet` preset
+or given explicitly), and ``--autoscale`` turns on an active-worker
+control loop (``TARGET_P99`` with ``--target-p99`` / ``--min-workers``
+/ ``--cooldown`` / ``--hysteresis``).  All names are validated against
+the fleet registries with named errors; autoscalers that read the
+telemetry sketch enable telemetry automatically.  With every fleet
+flag at its default the launcher keeps the exact homogeneous fixed-W
+model.
+
 Examples::
 
     python -m repro.launch.serve --policy E/H/PS --load 0.6 -n 5000
     python -m repro.launch.serve --workload azure-diurnal --load 0.7
     python -m repro.launch.serve --keepalive HYBRID_HIST --ttl 30 \
         --cold-start-preset aws-lambda
+    python -m repro.launch.serve --fleet-preset two-gen --policy E/SWARM/PS
+    python -m repro.launch.serve --workload azure-diurnal \
+        --autoscale TARGET_P99 --target-p99 3 --min-workers 2 --cooldown 2
     python -m repro.launch.serve \
         --trace-invocations inv.csv --trace-durations dur.csv
     python -m repro.launch.serve --backend models --requests 12
@@ -72,6 +85,26 @@ def main() -> None:
                     help="per-function cold-start latency preset from "
                          "the lifecycle registry ('scalar' keeps "
                          "--cold-start)")
+    ap.add_argument("--fleet-preset", metavar="NAME",
+                    help="per-worker speed preset from the repro.fleet "
+                         "registry (uniform, two-gen, long-tail, ...); "
+                         "omit (with no other fleet flag) for the "
+                         "homogeneous pool")
+    ap.add_argument("--speed", nargs="+", type=float, metavar="S",
+                    help="explicit per-worker speed vector (overrides "
+                         "--fleet-preset; length must equal --workers)")
+    ap.add_argument("--autoscale", metavar="NAME",
+                    help="active-worker autoscale policy from the "
+                         "repro.fleet registry (STATIC, TARGET_P99, ...)")
+    ap.add_argument("--target-p99", type=float, default=5.0,
+                    help="autoscaler p99 slowdown ceiling")
+    ap.add_argument("--min-workers", type=int, default=1,
+                    help="autoscaler floor on active workers")
+    ap.add_argument("--cooldown", type=float, default=60.0,
+                    help="seconds between autoscale decisions")
+    ap.add_argument("--hysteresis", type=float, default=0.1,
+                    help="autoscaler dead-band half-width (fraction of "
+                         "the setpoint)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--use-kernel", action="store_true",
                     help="dispatch through the balancer's batched Pallas "
@@ -118,14 +151,19 @@ def main() -> None:
         return
 
     from repro.core import (ClusterCfg, WORKLOADS, parse_policy, summarize)
+    from repro.fleet import STATIC, fleet_from_flags, get_autoscaler
     from repro.lifecycle import lifecycle_from_flags
     from repro.serving.engine import ServeCfg, ServingCluster
     # named ValueError on unknown names; a preset/budget without an
     # explicit --keepalive gets an infinite window (no surprise expiry)
     lifecycle = lifecycle_from_flags(args.keepalive, args.ttl,
                                      args.max_idle, args.cold_start_preset)
+    # same contract for the fleet axes: all defaults -> fleet=None
+    fleet = fleet_from_flags(args.fleet_preset, args.speed, args.autoscale,
+                             args.target_p99, args.min_workers,
+                             args.cooldown, args.hysteresis)
     cl = ClusterCfg(n_workers=args.workers, cores=args.cores,
-                    lifecycle=lifecycle)
+                    lifecycle=lifecycle, fleet=fleet).validate()
     if args.trace_invocations or args.trace_durations:
         if not (args.trace_invocations and args.trace_durations):
             ap.error("--trace-invocations and --trace-durations "
@@ -142,13 +180,18 @@ def main() -> None:
         wl = WORKLOADS[args.workload](cl, args.load, args.n,
                                       seed=args.seed)
         wname = args.workload
-    telemetry_on = bool(args.telemetry or args.trace_out)
+    # a sketch-reading autoscaler needs the telemetry carry regardless
+    # of whether the user asked for a printed summary
+    auto_needs_tel = (fleet is not None and
+                      get_autoscaler(fleet.autoscale).needs_telemetry)
+    telemetry_on = bool(args.telemetry or args.trace_out or auto_needs_tel)
     tel_cfg = None
     tracer = None
     if telemetry_on:
         from repro.telemetry import TelemetryCfg, configure_tracing
         tel_cfg = TelemetryCfg()
-        tracer = configure_tracing(True)
+        if args.telemetry or args.trace_out:   # span tracing stays opt-in
+            tracer = configure_tracing(True)
     cfg = ServeCfg(cluster=cl, cold_start_s=args.cold_start)
     sc = ServingCluster(cfg, parse_policy(args.policy),
                         use_kernel=args.use_kernel, telemetry=tel_cfg)
@@ -162,12 +205,20 @@ def main() -> None:
                   out.server_time, out.core_time, out.end_time)
     ka = lifecycle.keepalive if lifecycle else "legacy-inf"
     preset = lifecycle.coldstart if lifecycle else "scalar"
+    fdesc = "homogeneous" if fleet is None else \
+        f"{'explicit' if fleet.speed else fleet.preset}/{fleet.autoscale}"
     print(f"policy={args.policy} workload={wname} "
-          f"load={args.load} keepalive={ka} coldstart={preset}")
+          f"load={args.load} keepalive={ka} coldstart={preset} "
+          f"fleet={fdesc}")
     print(f"  slow p50/p99 = {s.slow_p50:.2f} / {s.slow_p99:.1f}")
     print(f"  lat  p50/p99 = {s.lat_p50:.2f}s / {s.lat_p99:.2f}s")
     print(f"  cold starts  = {100*s.cold_frac:.1f}%   "
           f"servers = {s.mean_servers:.2f}   rejected = {s.n_rejected}")
+    if fleet is not None and fleet.autoscale != STATIC:
+        print(f"  autoscale    : target p99 ≤ {fleet.target_p99:g}, "
+              f"provisioned = {out.prov_core_s:.0f} core-s "
+              f"(static fleet would be "
+              f"{out.end_time * cl.n_workers * cl.cores:.0f})")
     if out.telemetry is not None:
         t = out.telemetry.summary()
         print(f"  telemetry    : sketch slow p50/p99 = "

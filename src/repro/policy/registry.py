@@ -42,9 +42,12 @@ on every backend); the engines thread the state through the vmapped
 scan carry (:mod:`repro.core.simulator`), the numpy oracle's event loop
 (:mod:`repro.core.sim_ref`) and the serving platform
 (:mod:`repro.serving.engine`), calling ``on_complete`` once per task
-completion (``service`` is the task's oracle execution time *excluding*
-any cold-start penalty; ``n_active_after`` the worker's remaining
-active-task count).  A rejected arrival (``-1``) must return its input
+completion (``service`` is the task's *observed* execution time
+excluding any cold-start penalty — the oracle duration on a
+homogeneous cluster, the speed-scaled effective duration under a
+heterogeneous :mod:`repro.fleet` config, so throughput learners like
+``SWARM`` see real wall-clock signal; ``n_active_after`` the worker's
+remaining active-task count).  A rejected arrival (``-1``) must return its input
 state unchanged.  Examples: ``HIKU`` (pull-based ready-ring) and ``DD``
 (per-function execution-time EMAs) in :mod:`repro.policy.balancers`.
 
@@ -431,6 +434,8 @@ def resolve(policy, backend: str = "np", cluster=None) -> ResolvedPolicy:
     spec = _as_spec(policy)
     if cluster is None:
         raise ValueError("resolve() needs a cluster (cores/slots source)")
+    if hasattr(cluster, "validate"):
+        cluster.validate()   # named errors at the API boundary
     C, S = int(cluster.cores), int(cluster.slots)
     binding = get_binding(spec.binding)
     if backend == "auto":

@@ -28,6 +28,7 @@ import numpy as np
 from repro.core.cluster import ClusterCfg
 from repro.core.taxonomy import PolicySpec, HERMES
 from repro.core.workload import Workload
+from repro.fleet import resolve_fleet
 from repro.lifecycle import LifecycleRuntime, resolve_lifecycle
 from repro.policy import resolve
 from repro.telemetry.spans import get_tracer
@@ -62,7 +63,11 @@ class ServeCfg:
     health_aware: bool = False
     health_threshold: float = 0.5
     detect_after_s: float = 0.0     # failure-detector latency
-    # worker speed factors (1.0 = healthy); index → factor
+    # worker speed factors (1.0 = healthy); index → factor.  When empty
+    # and ``cluster.fleet`` is set, the fleet's per-worker speed vector
+    # (repro.fleet presets / explicit speeds) is used instead — explicit
+    # ServeCfg.speeds always wins (the straggler experiments override a
+    # single worker without redefining the fleet).
     speeds: tuple = ()
 
     def speed(self, w: int) -> float:
@@ -97,6 +102,9 @@ class ServeResult:
     #: streaming metrics (None unless the cluster was built with a
     #: TelemetryCfg) — same layout as the simulators' telemetry
     telemetry: TelemetryResult | None = None
+    #: provisioned core-seconds: the autoscaler's ``n_on × cores`` time
+    #: integral, or ``end_time × total_cores`` for a fixed fleet
+    prov_core_s: float = 0.0
 
 
 class ServingCluster:
@@ -146,6 +154,38 @@ class ServingCluster:
         tel_cutoff = warmup_cutoff(N, self.telemetry) \
             if self.telemetry is not None else 0
         tracer = get_tracer()
+        # heterogeneous fleet (repro.fleet): when ServeCfg.speeds is
+        # empty, the fleet's speed vector drives the same per-worker
+        # rate scaling the straggler model uses; a non-STATIC autoscale
+        # policy adds the simulators' arrival-boundary control loop
+        fres = resolve_fleet(cl, backend="np")
+        fleet_on = fres is not None
+        if fleet_on and not cfg.speeds:
+            fl_speeds = np.asarray(fres.speeds)
+
+            def speed(w: int) -> float:
+                return float(fl_speeds[w])
+        else:
+            speed = cfg.speed
+        auto_on = fleet_on and fres.auto_on
+        if auto_on:
+            if late:
+                raise ValueError(
+                    f"autoscaler {fres.policy.name!r} requires early "
+                    f"binding — late binding has no per-worker placement "
+                    f"to mask")
+            if fres.policy.needs_telemetry and tel is None:
+                raise ValueError(
+                    f"autoscaler {fres.policy.name!r} reads the telemetry "
+                    f"slowdown sketch as its sensor; pass telemetry="
+                    f"TelemetryCfg() to the platform")
+            from repro.telemetry.sketch import N_BINS
+            auto_decide = fres.decide
+            auto_cool = float(fres.cfg.cooldown_s)
+            n_on = W
+            cool_until = 0.0
+            prov_time = 0.0
+            snap = np.zeros(N_BINS, dtype=np.int64)
         response = np.full(N, np.nan)
         cold = np.zeros(N, dtype=bool)
         rejected = np.zeros(N, dtype=bool)
@@ -158,7 +198,7 @@ class ServingCluster:
             ts = tasks[w]
             if not ts:
                 return
-            spd = cfg.speed(w)
+            spd = speed(w)
             if late:
                 for t in ts:
                     t.rate = spd
@@ -233,14 +273,14 @@ class ServingCluster:
                 return
             active = np.array([len(tasks[w]) for w in range(W)])
             for w in range(W):
-                if cfg.speed(w) >= 1.0:
+                if speed(w) >= 1.0:
                     continue
                 for t in list(tasks[w]):
                     resident = now - t.placed_at
                     done_frac = 1.0 - t.remaining / max(t.work, EPS)
                     if resident >= cfg.redispatch_deadline_s and \
                             done_frac < cfg.redispatch_frac:
-                        key = np.array([active[x] / cfg.speed(x)
+                        key = np.array([active[x] / speed(x)
                                         if x != w else np.inf
                                         for x in range(W)])
                         tgt = int(np.argmin(key))
@@ -314,9 +354,13 @@ class ServingCluster:
                                     on_evict_np(tel)
                             n_alive -= 1
                             if lb_state is not None:
+                                # observed (speed-scaled) duration under
+                                # a heterogeneous fleet (oracle contract)
+                                svc_obs = wl.service[t.arr_idx] / speed(w) \
+                                    if fleet_on else wl.service[t.arr_idx]
                                 lb_state = res.on_complete(
-                                    lb_state, w, t.func,
-                                    float(wl.service[t.arr_idx]), n_alive)
+                                    lb_state, w, t.func, float(svc_obs),
+                                    n_alive)
                         else:
                             survivors.append(t)
                     tasks[w] = survivors
@@ -324,20 +368,40 @@ class ServingCluster:
                 if dt_left <= 0:
                     break
 
+        # the failure detector reads the *straggler* speeds (explicit
+        # ServeCfg.speeds) only — a heterogeneous fleet's slow
+        # generation is a capability, not a degradation, and must stay
+        # schedulable (the simulators have no health mask either)
         unhealthy = np.array([cfg.speed(w) < cfg.health_threshold
                               for w in range(W)]) if cfg.health_aware \
             else np.zeros(W, dtype=bool)
 
         # pre-gather warm columns when using the kernel path
         for i in range(N):
-            advance(float(wl.arrival[i]) - now)
-            now = float(wl.arrival[i])
+            t_i = float(wl.arrival[i])
+            if auto_on:
+                # provisioned-time integral over [now, t_i] at the
+                # current n_on (decisions land at arrival boundaries)
+                prov_time += (t_i - now) * float(n_on)
+            advance(t_i - now)
+            now = t_i
             active = np.array([len(tasks[w]) for w in range(W)])
             if cfg.health_aware and unhealthy.any() and \
                     now >= cfg.detect_after_s:
                 healthy_free = (~unhealthy) & (active < S)
                 if healthy_free.any():      # mask stragglers out
                     active = np.where(unhealthy, S, active)
+            if auto_on:
+                # autoscale decision against the slowdown-sketch window
+                # (same gating as the simulators), then mask
+                # deprovisioned workers slot-full — the health-mask
+                # idiom, composed after it
+                window = tel["slow_hist"] - snap
+                if t_i >= cool_until and int(window.sum()) >= 1:
+                    n_on = int(auto_decide(n_on, window))
+                    cool_until = t_i + auto_cool
+                    snap = tel["slow_hist"].copy()
+                active = np.where(np.arange(W) < n_on, active, S)
             if late:
                 if active.min() < C:
                     place(int(np.argmin(active)), i)
@@ -369,7 +433,14 @@ class ServingCluster:
             else:
                 place(w, i)
 
+        t_last = now
         advance(math.inf)
+        if auto_on:
+            # drain tail: provisioned until the last completion
+            prov_time += (now - t_last) * float(n_on)
+            prov_core_s = prov_time * C
+        else:
+            prov_core_s = now * W * C
         return ServeResult(
             response=response, cold=cold, rejected=rejected,
             worker=worker_of, redispatched=redisp,
@@ -377,4 +448,5 @@ class ServingCluster:
             n_cold=int(cold[~rejected].sum()),
             n_redispatch=int(redisp.sum()),
             telemetry=None if tel is None else TelemetryResult.from_state(
-                tel, cfg=self.telemetry))
+                tel, cfg=self.telemetry),
+            prov_core_s=prov_core_s)

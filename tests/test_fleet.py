@@ -1,0 +1,416 @@
+"""Heterogeneous-fleet subsystem: golden default regression, speed
+scaling, SWARM learning, autoscaler semantics and the registry contract.
+
+The acceptance contract of the fleet axis:
+
+* ``ClusterCfg()`` (no fleet) reproduces the pre-fleet results
+  bit-for-bit on ALL THREE engines — locked against golden values
+  captured from the seed engines;
+* a ``uniform`` fleet (every speed 1.0) is bitwise identical to the
+  homogeneous model (multiplying by 1.0 and dividing by 1.0 are exact);
+* with unequal speeds, ``simulate ≡ simulate_ref ≡ simulate_many``
+  task-by-task, including carried-state balancers and the autoscale
+  control loop;
+* the SWARM balancer actually learns the speed vector online (more
+  placements on fast workers, lower tail than speed-blind LL);
+* the autoscaler registry is open and its np/jax ``decide`` hooks take
+  identical integer decisions.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (ClusterCfg, E_DD_PS, E_LL_PS, E_SWARM_PS, FleetCfg,
+                        HERMES, LATE_BINDING, parse_policy, synth_workload)
+from repro.core.sim_ref import simulate_ref
+from repro.core.simulator import simulate, simulate_many
+from repro.fleet import (fleet_from_flags, get_autoscaler, parse_autoscale,
+                         parse_fleet_preset, register_autoscaler,
+                         resolve_fleet, speeds_for, unregister_autoscaler)
+from repro.telemetry import TelemetryCfg
+
+CLUSTER = ClusterCfg(n_workers=4, cores=3, capacity_factor=2,
+                     cold_start_penalty=0.25)
+
+
+def _wl(load=0.9, n=300, seed=7):
+    return synth_workload(CLUSTER, load, n, n_functions=5,
+                          hot_fraction=0.8, seed=seed)
+
+
+def _fleet(preset="two-gen", **kw):
+    return CLUSTER._replace(fleet=FleetCfg(preset=preset, **kw))
+
+
+def _agree(policy, cluster, wl, telemetry=None):
+    """simulate ≡ simulate_ref ≡ simulate_many, task-by-task."""
+    out = simulate(policy, cluster, wl, telemetry=telemetry)
+    ref = simulate_ref(policy, cluster, wl, telemetry=telemetry)
+    np.testing.assert_array_equal(out.worker, ref.worker)
+    np.testing.assert_array_equal(out.cold, ref.cold)
+    np.testing.assert_array_equal(out.rejected, ref.rejected)
+    np.testing.assert_allclose(
+        np.nan_to_num(out.response, nan=-1.0),
+        np.nan_to_num(ref.response, nan=-1.0), atol=1e-9)
+    np.testing.assert_allclose(out.prov_core_s, ref.prov_core_s,
+                               rtol=1e-9)
+    batch = simulate_many(policy, cluster, [wl, wl], telemetry=telemetry)
+    np.testing.assert_array_equal(
+        np.nan_to_num(batch.response[0], nan=-1.0),
+        np.nan_to_num(out.response, nan=-1.0))
+    np.testing.assert_array_equal(batch.response[0], batch.response[1])
+    return out, ref
+
+
+# --------------------------------------------------------------- golden
+
+
+# Captured from the seed engines (pre-fleet code) on _wl() above:
+# policy -> ((scan sum/cold/rej), (oracle ...), (serving ...)).
+_GOLDEN = {
+    "E/H/PS": ((1216.6925067819345, 48, 0),
+               (1216.6925067819345, 48, 0),
+               (1213.7727968717463, 46, 0)),
+    "E/LL/PS": ((1213.6759411691799, 53, 0),
+                (1213.6759411691796, 53, 0),
+                (1243.1626103184565, 53, 0)),
+    "E/DD/PS": ((1414.2908184863632, 70, 0),
+                (1414.290818486363, 70, 0),
+                (1451.5937560680638, 73, 1)),
+    "L/LL/FCFS": ((1217.1144495097842, 38, 0),
+                  (1217.1144495097842, 38, 0),
+                  (1227.9385679023862, 36, 0)),
+}
+
+
+@pytest.mark.parametrize("pname", sorted(_GOLDEN))
+def test_default_reproduces_seed_results_bit_for_bit(pname):
+    """fleet=None must not perturb any of the three engines."""
+    from repro.serving.engine import ServeCfg, ServingCluster
+    wl = _wl()
+    pol = parse_policy(pname)
+    (g_scan, g_ref, g_serve) = _GOLDEN[pname]
+    out = simulate(pol, CLUSTER, wl)
+    assert float(np.nansum(out.response)) == pytest.approx(g_scan[0],
+                                                           rel=1e-12)
+    assert (int(out.cold.sum()), int(out.rejected.sum())) == g_scan[1:]
+    ref = simulate_ref(pol, CLUSTER, wl)
+    assert float(np.nansum(ref.response)) == pytest.approx(g_ref[0],
+                                                           rel=1e-12)
+    assert (int(ref.cold.sum()), int(ref.rejected.sum())) == g_ref[1:]
+    sv = ServingCluster(ServeCfg(cluster=CLUSTER), pol).run(wl)
+    assert float(np.nansum(sv.response)) == pytest.approx(g_serve[0],
+                                                          rel=1e-12)
+    assert (int(sv.cold.sum()), int(sv.rejected.sum())) == g_serve[1:]
+    # a fixed fleet's provisioned time degenerates to end_time × W × C
+    assert out.prov_core_s == pytest.approx(
+        out.end_time * CLUSTER.n_workers * CLUSTER.cores)
+
+
+@pytest.mark.parametrize("policy", [HERMES, E_SWARM_PS],
+                         ids=lambda p: p.name)
+def test_uniform_fleet_bitwise_homogeneous(policy):
+    """speed ≡ 1.0 multiplies/divides are IEEE-exact: the uniform
+    preset must match the homogeneous model bit-for-bit everywhere."""
+    from repro.serving.engine import ServeCfg, ServingCluster
+    wl = _wl()
+    uni = _fleet("uniform")
+    base = simulate(policy, CLUSTER, wl)
+    out = simulate(policy, uni, wl)
+    np.testing.assert_array_equal(base.response, out.response)
+    np.testing.assert_array_equal(base.worker, out.worker)
+    rbase = simulate_ref(policy, CLUSTER, wl)
+    rout = simulate_ref(policy, uni, wl)
+    np.testing.assert_array_equal(rbase.response, rout.response)
+    np.testing.assert_array_equal(rbase.worker, rout.worker)
+    sbase = ServingCluster(ServeCfg(cluster=CLUSTER), policy).run(wl)
+    sout = ServingCluster(ServeCfg(cluster=uni), policy).run(wl)
+    np.testing.assert_array_equal(sbase.response, sout.response)
+    np.testing.assert_array_equal(sbase.worker, sout.worker)
+
+
+def test_heterogeneity_changes_results():
+    wl = _wl()
+    base = simulate(HERMES, CLUSTER, wl)
+    slow = simulate(HERMES, _fleet("two-gen"), wl)
+    # half the fleet at half speed strictly lengthens total response
+    assert float(np.nansum(slow.response)) > float(np.nansum(base.response))
+
+
+# ------------------------------------------------- golden engine parity
+
+
+@pytest.mark.parametrize("policy",
+                         [HERMES, E_LL_PS, E_SWARM_PS, E_DD_PS,
+                          LATE_BINDING],
+                         ids=lambda p: p.name)
+@pytest.mark.parametrize("preset", ["two-gen", "long-tail"])
+def test_golden_engine_agreement_heterogeneous(policy, preset):
+    """Vectorized scan ≡ numpy oracle ≡ batched vmap with unequal
+    speeds, for stateless and carried-state balancers and both fleet
+    presets."""
+    cl = _fleet(preset)
+    for load, seed in ((0.5, 0), (0.9, 1)):
+        _agree(policy, cl, _wl(load, 300, seed))
+
+
+def test_explicit_speed_vector():
+    """An explicit FleetCfg.speed overrides the preset and reaches the
+    engines (one crippled worker visibly changes the simulation)."""
+    wl = _wl()
+    cl = CLUSTER._replace(fleet=FleetCfg(speed=(1.0, 1.0, 1.0, 0.125)))
+    out, _ = _agree(HERMES, cl, wl)
+    base = simulate(HERMES, CLUSTER, wl)
+    assert float(np.nansum(out.response)) > float(np.nansum(base.response))
+    np.testing.assert_array_equal(
+        speeds_for(cl.fleet, 4), [1.0, 1.0, 1.0, 0.125])
+
+
+# -------------------------------------------------------- SWARM learning
+
+
+def test_swarm_learns_speed_skew():
+    """On a two-gen fleet SWARM's learned 1/speed priorities shift
+    placements toward the fast generation (workers [0, W//2) at speed
+    1.0, the rest at 0.5) without reading FleetCfg."""
+    wl = _wl(0.9, 600, 11)
+    out = simulate(E_SWARM_PS, _fleet("two-gen"), wl)
+    placed = out.worker[out.worker >= 0]
+    fast = int((placed < 2).sum())
+    slow = int((placed >= 2).sum())
+    assert fast > slow, (fast, slow)
+    # and the learned skew beats speed-blind least-loaded on the tail
+    ll = simulate(E_LL_PS, _fleet("two-gen"), wl)
+    p99 = np.nanpercentile(out.response, 99)
+    p99_ll = np.nanpercentile(ll.response, 99)
+    assert p99 <= p99_ll * 1.05, (p99, p99_ll)
+
+
+# ------------------------------------------------- autoscaler decisions
+
+
+def _window_at(value, count=100):
+    """A sketch window with all mass in the bin containing ``value``."""
+    from repro.telemetry.sketch import N_BINS, hist_edges
+    edges = hist_edges()
+    w = np.zeros(N_BINS, dtype=np.int64)
+    w[int(np.searchsorted(edges, value, side="right")) - 1] = count
+    return w
+
+
+def test_target_p99_miad_semantics():
+    """Grow multiplicatively on overshoot, shrink by one when below the
+    hysteresis band, hold inside it; clip to [min_workers, n_workers];
+    empty windows never move."""
+    cfg = FleetCfg(autoscale="TARGET_P99", target_p99=4.0,
+                   min_workers=2, hysteresis=0.1)
+    decide = get_autoscaler("TARGET_P99").make_np(cfg, 8)
+    hot = _window_at(50.0)       # p99 ~50 >> hi = 2.2
+    cold = _window_at(1.0)       # p99 ~1 << lo = 1.8
+    mid = _window_at(2.0)        # inside the band around 4.0/2
+    assert decide(4, hot) == 6           # += max(1, 4//2)
+    assert decide(1, hot) == 2           # += 1, floored at min_workers
+    assert decide(7, hot) == 8           # clipped at n_workers
+    assert decide(8, hot) == 8
+    assert decide(6, cold) == 5          # -= 1
+    assert decide(2, cold) == 2          # min_workers floor
+    assert decide(5, mid) == 5           # dead-band hold
+    assert decide(5, np.zeros_like(hot)) == 5
+
+
+def test_target_p99_np_jax_decide_parity():
+    """The np and jax controllers take identical integer decisions on
+    identical windows (the sensor mirrors sketch_percentile op-for-op)."""
+    import jax.numpy as jnp
+    from repro.telemetry.sketch import N_BINS
+    cfg = FleetCfg(autoscale="TARGET_P99", target_p99=3.0,
+                   min_workers=1, hysteresis=0.15)
+    pol = get_autoscaler("TARGET_P99")
+    d_np = pol.make_np(cfg, 6)
+    d_jax = pol.make_jax(cfg, 6)
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        w = np.zeros(N_BINS, dtype=np.int64)
+        idx = rng.integers(0, N_BINS, size=rng.integers(1, 6))
+        w[idx] = rng.integers(1, 40, size=idx.size)
+        n_on = int(rng.integers(1, 7))
+        got_np = d_np(n_on, w)
+        got_jax = int(d_jax(jnp.asarray(n_on, dtype=jnp.int32),
+                            jnp.asarray(w)))
+        assert got_np == got_jax, (n_on, got_np, got_jax)
+    # empty-window no-op in both backends
+    z = np.zeros(N_BINS, dtype=np.int64)
+    assert d_np(3, z) == 3 == int(d_jax(jnp.asarray(3, dtype=jnp.int32),
+                                        jnp.asarray(z)))
+
+
+# ------------------------------------------------- autoscaling engines
+
+
+def _auto_cluster(**kw):
+    # target 4.0 puts the shrink band (lo = 1.8) above slowdown 1.0, so
+    # the controller can actually scale down through quiet windows
+    base = dict(preset="uniform", autoscale="TARGET_P99", target_p99=4.0,
+                min_workers=1, cooldown_s=1.0)
+    base.update(kw)
+    return CLUSTER._replace(fleet=FleetCfg(**base))
+
+
+def test_autoscale_engine_agreement_and_prov_accounting():
+    wl = _wl(0.7, 300, 3)
+    cl = _auto_cluster()
+    out, ref = _agree(HERMES, cl, wl, telemetry=TelemetryCfg())
+    static_prov = out.end_time * CLUSTER.n_workers * CLUSTER.cores
+    # the controller actually scaled down somewhere: the provisioned
+    # integral is strictly inside (0, static] and matches the oracle
+    assert 0.0 < out.prov_core_s < static_prov
+    # batched runs carry the per-rep integral too
+    batch = simulate_many(HERMES, cl, [wl, wl], telemetry=TelemetryCfg())
+    assert batch.prov_core_s.shape == (2,)
+    np.testing.assert_allclose(batch.prov_core_s[0], out.prov_core_s,
+                               rtol=1e-9)
+
+
+def test_autoscale_requires_early_binding_and_telemetry():
+    wl = _wl(0.5, 100, 0)
+    cl = _auto_cluster()
+    with pytest.raises(ValueError, match="requires early binding"):
+        simulate(LATE_BINDING, cl, wl, telemetry=TelemetryCfg())
+    with pytest.raises(ValueError, match="telemetry"):
+        simulate(HERMES, cl, wl)
+    with pytest.raises(ValueError, match="requires early binding"):
+        simulate_ref(LATE_BINDING, cl, wl, telemetry=TelemetryCfg())
+    with pytest.raises(ValueError, match="telemetry"):
+        simulate_ref(HERMES, cl, wl)
+
+
+def test_register_custom_autoscaler_end_to_end():
+    """The autoscale contract is open: a fixed-step controller
+    registered in ~15 lines drives both engines in agreement."""
+    def make_np(cfg, n_workers):
+        def decide(n_on, window):
+            # shed one worker whenever anything completed in the window
+            return max(int(cfg.min_workers), int(n_on) - 1)
+        return decide
+
+    def make_jax(cfg, n_workers):
+        import jax.numpy as jnp
+
+        def decide(n_on, window):
+            n = jnp.maximum(int(cfg.min_workers),
+                            n_on.astype(jnp.int32) - 1)
+            return n.astype(jnp.int32)
+        return decide
+
+    register_autoscaler("SHED", make_np=make_np, make_jax=make_jax,
+                        doc="shed one worker per decision window")
+    try:
+        assert parse_autoscale("shed") == "SHED"
+        cl = _auto_cluster(autoscale="SHED", min_workers=2)
+        wl = _wl(0.5, 300, 2)
+        out, _ = _agree(HERMES, cl, wl, telemetry=TelemetryCfg())
+        # the fleet ended scaled down: strictly fewer provisioned
+        # core-seconds than the static envelope
+        assert out.prov_core_s < \
+            out.end_time * CLUSTER.n_workers * CLUSTER.cores
+        placed = out.worker[out.worker >= 0]
+        assert placed.max() <= 3          # never placed off-fleet
+    finally:
+        unregister_autoscaler("SHED")
+
+
+# --------------------------------------------------- registry / config
+
+
+def test_cluster_validate_named_errors():
+    wl = _wl(0.5, 50, 0)
+    with pytest.raises(ValueError, match="n_workers must be positive"):
+        ClusterCfg(n_workers=0).validate()
+    with pytest.raises(ValueError, match="cores must be positive"):
+        ClusterCfg(cores=0).validate()
+    with pytest.raises(ValueError, match="capacity_factor must be"):
+        ClusterCfg(capacity_factor=-1).validate()
+    with pytest.raises(ValueError, match="speed has 2 entries for 4"):
+        CLUSTER._replace(fleet=FleetCfg(speed=(1.0, 0.5))).validate()
+    with pytest.raises(ValueError, match="entries must be positive"):
+        CLUSTER._replace(
+            fleet=FleetCfg(speed=(1.0, 0.0, 1.0, 1.0))).validate()
+    with pytest.raises(ValueError, match="min_workers must be in"):
+        CLUSTER._replace(fleet=FleetCfg(min_workers=9)).validate()
+    with pytest.raises(ValueError, match="unknown fleet preset"):
+        CLUSTER._replace(fleet=FleetCfg(preset="turbo")).validate()
+    with pytest.raises(ValueError, match="unknown autoscale policy"):
+        CLUSTER._replace(fleet=FleetCfg(autoscale="MAGIC")).validate()
+    # the engines call validate() at their API boundary
+    bad = CLUSTER._replace(fleet=FleetCfg(speed=(1.0, 0.5)))
+    with pytest.raises(ValueError, match="speed has 2 entries"):
+        simulate(HERMES, bad, wl)
+    with pytest.raises(ValueError, match="speed has 2 entries"):
+        simulate_ref(HERMES, bad, wl)
+
+
+def test_fleet_presets_and_resolve():
+    assert parse_fleet_preset("TWO-GEN") == "two-gen"
+    np.testing.assert_array_equal(
+        speeds_for(FleetCfg(preset="uniform"), 4), np.ones(4))
+    two = speeds_for(FleetCfg(preset="two-gen"), 5)
+    np.testing.assert_array_equal(two, [1.0, 1.0, 1.0, 0.5, 0.5])
+    tail = speeds_for(FleetCfg(preset="long-tail"), 4)
+    assert tail[0] == 1.0 and np.all(np.diff(tail) < 0) and tail[-1] > 0
+    assert resolve_fleet(CLUSTER) is None
+    res = resolve_fleet(_fleet("two-gen"), backend="np")
+    assert not res.auto_on and res.speeds.shape == (4,)
+    res = resolve_fleet(_auto_cluster(), backend="jax")
+    assert res.auto_on and callable(res.decide)
+    assert get_autoscaler("STATIC").needs_telemetry is False
+    assert get_autoscaler("TARGET_P99").needs_telemetry is True
+
+
+def test_fleet_from_flags_cli_semantics():
+    """All-defaults -> None (legacy, bit-for-bit); an autoscale flag
+    without a preset runs the uniform fleet; names validated."""
+    assert fleet_from_flags() is None
+    fl = fleet_from_flags(preset="two-gen")
+    assert fl == FleetCfg(preset="two-gen")
+    fl = fleet_from_flags(speed=[1.0, 0.5])
+    assert fl.speed == (1.0, 0.5)
+    fl = fleet_from_flags(autoscale="target_p99", target_p99=3.0,
+                          min_workers=2, cooldown_s=2.0)
+    assert fl.preset == "uniform" and fl.autoscale == "TARGET_P99"
+    assert fl.target_p99 == 3.0 and fl.min_workers == 2
+    with pytest.raises(ValueError, match="unknown fleet preset"):
+        fleet_from_flags(preset="NOPE")
+    with pytest.raises(ValueError, match="unknown autoscale policy"):
+        fleet_from_flags(autoscale="NOPE")
+
+
+# --------------------------------------------------- serving platform
+
+
+def test_serving_platform_matches_oracle_under_fleet():
+    from repro.serving.engine import ServeCfg, ServingCluster
+    wl = _wl(0.7, 300, 3)
+    for cl in (_fleet("two-gen"), _fleet("long-tail")):
+        # serving's cold cost is ServeCfg.cold_start_s — align it with
+        # the oracle's cluster.cold_start_penalty for exact parity
+        cfg0 = ServeCfg(cluster=cl, cold_start_s=0.25, ctrl_latency_s=0.0)
+        sv = ServingCluster(cfg0, HERMES).run(wl)
+        rf = simulate_ref(HERMES, cl, wl)
+        np.testing.assert_array_equal(sv.worker, rf.worker)
+        np.testing.assert_array_equal(sv.cold, rf.cold)
+
+
+def test_serving_platform_autoscales():
+    from repro.serving.engine import ServeCfg, ServingCluster
+    wl = _wl(0.6, 300, 5)
+    cl = _auto_cluster()
+    cfg0 = ServeCfg(cluster=cl, cold_start_s=0.25, ctrl_latency_s=0.0)
+    sv = ServingCluster(cfg0, HERMES, telemetry=TelemetryCfg()).run(wl)
+    rf = simulate_ref(HERMES, cl, wl, telemetry=TelemetryCfg())
+    np.testing.assert_array_equal(sv.worker, rf.worker)
+    np.testing.assert_allclose(sv.prov_core_s, rf.prov_core_s, rtol=1e-9)
+    assert sv.prov_core_s < sv.end_time * CLUSTER.n_workers * CLUSTER.cores
+    # explicit ServeCfg.speeds still wins over the fleet preset
+    cfgS = ServeCfg(cluster=_fleet("two-gen"),
+                    speeds=(1.0, 1.0, 1.0, 0.25))
+    out = ServingCluster(cfgS, E_LL_PS).run(wl)
+    assert np.isfinite(out.end_time)

@@ -259,6 +259,30 @@ def test_cold_presets_deterministic_per_function():
                                   np.zeros(4))
 
 
+def test_cold_preset_latencies_golden_locked():
+    """Value-lock the CRC32-seeded preset draws: the seed path is
+    ``default_rng(crc32(name))`` with no ``hash()`` salting, so every
+    process, platform and backend must see exactly these latencies —
+    a silent reseed would quietly shift every lifecycle benchmark."""
+    golden = {
+        "aws-lambda": [0.26241618965687286, 0.4676961322876191,
+                       0.9339690225462384, 0.1162548297360505,
+                       0.14245870186250864, 0.2965521275249738],
+        "azure-functions": [0.09681418277487916, 0.7245567309094818,
+                            1.5524833470747126, 0.11443851318457184,
+                            0.4532842308332041, 0.13544235566618817],
+    }
+    for preset, want in golden.items():
+        np.testing.assert_allclose(cold_costs_for(preset, 6), want,
+                                   rtol=1e-12)
+        # a longer vector keeps the same per-function prefix draws?  No:
+        # the generator is re-seeded per call, so the prefix IS stable
+        np.testing.assert_allclose(cold_costs_for(preset, 12)[:6], want,
+                                   rtol=1e-12)
+    np.testing.assert_array_equal(cold_costs_for("openwhisk", 6),
+                                  np.full(6, 0.5))
+
+
 def test_preset_costs_charged_by_engines():
     wl = _wl(0.6, 250, 2)
     cheap = simulate(HERMES, _life(ttl_s=2.0, coldstart="paper-sim"), wl)

@@ -85,6 +85,27 @@ def test_parse_policy_errors_list_their_own_registry():
     msg = str(bad_bind.value)
     assert "registered bindings" in msg
     assert words(msg) == {"E", "L"}
+    # the fleet axes follow the same contract: each error lists exactly
+    # its own registry's names
+    from repro.fleet import (autoscaler_names, fleet_preset_names,
+                             parse_autoscale, parse_fleet_preset)
+
+    def tokens(msg, pat):
+        return set(re.findall(pat, msg.split(":", 1)[1]))
+
+    with pytest.raises(ValueError) as bad_preset:
+        parse_fleet_preset("NOPE")
+    msg = str(bad_preset.value)
+    assert "unknown fleet preset" in msg
+    assert tokens(msg, r"[a-z0-9-]+") == set(fleet_preset_names())
+    assert {"uniform", "two-gen", "long-tail"} <= \
+        tokens(msg, r"[a-z0-9-]+")
+    with pytest.raises(ValueError) as bad_auto:
+        parse_autoscale("NOPE")
+    msg = str(bad_auto.value)
+    assert "unknown autoscale policy" in msg
+    assert tokens(msg, r"[A-Z0-9_]+") == set(autoscaler_names())
+    assert {"STATIC", "TARGET_P99"} <= tokens(msg, r"[A-Z0-9_]+")
 
 
 def test_registry_names():
