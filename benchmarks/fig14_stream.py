@@ -1,0 +1,224 @@
+"""Fig. 14 (extension) — the horizon-scale streaming engine.
+
+Two lanes gating the chunked-scan engine
+(:func:`repro.core.streaming.simulate_stream`):
+
+* **equivalence lane** — chunked ≡ monolithic, *bit for bit*.  For a
+  registry-spanning set of engine stacks (every registered balancer on
+  the plain cluster, least-loaded under every keep-alive policy, a
+  speed-blind and a speed-learning balancer on a two-generation fleet,
+  and the full DD + HYBRID_HIST + two-gen + TARGET_P99 stack) the
+  chunked engine's final carry, per-arrival outputs, telemetry
+  sketches and pooled metrics are compared bitwise against the
+  monolithic scan at small N — including a chunk size that does not
+  divide the horizon.  Two stacks additionally replay the numpy
+  oracle's chunked reference (:func:`repro.core.sim_ref
+  .simulate_ref_chunks`) and compare telemetry at every segment
+  boundary, so a drift would be caught mid-run, not just at the end.
+* **horizon lane** — one full synthetic ``azure-diurnal`` day at
+  ``W ≥ 1000`` workers runs in ONE streaming call.  The kernel's
+  peak-RSS high-water mark is reset before the run and recorded after
+  (:func:`repro.telemetry.manifest.peak_rss_mb`); the REPRO-CHECK gate
+  requires completion under :data:`PEAK_MB_BUDGET`.  Memory is
+  horizon-independent — only the chunk, never ``(N,)``, is resident —
+  so the same budget holds at any day length.
+
+Every row carries ``lane`` / ``chunk`` / ``ok`` columns so
+``BENCH_report.json`` can reconstruct both gates.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (ClusterCfg, FleetCfg, LifecycleCfg, WORKLOADS,
+                        stack_workloads, synth_workload)
+from repro.core.simulator import build_batch_simulator
+from repro.core.sim_ref import simulate_ref_chunks
+from repro.core.streaming import final_states_equal, simulate_stream
+from repro.core.taxonomy import Binding, PolicySpec
+from repro.lifecycle.registry import keepalive_names
+from repro.policy import balancer_names
+from repro.telemetry import TelemetryCfg
+from repro.telemetry.manifest import peak_rss_mb, reset_peak_rss
+
+from .common import write_csv
+
+# Equivalence lane: small horizon, two replications (different load and
+# seed), chunk sizes chosen so the non-dividing tail-padding path is
+# always exercised (240 % 96 != 0).
+EQ_N = 240
+EQ_CHUNKS = (96,)          # quick tier; full adds a dividing size
+EQ_CHUNKS_FULL = (80, 96)
+EQ_CLUSTER = ClusterCfg(n_workers=4, cores=3, capacity_factor=2)
+EQ_LOADS = ((0.6, 0), (1.0, 1))    # (load, seed) per replication
+
+# Horizon lane: one synthetic Azure-schema day on a large fleet.
+HORIZON_W = 1000
+HORIZON_CLUSTER = ClusterCfg(n_workers=HORIZON_W, cores=2,
+                             capacity_factor=2)
+HORIZON_WORKLOAD = "azure-diurnal"
+HORIZON_LOAD = 0.7
+HORIZON_CHUNK = 4096
+#: Arrivals in the full-day horizon (~1/s over 24 h); quick mode runs a
+#: shortened day through the identical engine and chunk size.
+HORIZON_N = 86_400
+HORIZON_N_QUICK = 12_000
+#: Peak-RSS budget (MiB) for the full-day run — the horizon gate.
+PEAK_MB_BUDGET = 4096.0
+
+
+def equivalence_stacks():
+    """(label, policy, cluster) per audited engine stack."""
+    stacks = []
+    for bname in balancer_names():
+        pol = PolicySpec(Binding.EARLY, bname, "PS")
+        stacks.append((f"{pol.name}", pol, EQ_CLUSTER))
+    ll = PolicySpec(Binding.EARLY, "LL", "PS")
+    for ka in keepalive_names():
+        cl = EQ_CLUSTER._replace(lifecycle=LifecycleCfg(keepalive=ka))
+        stacks.append((f"{ll.name}|ka={ka}", ll, cl))
+    het = EQ_CLUSTER._replace(fleet=FleetCfg(preset="two-gen"))
+    for bname in ("LL", "SWARM"):
+        pol = PolicySpec(Binding.EARLY, bname, "PS")
+        stacks.append((f"{pol.name}|fleet", pol, het))
+    dd = PolicySpec(Binding.EARLY, "DD", "PS")
+    full = EQ_CLUSTER._replace(
+        lifecycle=LifecycleCfg(keepalive="HYBRID_HIST", ttl_s=2.0,
+                               max_idle=3, coldstart="paper-sim"),
+        fleet=FleetCfg(preset="two-gen", autoscale="TARGET_P99",
+                       min_workers=2, target_p99=4.0, cooldown_s=2.0))
+    stacks.append((f"{dd.name}|ka=HYBRID_HIST|fleet|auto", dd, full))
+    return stacks
+
+
+def _check_equivalence(policy, cluster, chunk, tel):
+    """One stack × chunk: stream vs monolithic, bitwise.  Returns
+    (ok, mismatched plane names)."""
+    import jax.numpy as jnp
+
+    wls = [synth_workload(cluster, load, EQ_N, n_functions=5, seed=seed)
+           for load, seed in EQ_LOADS]
+    wb = stack_workloads(wls)
+    run = build_batch_simulator(policy, cluster, n_arrivals=wb.n,
+                                n_functions=wb.n_functions,
+                                backend="jax", telemetry=tel)
+    mono = run(jnp.asarray(wb.arrival), jnp.asarray(wb.func),
+               jnp.asarray(wb.service), jnp.asarray(wb.u_lb),
+               jnp.asarray(wb.func_home))
+    out = simulate_stream(policy, cluster, wb, chunk_size=chunk,
+                          backend="jax", telemetry=tel,
+                          collect_outputs=True, keep_final_state=True)
+    ok, bad = final_states_equal(out.final_state, mono)
+    for name, a, b in (
+            ("rejected", out.rejected, mono.rejected[:, :wb.n]),
+            ("cold", out.cold, mono.cold[:, :wb.n]),
+            ("worker", out.worker, mono.worker_of[:, :wb.n])):
+        if not np.array_equal(np.asarray(a), np.asarray(b)):
+            ok = False
+            bad.append(f"outputs.{name}")
+    return ok, bad
+
+
+def _check_oracle_segments(policy, cluster, chunk, tel):
+    """Per-segment telemetry parity: jax chunk engine vs the numpy
+    oracle's chunked replay, at every chunk boundary."""
+    wl = synth_workload(cluster, 0.9, EQ_N, n_functions=5, seed=2)
+    _, snaps = simulate_ref_chunks(policy, cluster, wl,
+                                   chunk_size=chunk, telemetry=tel)
+    seen = []
+    simulate_stream(
+        policy, cluster, wl, chunk_size=chunk, backend="jax",
+        telemetry=tel,
+        chunk_callback=lambda c, st: seen.append(
+            {k: np.copy(np.asarray(v)[0]) for k, v in st.tel.items()}))
+    if len(seen) != len(snaps):
+        return False, [f"segments {len(seen)} != {len(snaps)}"]
+    bad = []
+    for i, (got, want) in enumerate(zip(seen, snaps)):
+        for key in ("slow_hist", "lat_hist", "n_cold", "n_warm",
+                    "n_evict", "n_reject", "decisions"):
+            if not np.array_equal(got[key], want[key]):
+                bad.append(f"seg{i}.{key}")
+        for key in ("busy_time", "depth_time", "qlen_time"):
+            if not np.allclose(got[key], want[key], atol=1e-9):
+                bad.append(f"seg{i}.{key}")
+    return (not bad, bad)
+
+
+def _equivalence_lane(chunks):
+    tel = TelemetryCfg()
+    rows = []
+    for label, policy, cluster in equivalence_stacks():
+        for chunk in chunks:
+            t0 = time.time()
+            ok, bad = _check_equivalence(policy, cluster, chunk, tel)
+            rows.append({
+                "lane": "equivalence", "stack": label, "chunk": chunk,
+                "n_arrivals": EQ_N, "n_reps": len(EQ_LOADS),
+                "ok": bool(ok), "mismatches": ";".join(bad),
+                "wall_s": round(time.time() - t0, 3)})
+    # mid-run drift guard: oracle parity at every segment boundary for
+    # a plain stack and the heaviest lifecycle stack
+    ll = PolicySpec(Binding.EARLY, "LL", "PS")
+    hyb = EQ_CLUSTER._replace(
+        lifecycle=LifecycleCfg(keepalive="HYBRID_HIST"))
+    for label, policy, cluster in (("E/LL/PS|oracle-seg", ll, EQ_CLUSTER),
+                                   ("E/LL/PS|ka=HYBRID_HIST|oracle-seg",
+                                    ll, hyb)):
+        t0 = time.time()
+        ok, bad = _check_oracle_segments(policy, cluster, chunks[0], tel)
+        rows.append({
+            "lane": "equivalence", "stack": label, "chunk": chunks[0],
+            "n_arrivals": EQ_N, "n_reps": 1, "ok": bool(ok),
+            "mismatches": ";".join(bad),
+            "wall_s": round(time.time() - t0, 3)})
+    return rows
+
+
+def _horizon_lane(quick):
+    from repro.core import E_LL_PS
+    n = HORIZON_N_QUICK if quick else HORIZON_N
+    tel = TelemetryCfg()
+    wl = WORKLOADS[HORIZON_WORKLOAD](HORIZON_CLUSTER, HORIZON_LOAD, n,
+                                     seed=1)
+    reset_peak_rss()
+    t0 = time.time()
+    out = simulate_stream(E_LL_PS, HORIZON_CLUSTER, wl,
+                          chunk_size=HORIZON_CHUNK, backend="jax",
+                          telemetry=tel)
+    wall = time.time() - t0
+    peak = peak_rss_mb()
+    done = int(out.n_done.sum())
+    ok = done > 0 and peak <= PEAK_MB_BUDGET
+    return [{
+        "lane": "horizon", "stack": "E/LL/PS", "workload":
+        HORIZON_WORKLOAD, "n_workers": HORIZON_W, "n_arrivals": n,
+        "chunk": HORIZON_CHUNK, "n_chunks": out.n_chunks,
+        "n_done": done,
+        "slow_p99": float(out.telemetry.slow_percentile(99.0)),
+        "peak_rss_mb": round(peak, 1),
+        "peak_mb_budget": PEAK_MB_BUDGET,
+        "full_day": not quick, "ok": bool(ok),
+        "wall_s": round(wall, 3)}]
+
+
+def run(quick: bool = True):
+    rows = _equivalence_lane(EQ_CHUNKS if quick else EQ_CHUNKS_FULL)
+    rows += _horizon_lane(quick)
+    # the two lanes carry different columns; pad to the union so one
+    # CSV holds both
+    cols = {k: None for r in rows for k in r}
+    write_csv("fig14_stream.csv",
+              [{k: r.get(k, "") for k in cols} for r in rows])
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        extra = (f"peak={r['peak_rss_mb']:.0f}MiB "
+                 f"n={r['n_arrivals']}" if r["lane"] == "horizon"
+                 else f"chunk={r['chunk']} {r['mismatches'] or 'bitwise'}")
+        print(f"{r['lane']:12s} {r['stack']:34s} "
+              f"{'OK ' if r['ok'] else 'BAD'} {extra}")

@@ -75,7 +75,7 @@ def main() -> None:
                    fig4_scale, fig6_slowdown, fig7_coldstarts,
                    fig8_resources, fig9_robustness, fig10_trace_replay,
                    fig11_policy_zoo, fig12_keepalive, fig13_autoscale,
-                   tab_overhead)
+                   fig14_stream, tab_overhead)
 
     print("== fig2: policy space (4x12 cores, Azure workload) ==",
           flush=True)
@@ -322,6 +322,33 @@ def main() -> None:
                  f"static fleet meeting it (target={tgt13})",
                  auto_ok, "; ".join(auto_bits))
 
+    print("== fig14: horizon-scale streaming engine ==", flush=True)
+    with tracer.span("fig14"):
+        f14 = fig14_stream.run(quick)
+    eq14 = _by(f14, lane="equivalence")
+    bad14 = [f"{r['stack']}@k{r['chunk']}: {r['mismatches']}"
+             for r in eq14 if not r["ok"]]
+    ok &= _claim("Streaming: chunked scan ≡ monolithic bit-for-bit "
+                 "(final carry, per-arrival outputs, telemetry "
+                 "sketches; per-segment vs the numpy oracle) across "
+                 f"{len(eq14)} registry stacks incl. non-dividing "
+                 "chunk sizes",
+                 not bad14,
+                 f"{len(eq14)} cells bitwise" if not bad14
+                 else "; ".join(bad14))
+    hz14 = _by(f14, lane="horizon")[0]
+    ok &= _claim("Streaming: "
+                 f"{'full' if hz14['full_day'] else 'shortened'} "
+                 f"synthetic {hz14['workload']} day "
+                 f"(N={hz14['n_arrivals']}) at W={hz14['n_workers']} "
+                 "completes in ONE run under the peak-memory budget",
+                 hz14["ok"],
+                 f"peak={hz14['peak_rss_mb']:.0f}MiB ≤ "
+                 f"{hz14['peak_mb_budget']:.0f}MiB, "
+                 f"{hz14['n_chunks']} chunks of {hz14['chunk']}, "
+                 f"{hz14['n_done']} completions, "
+                 f"wall={hz14['wall_s']:.1f}s")
+
     print("== §6.6: scheduler overhead ==", flush=True)
     with tracer.span("tab_overhead"):
         tov = tab_overhead.run(quick)
@@ -380,7 +407,8 @@ def main() -> None:
         "analysis": analysis_rows,
         "figures": {"fig2": f2, "fig3": f3, "fig4": f4, "fig6": f6,
                     "fig8": f8, "fig9": f9, "fig10": f10, "fig11": f11,
-                    "fig12": f12, "fig13": f13, "tab_overhead": tov,
+                    "fig12": f12, "fig13": f13, "fig14": f14,
+                    "tab_overhead": tov,
                     "bench_telemetry": ftel},
     }
     report_path = os.path.join(OUT_DIR, "BENCH_report.json")

@@ -28,43 +28,50 @@ from .rules import RULES
 #: AUDIT_F=3 functions, AUDIT_W=3 workers — counts are shape-dependent,
 #: keep in sync with :mod:`repro.analysis.jaxpr_audit`).
 BASELINES: dict[str, int] = {
-    "E/LOC/PS|jax": 608,
-    "E/LOC/PS|pallas": 608,
-    "E/R/PS|jax": 592,
-    "E/R/PS|pallas": 592,
-    "E/LL/PS|jax": 579,
-    "E/LL/PS|pallas": 579,
-    "E/H/PS|jax": 601,
-    "E/H/PS|pallas": 623,
-    "E/JSQ2/PS|jax": 607,
-    "E/JSQ2/PS|pallas": 607,
-    "E/RR/PS|jax": 614,
-    "E/RR/PS|pallas": 614,
-    "E/HIKU/PS|jax": 779,
-    "E/HIKU/PS|pallas": 779,
-    "E/DD/PS|jax": 695,
-    "E/DD/PS|pallas": 695,
-    "E/SWARM/PS|jax": 739,
-    "E/SWARM/PS|pallas": 739,
-    "E/LL/PS|jax|ka=NONE": 756,
-    "E/LL/PS|jax|ka=FIXED_TTL": 756,
-    "E/LL/PS|jax|ka=HYBRID_HIST": 860,
-    "L/LL/FCFS|jax": 1306,
+    "E/LOC/PS|jax": 610,
+    "E/LOC/PS|pallas": 610,
+    "E/R/PS|jax": 594,
+    "E/R/PS|pallas": 594,
+    "E/LL/PS|jax": 581,
+    "E/LL/PS|pallas": 581,
+    "E/H/PS|jax": 603,
+    "E/H/PS|pallas": 625,
+    "E/JSQ2/PS|jax": 609,
+    "E/JSQ2/PS|pallas": 609,
+    "E/RR/PS|jax": 616,
+    "E/RR/PS|pallas": 616,
+    "E/HIKU/PS|jax": 769,
+    "E/HIKU/PS|pallas": 769,
+    "E/DD/PS|jax": 685,
+    "E/DD/PS|pallas": 685,
+    "E/SWARM/PS|jax": 729,
+    "E/SWARM/PS|pallas": 729,
+    "E/LL/PS|jax|ka=NONE": 758,
+    "E/LL/PS|jax|ka=FIXED_TTL": 758,
+    "E/LL/PS|jax|ka=HYBRID_HIST": 862,
+    "L/LL/FCFS|jax": 1308,
     # telemetry-on lanes (streaming histogram/counter carry in the
     # scan); the telemetry-off baselines above are unchanged — the
     # disabled path traces the identical pre-telemetry program
-    "E/LL/PS|jax|tel": 819,
-    "E/H/PS|jax|tel": 841,
-    "E/HIKU/PS|jax|tel": 1019,
-    "E/H/PS|pallas|tel": 863,
-    "E/LL/PS|jax|ka=FIXED_TTL|tel": 996,
-    "L/LL/FCFS|jax|tel": 1596,
+    "E/LL/PS|jax|tel": 791,
+    "E/H/PS|jax|tel": 813,
+    "E/HIKU/PS|jax|tel": 979,
+    "E/H/PS|pallas|tel": 835,
+    "E/LL/PS|jax|ka=FIXED_TTL|tel": 968,
+    "L/LL/FCFS|jax|tel": 1568,
     # heterogeneous-fleet lanes: the speed-vector divide costs ~4 eqns
     # on a speed-blind engine; SWARM's learned-state carry and the
     # TARGET_P99 autoscaler+telemetry lane are budgeted on top
-    "E/LL/PS|jax|fleet": 583,
-    "E/SWARM/PS|jax|fleet": 755,
-    "E/LL/PS|jax|fleet|auto|tel": 919,
+    "E/LL/PS|jax|fleet": 585,
+    "E/SWARM/PS|jax|fleet": 745,
+    "E/LL/PS|jax|fleet|auto|tel": 891,
+    # streaming chunk-engine lanes: one segment's scan traced on the
+    # engine's own init carry (slot mirrors + exact counters, no (N,)
+    # output planes — hence smaller than the monolithic twins)
+    "E/LL/PS|jax|chunk": 388,
+    "E/LL/PS|jax|tel|chunk": 499,
+    "E/LL/PS|jax|ka=HYBRID_HIST|tel|chunk": 690,
+    "E/LL/PS|jax|fleet|auto|tel|chunk": 592,
 }
 
 #: Headroom multiplier over the measured baseline.

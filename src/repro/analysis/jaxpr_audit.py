@@ -223,7 +223,7 @@ def _audit_cluster(lifecycle=None, fleet=None):
 
 def iter_engine_specs(*, balancers: Optional[Iterable[str]] = None,
                       sched: str = "PS") -> list[tuple]:
-    """(label, policy, cluster, backend, telemetry) per audited engine.
+    """(label, policy, cluster, backend, telemetry, chunk) per engine.
 
     Covers every (balancer × traceable backend) pair in the registry —
     backends are ``jax`` plus ``pallas`` (balancers without a kernel
@@ -237,7 +237,10 @@ def iter_engine_specs(*, balancers: Optional[Iterable[str]] = None,
     plus ``|fleet`` lanes (heterogeneous two-gen speeds under the
     speed-blind LL and the speed-learning SWARM balancers, and one
     ``|fleet|auto|tel`` lane with the ``TARGET_P99`` autoscaler carry
-    riding the telemetry sketch).
+    riding the telemetry sketch), plus ``|chunk`` lanes (the streaming
+    chunk engine's per-segment scan — same arrival/completion bodies
+    with the slot mirrors and exact-counter carry; ``chunk`` is the
+    trailing tuple element, ``None`` for monolithic lanes).
     """
     from repro.core.taxonomy import Binding, PolicySpec
     from repro.fleet import FleetCfg
@@ -288,7 +291,19 @@ def iter_engine_specs(*, balancers: Optional[Iterable[str]] = None,
             min_workers=1, cooldown_s=1.0))
         specs.append((f"{pol.name}|jax|fleet|auto|tel", pol, auto,
                       "jax", tel))
-    return specs
+        # streaming chunk-engine lanes: plain, telemetry-on, the
+        # heaviest lifecycle carry, and the full autoscaler stack —
+        # budgeted under their own ``|chunk`` labels (the chunk scan
+        # adds slot mirrors + exact counters to the carry)
+        kacl = _audit_cluster(LifecycleCfg(keepalive="HYBRID_HIST"))
+        for lane, cl2, t2 in ((f"{pol.name}|jax|chunk", plain, None),
+                              (f"{pol.name}|jax|tel|chunk", plain, tel),
+                              (f"{pol.name}|jax|ka=HYBRID_HIST|tel"
+                               f"|chunk", kacl, tel),
+                              (f"{pol.name}|jax|fleet|auto|tel|chunk",
+                               auto, tel)):
+            specs.append((lane, pol, cl2, "jax", t2, AUDIT_N))
+    return [s if len(s) == 6 else s + (None,) for s in specs]
 
 
 def trace_engine(policy, cluster, backend: str = "jax",
@@ -307,15 +322,47 @@ def trace_engine(policy, cluster, backend: str = "jax",
     return jax.make_jaxpr(run)(f64, i64, f64, f64, homes)
 
 
+def trace_stream_engine(policy, cluster, backend: str = "jax",
+                        chunk: int = AUDIT_N,
+                        n_functions: int = AUDIT_F, telemetry=None):
+    """``jax.make_jaxpr`` of the streaming chunk scan (one segment).
+
+    The carry avals come from the engine's own ``init`` (leading rep
+    axis stripped), so the traced program is exactly what one
+    ``step_fn`` dispatch of :func:`repro.core.streaming
+    .simulate_stream` compiles per replication.
+    """
+    jax = _jax()
+    import jax.numpy as jnp
+    from repro.core.simulator import _build_engine
+    init, run_chunk, _ = _build_engine(
+        policy, cluster, int(chunk), n_functions, backend,
+        telemetry=telemetry, stream=True)
+    st = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), init(1, 0))
+    k, F = int(chunk), n_functions
+    f64 = jax.ShapeDtypeStruct((k,), jnp.float64)
+    i64 = jax.ShapeDtypeStruct((k,), jnp.int64)
+    valid = jax.ShapeDtypeStruct((k,), jnp.bool_)
+    homes = jax.ShapeDtypeStruct((F,), jnp.int64)
+    return jax.make_jaxpr(run_chunk)(st, i64, valid, f64, i64, f64,
+                                     f64, homes)
+
+
 def audit_engines(*, balancers: Optional[Iterable[str]] = None
                   ) -> tuple[list[JaxprStats], list[Finding]]:
     """Trace + audit every engine spec; returns (stats, findings)."""
     all_stats: list[JaxprStats] = []
     findings: list[Finding] = []
-    for label, policy, cluster, backend, telemetry in iter_engine_specs(
-            balancers=balancers):
-        closed = trace_engine(policy, cluster, backend,
-                              telemetry=telemetry)
+    for label, policy, cluster, backend, telemetry, chunk in \
+            iter_engine_specs(balancers=balancers):
+        if chunk is not None:
+            closed = trace_stream_engine(policy, cluster, backend,
+                                         chunk=chunk,
+                                         telemetry=telemetry)
+        else:
+            closed = trace_engine(policy, cluster, backend,
+                                  telemetry=telemetry)
         stats, fs = audit_jaxpr(closed, label=label, allow_64=True)
         all_stats.append(stats)
         findings.extend(fs)
@@ -433,6 +480,23 @@ def audit_cache_key() -> list[Finding]:
             continue
         probe_tel(tbase, tbase._replace(**{field: new}),
                   f"telemetry.{field}")
+
+    # the chunk size is its own key component: a monolithic engine and
+    # a chunked one (and two different chunk sizes) must never share a
+    # compiled program
+    def probe_chunk(c0, c1, field: str):
+        k0 = _cache_key(policy, base, AUDIT_N, AUDIT_F, True, "jax",
+                        None, c0)
+        k1 = _cache_key(policy, base, AUDIT_N, AUDIT_F, True, "jax",
+                        None, c1)
+        if k0 == k1:
+            findings.append(Finding(
+                path=f"<cache-key:{field}>", line=0, rule="JXP005",
+                message=f"configs differing in '{field}' share an "
+                        f"engine cache key", hint=RULES["JXP005"].hint))
+
+    probe_chunk(None, AUDIT_N, "chunk")
+    probe_chunk(AUDIT_N, 2 * AUDIT_N, "chunk.size")
     return findings
 
 

@@ -73,7 +73,7 @@ class ClusterCfg(NamedTuple):
                 if len(vec) != W:
                     raise ValueError(
                         f"FleetCfg.{field} has {len(vec)} entries for "
-                        f"{W} workers")
+                        f"n_workers={W}, got {tuple(vec)}")
                 if any(not v > 0 for v in vec):
                     raise ValueError(
                         f"FleetCfg.{field} entries must be positive, "

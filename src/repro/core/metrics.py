@@ -12,6 +12,13 @@ Two altitudes:
   a pooled summary over the combined task population, and
   across-replication mean ± 95 % confidence intervals for every scalar
   metric (Student-t for small R).
+
+Both operate on materialized per-task arrays.  For horizons where those
+arrays are the memory bottleneck, the streaming engine
+(:mod:`repro.core.streaming`) skips them entirely and accumulates the
+same metrics online — exact counters for means/rates plus telemetry
+histogram sketches (:class:`repro.telemetry.TelemetryResult`) for
+percentiles.
 """
 from __future__ import annotations
 

@@ -105,7 +105,18 @@ class SimResult:
 
 
 def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload,
-                 *, telemetry: TelemetryCfg | None = None) -> SimResult:
+                 *, telemetry: TelemetryCfg | None = None,
+                 chunk_size: int | None = None,
+                 chunk_hook=None) -> SimResult:
+    """Pure-numpy oracle event loop (the semantic contract).
+
+    ``chunk_size``/``chunk_hook`` replay the streaming engine's segment
+    boundaries: after every ``chunk_size``-th arrival has been
+    processed (advance + placement, before the next arrival), the hook
+    is called as ``chunk_hook(chunk_idx, tel_snapshot, now)`` with a
+    deep copy of the telemetry plane — the per-segment parity probe
+    for :func:`repro.core.streaming.simulate_stream`.
+    """
     W, C, S = cluster.n_workers, cluster.cores, cluster.slots
     F = wl.n_functions
     N = wl.n
@@ -330,6 +341,14 @@ def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload,
                     on_reject_np(tel)
             else:
                 start_task(w, i, True)
+        if chunk_hook is not None and chunk_size and \
+                ((i + 1) % chunk_size == 0 or i + 1 == N):
+            # the streaming engine's chunk boundary: the last arrival
+            # of the segment has been placed, nothing else has run
+            chunk_hook(i // chunk_size,
+                       None if tel is None
+                       else {k: np.copy(v) for k, v in tel.items()},
+                       now)
 
     t_last = now
     advance(math.inf)  # drain
@@ -345,3 +364,25 @@ def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload,
                      telemetry=None if tel is None
                      else TelemetryResult.from_state(tel, cfg=telemetry),
                      prov_core_s=prov_core_s)
+
+
+def simulate_ref_chunks(policy: PolicySpec, cluster: ClusterCfg,
+                        wl: Workload, *, chunk_size: int,
+                        telemetry: TelemetryCfg | None = None
+                        ) -> tuple[SimResult, list[dict | None]]:
+    """Oracle replay of the streaming engine's segment boundaries.
+
+    Runs :func:`simulate_ref` once, snapshotting the telemetry plane at
+    every chunk boundary (after the segment's last arrival has been
+    placed).  Returns ``(result, snapshots)`` — one snapshot per chunk,
+    each a deep-copied telemetry dict (or None with telemetry off).
+    The integer histogram/counter planes are bitwise-comparable to the
+    jax engine's carry at the same boundary, so a chunked jax run and
+    this replay agreeing *per segment* is the streaming parity gate.
+    """
+    snaps: list[dict | None] = []
+    res = simulate_ref(
+        policy, cluster, wl, telemetry=telemetry,
+        chunk_size=int(chunk_size),
+        chunk_hook=lambda c, tel_snap, now: snaps.append(tel_snap))
+    return res, snaps

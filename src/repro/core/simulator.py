@@ -25,12 +25,16 @@ ships a kernel, so ``simulate_many(HERMES, ...)`` shares one kernel
 dispatch across all stacked replications per arrival (the replication
 axis becomes the kernel batch under ``vmap``).
 
-Two entry points share the engine: :func:`simulate` runs one workload;
+Three entry points share the engine: :func:`simulate` runs one workload;
 :func:`simulate_many` runs ``R`` stacked replications (seeds / arrival-rate
 scales with a shared ``(N, F)`` shape) through a single :func:`jax.vmap`-ed
-program.  Compiled engines are memoized process-wide on
-``(policy, cluster, N, F)`` (see :func:`build_simulator`), so policy × load
-sweeps compile each engine exactly once.
+program; :func:`repro.core.streaming.simulate_stream` feeds the same
+arrival/placement bodies chunk by chunk for horizons too long to scan
+monolithically (bit-equal by construction — see that module).  Compiled
+engines are memoized process-wide on ``(policy, cluster, N, F, batched,
+backend, telemetry, chunk)`` (see :func:`_cache_key`; streaming keys
+carry the chunk size where monolithic ones carry the horizon), so
+policy × load sweeps compile each engine exactly once.
 
 All event times are float64 (the simulator enables x64; model code in this
 repo always pins explicit dtypes so this is safe process-wide).
@@ -126,6 +130,16 @@ class SimState(NamedTuple):
     life: Any               # lifecycle carried state (pytree; () disabled)
     tel: Any                # telemetry carried state (pytree; () disabled)
     fleet: Any              # autoscaler carried state (pytree; () disabled)
+    # Streaming-engine planes (repro.core.streaming).  () in the
+    # monolithic engine — empty pytree nodes, so the monolithic carry
+    # structure (and traced program) is unchanged.  In stream mode the
+    # (N,)-sized planes above (resp/cold/rejected/worker_of/q) are ()
+    # instead, and completions read the occupant's function/service
+    # from these per-slot mirrors so a chunk never needs to gather from
+    # arrivals that entered the system in an earlier chunk.
+    task_fn: Any = ()       # [W, S] i32: occupant's function id
+    task_svc: Any = ()      # [W, S] f64: occupant's nominal service
+    stream: Any = ()        # exact online counters dict (see streaming)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -193,7 +207,8 @@ class BatchSimOutput:
 def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
                   n_arrivals: int, n_functions: int,
                   backend: str = "jax",
-                  telemetry: TelemetryCfg | None = None):
+                  telemetry: TelemetryCfg | None = None,
+                  stream: bool = False):
     """Build the raw (un-jitted) scan engine for (policy, cluster, N, F).
 
     ``backend`` selects how worker selection dispatches (``"jax"`` or
@@ -209,6 +224,31 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
     ``tel_on`` python-gates every update exactly like ``life_on``, so
     the default ``telemetry=None`` traces the bit-identical
     pre-telemetry program (golden contract).
+
+    ``stream=True`` builds the *chunk engine* used by
+    :func:`repro.core.streaming.simulate_stream`: ``n_arrivals`` is the
+    fixed chunk length (not the horizon), and instead of ``run`` the
+    builder returns ``(init, run_chunk, run_drain)``:
+
+    * ``init(n_reps, cutoff)`` — the initial batched carry (every leaf
+      gains a leading ``R`` axis; ``cutoff`` is the global warmup
+      index, carried so the compiled program is horizon-independent);
+    * ``run_chunk(st, gids, valid, arrivals, funcs, services, u_lb,
+      homes) -> (st, ys)`` — one compiled scan over a chunk of
+      arrivals; ``gids`` are global arrival indices, ``valid`` masks
+      tail padding (invalid steps are identity on the carry), ``ys``
+      are the per-arrival ``(rejected, cold, worker)`` outputs;
+    * ``run_drain(st) -> st`` — the end-of-horizon completion drain
+      (the monolithic engine's post-scan tail).
+
+    The stream carry holds no ``(N,)``-sized plane: per-arrival outputs
+    leave through ``ys``, responses reach metrics only through the
+    telemetry sketches and the exact online counters in
+    ``SimState.stream``, and completions read the occupant's
+    function/service from the ``task_fn``/``task_svc`` slot mirrors.
+    Every op a chunk step executes on the carry is the same op the
+    monolithic scan executes at that arrival, so the handoff is
+    bit-exact (the REPRO-CHECK contract gated by ``benchmarks``).
     """
     W, C, S = cluster.n_workers, cluster.cores, cluster.slots
     F = n_functions
@@ -216,6 +256,11 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
     Q = N  # late-binding controller queue can hold every arrival
     res = resolve(policy, backend=backend, cluster=cluster)
     late = res.late
+    if stream and late:
+        raise ValueError(
+            f"streaming engine requires early binding — policy "
+            f"{policy!r} uses late binding, whose controller queue "
+            f"scales with the horizon; run it through simulate_many")
     penalty = float(cluster.cold_start_penalty)
     select = res.select        # None for late binding
     # carried-state balancers (init_state registered): select threads a
@@ -236,8 +281,11 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
     # at trace time — telemetry=None traces the pre-telemetry program.
     tel_on = telemetry is not None
     if tel_on:
-        tel_cutoff = warmup_cutoff(N, telemetry)
         tel_edges = tel_engine.edges_for_trace()
+        if not stream:
+            tel_cutoff = warmup_cutoff(N, telemetry)
+        # stream mode: N is the chunk length, not the horizon — the
+        # global warmup index rides in the carry (SimState.stream)
     # heterogeneous fleet + autoscaling (repro.fleet).  fleet_on gates
     # the speed scaling, auto_on the active-worker control loop; the
     # disabled default traces the exact pre-fleet program.
@@ -271,10 +319,14 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
             r = r * speed_arr[:, None]
         return r
 
-    def place(st: SimState, arr_idx, w, funcs, services, arrivals
-              ) -> SimState:
-        """Place arrival ``arr_idx`` on worker ``w`` (must be valid)."""
-        f = funcs[arr_idx]
+    def place(st: SimState, tid, w, f, svc_nom, t_arr):
+        """Place arrival ``tid`` (fn ``f``, nominal service ``svc_nom``,
+        arrival time ``t_arr``) on worker ``w`` (must be valid).
+
+        Returns the new state; in stream mode ``(state, is_cold)`` —
+        the cold flag leaves through the scan ``ys`` instead of the
+        dropped ``(N,)`` cold plane.
+        """
         active_w = (st.task_idx[w] >= 0).sum()
         life = st.life
         if life_on:
@@ -317,22 +369,31 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
         warm = st.warm.at[w, f].add(jnp.where(is_cold, 0, -1))
         warm = warm.at[w, victim].add(jnp.where(need_evict, -1, 0))
         slot = jnp.argmax(st.task_idx[w] < 0)
-        svc = services[arr_idx] + jnp.where(is_cold, pen_f, 0.0)
+        svc = svc_nom + jnp.where(is_cold, pen_f, 0.0)
         tel = st.tel
         if tel_on:
             # one placement record per accepted arrival (rejections are
             # counted in step; place is never reached for them)
             tel = tel_engine.on_place(tel, w, is_cold, need_evict)
-        return st._replace(
+        st = st._replace(
             remaining=st.remaining.at[w, slot].set(svc),
-            task_arr=st.task_arr.at[w, slot].set(arrivals[arr_idx]),
-            task_idx=st.task_idx.at[w, slot].set(arr_idx.astype(jnp.int32)),
+            task_arr=st.task_arr.at[w, slot].set(t_arr),
+            task_idx=st.task_idx.at[w, slot].set(tid.astype(jnp.int32)),
             warm=warm,
-            cold=st.cold.at[arr_idx].set(is_cold),
-            worker_of=st.worker_of.at[arr_idx].set(w.astype(jnp.int32)),
             life=life,
             tel=tel,
         )
+        if stream:
+            # per-slot mirrors let the completion drain observe the
+            # task's function/service without gathering from the (N,)
+            # inputs of an earlier chunk
+            st = st._replace(
+                task_fn=st.task_fn.at[w, slot].set(f.astype(jnp.int32)),
+                task_svc=st.task_svc.at[w, slot].set(svc_nom))
+            return st, is_cold
+        return st._replace(
+            cold=st.cold.at[tid].set(is_cold),
+            worker_of=st.worker_of.at[tid].set(w.astype(jnp.int32)))
 
     def pop_all(st: SimState, funcs, services, arrivals) -> SimState:
         """Dispatch queued invocations while any worker has a free core."""
@@ -344,7 +405,8 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
             active = (st.task_idx >= 0).sum(axis=1)
             w = jnp.argmin(active)
             arr_idx = st.q[st.q_head % Q]
-            st = place(st, arr_idx, w, funcs, services, arrivals)
+            st = place(st, arr_idx, w, funcs[arr_idx],
+                       services[arr_idx], arrivals[arr_idx])
             return st._replace(q_head=st.q_head + 1)
 
         return lax.while_loop(cond, body, st)
@@ -408,17 +470,28 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
             tid = st.task_idx[wj, sj]
             completed = (tmin <= dt_left) | \
                 ((tid >= 0) & (st.remaining[wj, sj] <= EPS))
-            resp = st.resp.at[jnp.where(completed, tid, N)].set(
-                jnp.where(completed, now - st.task_arr[wj, sj], 0.0))
+            resp_val = now - st.task_arr[wj, sj]
+            if stream:
+                # the (N,)-input gathers of the monolithic path are
+                # replaced by the per-slot mirrors written at placement
+                # — same bits, so every downstream FP op is identical
+                svc_nom = st.task_svc[wj, sj]
+                f_j = st.task_fn[wj, sj]
+                cutoff_op = st.stream["cutoff"]
+                resp = st.resp
+            else:
+                svc_nom = services[jnp.maximum(tid, 0)]
+                f_j = funcs[jnp.maximum(tid, 0)]
+                cutoff_op = tel_cutoff if tel_on else None
+                resp = st.resp.at[jnp.where(completed, tid, N)].set(
+                    jnp.where(completed, resp_val, 0.0))
             if tel_on:
                 # histogram scatter for the (masked) completion; warmup
                 # tasks are dropped inside on_complete to match
                 # summarize's post-warmup population
                 tel = tel_engine.on_complete(
-                    tel, now - st.task_arr[wj, sj],
-                    services[jnp.maximum(tid, 0)], tid, completed,
-                    tel_cutoff, tel_edges)
-            f_j = funcs[jnp.maximum(tid, 0)]
+                    tel, resp_val, svc_nom, tid, completed,
+                    cutoff_op, tel_edges)
             w_pad = jnp.where(completed, wj, 0)
             f_pad = jnp.where(completed, f_j, F)
             life = st.life
@@ -467,7 +540,7 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
                 # zero-tau iteration each, lowest worker index first —
                 # the same order the numpy oracle applies its hooks)
                 n_after = (task_idx[wj] >= 0).sum()
-                svc_obs = services[jnp.maximum(tid, 0)]
+                svc_obs = svc_nom
                 if fleet_on:
                     # the hook observes the *effective* execution time
                     # on the completing worker (f64 division in both
@@ -482,6 +555,21 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
                 warm=warm, now=now, resp=resp,
                 server_time=server_time, core_time=core_time, lb=lb,
                 life=life, tel=tel)
+            if stream:
+                # exact online counters: the long path never holds a
+                # per-task slowdown array, but the mean response /
+                # slowdown over the post-warmup population stays exact
+                sc = st.stream
+                rec = completed & (tid >= sc["cutoff"])
+                slow_v = resp_val / jnp.maximum(svc_nom, 1e-12)
+                st = st._replace(stream=dict(
+                    sc,
+                    n_done=sc["n_done"] + completed.astype(jnp.int64),
+                    n_obs=sc["n_obs"] + rec.astype(jnp.int64),
+                    resp_sum=sc["resp_sum"]
+                    + jnp.where(rec, resp_val, 0.0),
+                    slow_sum=sc["slow_sum"]
+                    + jnp.where(rec, slow_v, 0.0)))
             return st, dt_left - tau
 
         st, _ = lax.while_loop(cond, body, (st, dt))
@@ -489,8 +577,13 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
             st = pop_all(st, funcs, services, arrivals)
         return st
 
-    def step(st: SimState, xs, funcs, services, arrivals, homes):
-        i, t_i, f_i, u_i = xs
+    def early_arrival(st: SimState, tid, t_i, f_i, u_i, svc_i,
+                      funcs, services, arrivals, homes):
+        """Advance to ``t_i`` and run the early-binding select/place for
+        arrival ``tid`` — the one shared body of the monolithic and
+        stream steps, so chunked ≡ monolithic holds by construction.
+        Returns ``(st, w, is_cold)``.
+        """
         if auto_on:
             # provisioned-time integral over [now, t_i] at the current
             # n_on (decisions only take effect at arrival boundaries,
@@ -502,65 +595,110 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
         st = advance(st, t_i - st.now, funcs, services, arrivals)
         st = st._replace(now=t_i)
         active = (st.task_idx >= 0).sum(axis=1).astype(jnp.int32)
-        if late:
-            def do_place(st):
-                return place(st, i, jnp.argmin(active), funcs, services,
-                             arrivals)
-            def do_queue(st):
-                return st._replace(q=st.q.at[st.q_tail % Q].set(
-                    i.astype(jnp.int32)), q_tail=st.q_tail + 1)
-            st = lax.cond(active.min() < C, do_place, do_queue, st)
+        if life_on:
+            # selection sees the materialized warm column (pools in
+            # their pre-warm phase or past their window are
+            # invisible) — mirrors LifecycleRuntime.materialized_col
+            lu = st.life["idle_since"]
+            pre, keep = st.life["pre"], st.life["keep"]
+            ages = st.now - lu[:, f_i]
+            m = (ages >= pre[f_i]) & (ages <= pre[f_i] + keep[f_i])
+            wcol = jnp.where(m, st.warm[:, f_i], 0)
         else:
-            if life_on:
-                # selection sees the materialized warm column (pools in
-                # their pre-warm phase or past their window are
-                # invisible) — mirrors LifecycleRuntime.materialized_col
-                lu = st.life["idle_since"]
-                pre, keep = st.life["pre"], st.life["keep"]
-                ages = st.now - lu[:, f_i]
-                m = (ages >= pre[f_i]) & (ages <= pre[f_i] + keep[f_i])
-                wcol = jnp.where(m, st.warm[:, f_i], 0)
-            else:
-                wcol = st.warm[:, f_i]
-            sel_active = active
-            if auto_on:
-                # autoscale decision: read the slowdown-sketch window
-                # (counts since the last snapshot), decide only when the
-                # cooldown elapsed and the window is non-empty, then
-                # snapshot + re-arm — identical gating in the oracle
-                fl = st.fleet
-                window = st.tel["slow_hist"] - fl["snap"]
-                do = (t_i >= fl["cool_until"]) & (window.sum() >= 1)
-                n_new = auto_decide(fl["n_on"], window)
-                n_on = jnp.where(do, n_new, fl["n_on"]).astype(jnp.int32)
-                st = st._replace(fleet=dict(
-                    fl, n_on=n_on,
-                    cool_until=jnp.where(do, t_i + auto_cool,
-                                         fl["cool_until"]),
-                    snap=jnp.where(do, st.tel["slow_hist"], fl["snap"])))
-                # deprovisioned workers are masked slot-full at
-                # selection (the serving platform's health-mask idiom):
-                # the balancer contract is untouched, and running tasks
-                # on scaled-down workers drain normally
-                sel_active = jnp.where(
-                    jnp.arange(W, dtype=jnp.int32) < n_on, active,
-                    jnp.int32(S))
-            if stateful:
-                w, lb = select(st.lb, sel_active, wcol, f_i, homes,
-                               u_i, i)
-                st = st._replace(lb=lb)
-            else:
-                w = select(sel_active, wcol, f_i, homes, u_i, i)
-            st = st._replace(rejected=st.rejected.at[i].set(w < 0))
-            if tel_on:
-                st = st._replace(tel=tel_engine.on_reject(st.tel, w < 0))
-            st = lax.cond(w >= 0,
-                          lambda s: place(s, i, jnp.maximum(w, 0), funcs,
-                                          services, arrivals),
-                          lambda s: s, st)
-        return st, ()
+            wcol = st.warm[:, f_i]
+        sel_active = active
+        if auto_on:
+            # autoscale decision: read the slowdown-sketch window
+            # (counts since the last snapshot), decide only when the
+            # cooldown elapsed and the window is non-empty, then
+            # snapshot + re-arm — identical gating in the oracle
+            fl = st.fleet
+            window = st.tel["slow_hist"] - fl["snap"]
+            do = (t_i >= fl["cool_until"]) & (window.sum() >= 1)
+            n_new = auto_decide(fl["n_on"], window)
+            n_on = jnp.where(do, n_new, fl["n_on"]).astype(jnp.int32)
+            st = st._replace(fleet=dict(
+                fl, n_on=n_on,
+                cool_until=jnp.where(do, t_i + auto_cool,
+                                     fl["cool_until"]),
+                snap=jnp.where(do, st.tel["slow_hist"], fl["snap"])))
+            # deprovisioned workers are masked slot-full at
+            # selection (the serving platform's health-mask idiom):
+            # the balancer contract is untouched, and running tasks
+            # on scaled-down workers drain normally
+            sel_active = jnp.where(
+                jnp.arange(W, dtype=jnp.int32) < n_on, active,
+                jnp.int32(S))
+        if stateful:
+            w, lb = select(st.lb, sel_active, wcol, f_i, homes,
+                           u_i, tid)
+            st = st._replace(lb=lb)
+        else:
+            w = select(sel_active, wcol, f_i, homes, u_i, tid)
+        if not stream:
+            st = st._replace(rejected=st.rejected.at[tid].set(w < 0))
+        if tel_on:
+            st = st._replace(tel=tel_engine.on_reject(st.tel, w < 0))
+        if stream:
+            st, is_cold = lax.cond(
+                w >= 0,
+                lambda s: place(s, tid, jnp.maximum(w, 0), f_i, svc_i,
+                                t_i),
+                lambda s: (s, jnp.bool_(False)), st)
+        else:
+            st = lax.cond(
+                w >= 0,
+                lambda s: place(s, tid, jnp.maximum(w, 0), f_i, svc_i,
+                                t_i),
+                lambda s: s, st)
+            is_cold = jnp.bool_(False)
+        return st, w, is_cold
 
-    def run(arrivals, funcs, services, u_lb, homes):
+    if stream:
+        def step(st: SimState, xs, funcs, services, arrivals, homes):
+            gid, valid, t_i, f_i, u_i, svc_i = xs
+
+            def live(s):
+                s, w, is_cold = early_arrival(
+                    s, gid, t_i, f_i, u_i, svc_i, funcs, services,
+                    arrivals, homes)
+                return s, (w < 0, is_cold,
+                           jnp.where(w >= 0, w, -1).astype(jnp.int32))
+
+            def skip(s):
+                return s, (jnp.bool_(False), jnp.bool_(False),
+                           jnp.int32(-1))
+
+            # ``valid`` masks the padded tail of the last chunk.  It is
+            # passed unbatched under vmap, so the predicate stays
+            # scalar and the cond stays a real branch — padded steps
+            # execute nothing and are identity on the carry
+            return lax.cond(valid, live, skip, st)
+    else:
+        def step(st: SimState, xs, funcs, services, arrivals, homes):
+            i, t_i, f_i, u_i = xs
+            if late:
+                st = advance(st, t_i - st.now, funcs, services, arrivals)
+                st = st._replace(now=t_i)
+                active = (st.task_idx >= 0).sum(axis=1).astype(jnp.int32)
+
+                def do_place(st):
+                    return place(st, i, jnp.argmin(active), f_i,
+                                 services[i], t_i)
+
+                def do_queue(st):
+                    return st._replace(q=st.q.at[st.q_tail % Q].set(
+                        i.astype(jnp.int32)), q_tail=st.q_tail + 1)
+                st = lax.cond(active.min() < C, do_place, do_queue, st)
+            else:
+                st, _, _ = early_arrival(st, i, t_i, f_i, u_i,
+                                         services[i], funcs, services,
+                                         arrivals, homes)
+            return st, ()
+
+    def init_planes():
+        """Initial lb/life/tel/fleet carry pytrees (shared between the
+        monolithic ``run`` and the stream ``init`` — identical bits)."""
         lb0 = ()
         if stateful:
             lb0 = jax.tree_util.tree_map(jnp.asarray,
@@ -598,6 +736,10 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
                 # decision window is slow_hist - snap
                 "snap": jnp.zeros((N_BINS,), dtype=jnp.int64),
             }
+        return lb0, life0, tel0, fleet0
+
+    def run(arrivals, funcs, services, u_lb, homes):
+        lb0, life0, tel0, fleet0 = init_planes()
         st = SimState(
             remaining=jnp.full((W, S), jnp.inf, dtype=jnp.float64),
             task_arr=jnp.zeros((W, S), dtype=jnp.float64),
@@ -628,7 +770,63 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
                 + (st.now - t_last) * fl["n_on"].astype(jnp.float64))))
         return st
 
-    return run
+    if not stream:
+        return run
+
+    # ---- stream mode: horizon-independent chunk engine ----------------
+
+    def init(n_reps: int, cutoff: int) -> SimState:
+        """Initial batched carry (leading ``n_reps`` axis, eager).
+
+        ``cutoff`` is the *global* post-warmup index — it rides in the
+        carry so one compiled chunk program serves any horizon.
+        """
+        lb0, life0, tel0, fleet0 = init_planes()
+        st = SimState(
+            remaining=jnp.full((W, S), jnp.inf, dtype=jnp.float64),
+            task_arr=jnp.zeros((W, S), dtype=jnp.float64),
+            task_idx=jnp.full((W, S), -1, dtype=jnp.int32),
+            warm=jnp.zeros((W, F + 1), dtype=jnp.int32),
+            q=(), q_head=jnp.int32(0), q_tail=jnp.int32(0),
+            now=jnp.float64(0.0),
+            resp=(), cold=(), rejected=(), worker_of=(),
+            server_time=jnp.float64(0.0), core_time=jnp.float64(0.0),
+            lb=lb0, life=life0, tel=tel0, fleet=fleet0,
+            task_fn=jnp.zeros((W, S), dtype=jnp.int32),
+            task_svc=jnp.zeros((W, S), dtype=jnp.float64),
+            stream={
+                "cutoff": jnp.int64(cutoff),
+                "n_done": jnp.int64(0), "n_obs": jnp.int64(0),
+                "resp_sum": jnp.float64(0.0),
+                "slow_sum": jnp.float64(0.0),
+            })
+        return jax.tree_util.tree_map(
+            lambda x: jnp.tile(x[None], (n_reps,) + (1,) * x.ndim), st)
+
+    def run_chunk(st, gids, valid, arrivals, funcs, services, u_lb,
+                  homes):
+        """One compiled scan over a chunk of arrivals.
+
+        Returns ``(st, ys)`` where ``ys`` are the per-arrival
+        ``(rejected, cold, worker)`` outputs of the chunk.
+        """
+        xs = (gids, valid, arrivals, funcs, u_lb, services)
+        return lax.scan(
+            partial(step, funcs=funcs, services=services,
+                    arrivals=arrivals, homes=homes), st, xs)
+
+    def run_drain(st):
+        """End-of-horizon drain — the monolithic engine's scan tail."""
+        t_last = st.now
+        st = advance(st, jnp.float64(_BIG_TIME), None, None, None)
+        if auto_on:
+            fl = st.fleet
+            st = st._replace(fleet=dict(fl, prov_time=(
+                fl["prov_time"]
+                + (st.now - t_last) * fl["n_on"].astype(jnp.float64))))
+        return st
+
+    return init, run_chunk, run_drain
 
 
 # --------------------------------------------------------------------------
@@ -672,12 +870,17 @@ def _resolve_backend(policy: PolicySpec, backend: str) -> str:
 def _cache_key(policy: PolicySpec, cluster: ClusterCfg,
                n_arrivals: int, n_functions: int, batched: bool,
                backend: str,
-               telemetry: TelemetryCfg | None = None) -> tuple:
+               telemetry: TelemetryCfg | None = None,
+               chunk: int | None = None) -> tuple:
     # telemetry-on engines trace a different program, so the cfg is part
-    # of the key (None = the golden pre-telemetry program)
+    # of the key (None = the golden pre-telemetry program).  ``chunk``
+    # marks a streaming chunk engine (the chunk size IS the key's shape
+    # axis — n_arrivals then holds the chunk length, and one compiled
+    # program serves any horizon); None = monolithic.
     return (tuple(policy), tuple(cluster), int(n_arrivals),
             int(n_functions), batched, backend,
-            None if telemetry is None else tuple(telemetry))
+            None if telemetry is None else tuple(telemetry),
+            None if chunk is None else int(chunk))
 
 
 def _cache_get_or_build(key: tuple, build):
@@ -758,11 +961,45 @@ def _get_engine(policy: PolicySpec, cluster: ClusterCfg,
     return _cache_get_or_build(key, lambda: jax.jit(raw()))
 
 
+def _get_stream_engine(policy: PolicySpec, cluster: ClusterCfg,
+                       chunk: int, n_functions: int, backend: str,
+                       telemetry: TelemetryCfg | None):
+    """Cached streaming chunk-engine lookup.
+
+    Returns ``((init, step_fn, drain_fn), fresh)``.  ``step_fn`` is the
+    jitted+vmapped chunk scan with the carry donated
+    (``donate_argnums=(0,)``), so handing the carry across segment
+    boundaries reuses its device buffers instead of copying them;
+    ``drain_fn`` donates the same way.  The key carries the chunk size
+    instead of the horizon — growing ``N`` reuses one compiled program.
+    """
+    if chunk < 1:
+        raise ValueError(f"chunk_size must be >= 1, got {chunk}")
+    cluster.validate()
+    backend = _resolve_backend(policy, backend)
+    key = _cache_key(policy, cluster, int(chunk), n_functions, True,
+                     backend, telemetry, chunk=int(chunk))
+
+    def build():
+        init, run_chunk, run_drain = _build_engine(
+            policy, cluster, int(chunk), n_functions, backend,
+            telemetry=telemetry, stream=True)
+        # carry batched over reps; gids/valid unbatched so the padding
+        # cond keeps a scalar predicate (a real branch, not a select)
+        step_fn = jax.jit(
+            jax.vmap(run_chunk, in_axes=(0, None, None, 0, 0, 0, 0, 0)),
+            donate_argnums=(0,))
+        drain_fn = jax.jit(jax.vmap(run_drain), donate_argnums=(0,))
+        return (init, step_fn, drain_fn)
+
+    return _cache_get_or_build(key, build)
+
+
 def build_simulator(policy: PolicySpec, cluster: ClusterCfg, *,
                     n_arrivals: int, n_functions: int,
                     backend: str = "auto",
                     telemetry: TelemetryCfg | None = None):
-    """Jitted single-workload simulator, memoized on (policy, cluster, N, F).
+    """Jitted single-workload simulator, memoized process-wide.
 
     Repeated calls with an equal key return the *same* compiled callable, so
     sweeps over loads/seeds (which only change array values, not shapes)

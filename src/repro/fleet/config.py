@@ -100,7 +100,7 @@ def parse_fleet_preset(name: str) -> str:
     key = str(name).strip().lower()
     if key not in FLEET_PRESETS:
         raise ValueError(
-            f"unknown fleet preset {key!r}; registered presets: "
+            f"unknown fleet preset {key!r}; registered fleet presets: "
             f"{', '.join(sorted(FLEET_PRESETS))}")
     return key
 
@@ -118,7 +118,7 @@ def speeds_for(fleet: FleetCfg, n_workers: int) -> np.ndarray:
         if s.shape != (n_workers,):
             raise ValueError(
                 f"FleetCfg.speed has {s.size} entries for "
-                f"{n_workers} workers")
+                f"n_workers={n_workers}, got {tuple(fleet.speed)}")
         return s
     return np.asarray(FLEET_PRESETS[parse_fleet_preset(fleet.preset)](
         int(n_workers)), dtype=np.float64)
@@ -133,6 +133,6 @@ def mem_for(fleet: FleetCfg, n_workers: int) -> np.ndarray:
         if m.shape != (n_workers,):
             raise ValueError(
                 f"FleetCfg.mem has {m.size} entries for "
-                f"{n_workers} workers")
+                f"n_workers={n_workers}, got {tuple(fleet.mem)}")
         return m
     return np.ones(n_workers, dtype=np.float64)

@@ -140,7 +140,8 @@ def get_autoscaler(name) -> AutoscalePolicy:
         return AUTOSCALERS[key]
     except KeyError:
         raise ValueError(
-            f"unknown autoscale policy {key!r}; registered policies: "
+            f"unknown autoscale policy {key!r}; registered autoscale "
+            f"policies: "
             f"{', '.join(sorted(AUTOSCALERS))}") from None
 
 

@@ -69,7 +69,8 @@ def get_cold_preset(name) -> ColdStartPreset:
         return COLD_PRESETS[key]
     except KeyError:
         raise ValueError(
-            f"unknown cold-start preset {key!r}; registered presets: "
+            f"unknown cold-start preset {key!r}; registered cold-start "
+            f"presets: "
             f"{', '.join(sorted(cold_preset_names()))}") from None
 
 

@@ -158,7 +158,8 @@ def get_keepalive(name) -> KeepAlivePolicy:
         return KEEPALIVES[key]
     except KeyError:
         raise ValueError(
-            f"unknown keep-alive policy {key!r}; registered policies: "
+            f"unknown keep-alive policy {key!r}; registered keep-alive "
+            f"policies: "
             f"{', '.join(sorted(KEEPALIVES))}") from None
 
 

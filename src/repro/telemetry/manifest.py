@@ -103,3 +103,40 @@ def wall_split_from_aggregate(agg: Mapping[str, Mapping[str, Any]]) -> dict:
         "compile_heavy_s": round(t_build + t_first, 6),
         "steady_state_s": round(t_run, 6),
     }
+
+
+# ------------------------------------------------------------------
+# Peak-memory probes (the streaming engine's horizon gate):
+# benchmarks/fig14_stream.py resets the kernel's high-water mark,
+# runs a full-day horizon, and records the peak as a budget row in
+# BENCH_report.json.
+# ------------------------------------------------------------------
+
+def reset_peak_rss() -> bool:
+    """Reset this process's peak-RSS high-water mark (Linux only).
+
+    Writes ``"5"`` to ``/proc/self/clear_refs`` so the next
+    :func:`peak_rss_mb` read reflects only allocations made after this
+    call.  Returns False (and changes nothing) where the proc file is
+    unavailable — callers then get the process-lifetime peak, which is
+    still a valid *upper bound* for the budget gate.
+    """
+    try:
+        with open("/proc/self/clear_refs", "w") as f:
+            f.write("5")
+        return True
+    except OSError:
+        return False
+
+
+def peak_rss_mb() -> float:
+    """Peak resident set size in MiB (``VmHWM``; ``ru_maxrss`` fallback)."""
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmHWM:"):
+                    return float(line.split()[1]) / 1024.0
+    except OSError:
+        pass
+    import resource
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0

@@ -207,3 +207,185 @@ def test_summarize_batch_confidence_intervals():
     row = bs.row()
     assert row["slow_p50_mean"] == st.mean
     assert row["slow_p50_ci95"] == st.ci95
+
+
+# ------------------------------------------------- streaming engine
+
+# The heaviest carry the engines support: carried-state balancer (DD) +
+# hybrid-histogram keep-alive + telemetry sketches + two-generation
+# fleet + TARGET_P99 autoscaler.  If chunking is bit-equal here, every
+# lighter combination is covered by construction (the chunk step shares
+# its arrival/completion bodies with the monolithic scan).
+def _stream_cluster():
+    from repro.core import LifecycleCfg
+    from repro.fleet import FleetCfg
+    return CLUSTER._replace(
+        lifecycle=LifecycleCfg(keepalive="HYBRID_HIST", ttl_s=2.0,
+                               max_idle=3, coldstart="paper-sim"),
+        fleet=FleetCfg(preset="two-gen", autoscale="TARGET_P99",
+                       min_workers=2, target_p99=4.0, cooldown_s=2.0))
+
+
+@pytest.mark.parametrize("chunk", [16, 50, 97, 300],
+                         ids=lambda k: f"k{k}")
+def test_stream_matches_monolithic_bitwise(chunk):
+    """Chunked(N, k) ≡ monolithic(N) bit-for-bit — final carry,
+    per-arrival outputs, telemetry sketches and pooled metrics — for
+    dividing, non-dividing (97) and larger-than-horizon (300) chunks."""
+    from repro.core import E_DD_PS
+    from repro.telemetry import TelemetryCfg
+    from repro.core.simulator import build_batch_simulator
+    from repro.core.streaming import final_states_equal, simulate_stream
+    import jax.numpy as jnp
+
+    cl = _stream_cluster()
+    tel = TelemetryCfg()
+    wls = [synth_workload(cl, load, 200, n_functions=5, seed=seed)
+           for load, seed in ((0.5, 0), (1.1, 1))]
+    wb = stack_workloads(wls)
+    run = build_batch_simulator(E_DD_PS, cl, n_arrivals=wb.n,
+                                n_functions=wb.n_functions,
+                                telemetry=tel)
+    mono = run(jnp.asarray(wb.arrival), jnp.asarray(wb.func),
+               jnp.asarray(wb.service), jnp.asarray(wb.u_lb),
+               jnp.asarray(wb.func_home))
+    out = simulate_stream(E_DD_PS, cl, wb, chunk_size=chunk,
+                          telemetry=tel, collect_outputs=True,
+                          keep_final_state=True)
+    ok, bad = final_states_equal(out.final_state, mono)
+    assert ok, f"carry mismatch in planes: {bad}"
+    # per-arrival outputs stream out through the scan ys
+    np.testing.assert_array_equal(out.rejected,
+                                  np.asarray(mono.rejected[:, :wb.n]))
+    np.testing.assert_array_equal(out.cold,
+                                  np.asarray(mono.cold[:, :wb.n]))
+    np.testing.assert_array_equal(out.worker,
+                                  np.asarray(mono.worker_of[:, :wb.n]))
+    # exact online counters reproduce the monolithic per-task planes
+    from repro.telemetry.state import warmup_cutoff
+    cut = warmup_cutoff(wb.n, tel)
+    resp = np.asarray(mono.resp[:, :wb.n])
+    done = ~np.isnan(resp)
+    obs = done & (np.arange(wb.n) >= cut)
+    np.testing.assert_array_equal(out.n_done, done.sum(axis=1))
+    np.testing.assert_array_equal(out.n_observed, obs.sum(axis=1))
+    np.testing.assert_allclose(
+        out.resp_mean,
+        np.where(obs, resp, 0.0).sum(axis=1) / np.maximum(
+            obs.sum(axis=1), 1), rtol=1e-12)
+    assert out.n_chunks == -(-wb.n // chunk)
+    assert out.chunk_size == chunk
+
+
+def test_stream_matches_numpy_oracle_per_segment():
+    """The chunked jax engine and the numpy oracle's chunked replay
+    agree at every segment boundary, not just at the end."""
+    from repro.core import E_LL_PS
+    from repro.telemetry import TelemetryCfg
+    from repro.core.sim_ref import simulate_ref_chunks
+    from repro.core.streaming import simulate_stream
+
+    cl = CLUSTER
+    tel = TelemetryCfg()
+    wl = synth_workload(cl, 0.9, 140, n_functions=5, seed=4)
+    ref, snaps = simulate_ref_chunks(E_LL_PS, cl, wl, chunk_size=40,
+                                     telemetry=tel)
+    seen = []
+    simulate_stream(
+        E_LL_PS, cl, wl, chunk_size=40, telemetry=tel,
+        chunk_callback=lambda c, st: seen.append(
+            {k: np.copy(np.asarray(v)[0]) for k, v in st.tel.items()}))
+    assert len(seen) == len(snaps) == 4
+    for got, want in zip(seen, snaps):
+        for key in ("slow_hist", "lat_hist", "n_cold", "n_warm",
+                    "n_evict", "n_reject", "decisions"):
+            np.testing.assert_array_equal(got[key], want[key],
+                                          err_msg=key)
+        for key in ("busy_time", "depth_time", "qlen_time"):
+            np.testing.assert_allclose(got[key], want[key], atol=1e-9,
+                                       err_msg=key)
+
+
+def test_stream_engine_cache_horizon_independent():
+    """One compiled chunk program serves any horizon; the cache key is
+    (policy, cluster, chunk), never N."""
+    from repro.core import E_LL_PS
+    from repro.telemetry import TelemetryCfg
+    from repro.core.simulator import _get_stream_engine
+
+    tel = TelemetryCfg()
+    a, fresh_a = _get_stream_engine(E_LL_PS, CLUSTER, 32, 5, "auto", tel)
+    b, fresh_b = _get_stream_engine(E_LL_PS, CLUSTER, 32, 5, "auto", tel)
+    assert a is b and not fresh_b
+    c, _ = _get_stream_engine(E_LL_PS, CLUSTER, 64, 5, "auto", tel)
+    assert c is not a
+    # different horizons reuse the same engine end to end
+    from repro.core.streaming import simulate_stream
+    wl_s = synth_workload(CLUSTER, 0.7, 64, n_functions=5, seed=0)
+    wl_l = synth_workload(CLUSTER, 0.7, 200, n_functions=5, seed=0)
+    o1 = simulate_stream(E_LL_PS, CLUSTER, wl_s, chunk_size=32,
+                         telemetry=tel)
+    o2 = simulate_stream(E_LL_PS, CLUSTER, wl_l, chunk_size=32,
+                         telemetry=tel)
+    assert o1.n_chunks == 2 and o2.n_chunks == 7
+    d, fresh_d = _get_stream_engine(E_LL_PS, CLUSTER, 32, 5, "auto", tel)
+    assert d is a and not fresh_d
+
+
+def test_stream_requires_early_binding():
+    from repro.telemetry import TelemetryCfg
+    from repro.core.streaming import simulate_stream
+
+    wl = synth_workload(CLUSTER, 0.5, 50, n_functions=5, seed=0)
+    with pytest.raises(ValueError, match="early binding"):
+        simulate_stream(LATE_BINDING, CLUSTER, wl, chunk_size=16,
+                        telemetry=TelemetryCfg())
+
+
+@pytest.mark.slow
+def test_stream_sharded_reps_match_unsharded(devices_script):
+    """Rep-axis device sharding changes placement, not results: the
+    sharded run is bit-equal to the single-device run, and a rep count
+    that does not divide the mesh raises the named error."""
+    devices_script("""
+import numpy as np
+from repro.core import ClusterCfg, E_DD_PS, synth_workload
+from repro.telemetry import TelemetryCfg
+from repro.core.streaming import final_states_equal, simulate_stream
+from repro.launch.mesh import make_rep_mesh
+
+cl = ClusterCfg(n_workers=4, cores=3, capacity_factor=2)
+tel = TelemetryCfg()
+wls = [synth_workload(cl, 0.8, 120, n_functions=5, seed=s)
+       for s in range(4)]
+mesh = make_rep_mesh(4)
+a = simulate_stream(E_DD_PS, cl, wls, chunk_size=40, telemetry=tel,
+                    keep_final_state=True)
+b = simulate_stream(E_DD_PS, cl, wls, chunk_size=40, telemetry=tel,
+                    keep_final_state=True, mesh=mesh)
+ok, bad = final_states_equal(a.final_state, b.final_state)
+assert ok, bad
+np.testing.assert_array_equal(a.n_done, b.n_done)
+np.testing.assert_array_equal(a.resp_mean, b.resp_mean)
+try:
+    simulate_stream(E_DD_PS, cl, wls[:3], chunk_size=40, telemetry=tel,
+                    mesh=mesh)
+except ValueError as e:
+    assert "does not divide" in str(e), e
+else:
+    raise AssertionError("expected named divisibility error")
+print("sharded-ok")
+""", n_devices=4)
+
+
+@pytest.mark.slow
+def test_stream_full_day_large_fleet_under_memory_budget():
+    """The horizon gate end-to-end: one full synthetic azure-diurnal
+    day at W=1000 in a single streaming run, peak RSS under budget."""
+    from benchmarks.fig14_stream import (PEAK_MB_BUDGET, _horizon_lane)
+
+    row = _horizon_lane(quick=False)[0]
+    assert row["ok"], row
+    assert row["n_workers"] >= 1000
+    assert row["full_day"] and row["n_done"] > 0
+    assert row["peak_rss_mb"] <= PEAK_MB_BUDGET

@@ -329,7 +329,7 @@ def test_cluster_validate_named_errors():
         ClusterCfg(cores=0).validate()
     with pytest.raises(ValueError, match="capacity_factor must be"):
         ClusterCfg(capacity_factor=-1).validate()
-    with pytest.raises(ValueError, match="speed has 2 entries for 4"):
+    with pytest.raises(ValueError, match="speed has 2 entries for n_workers=4"):
         CLUSTER._replace(fleet=FleetCfg(speed=(1.0, 0.5))).validate()
     with pytest.raises(ValueError, match="entries must be positive"):
         CLUSTER._replace(

@@ -104,8 +104,38 @@ def test_parse_policy_errors_list_their_own_registry():
         parse_autoscale("NOPE")
     msg = str(bad_auto.value)
     assert "unknown autoscale policy" in msg
+    assert "registered autoscale policies" in msg
     assert tokens(msg, r"[A-Z0-9_]+") == set(autoscaler_names())
     assert {"STATIC", "TARGET_P99"} <= tokens(msg, r"[A-Z0-9_]+")
+    assert "registered fleet presets" in str(bad_preset.value)
+    # the lifecycle axes too: keep-alive policies and cold-start presets
+    from repro.lifecycle import keepalive_names, parse_keepalive
+    from repro.lifecycle.coldstart import cold_preset_names, \
+        parse_cold_preset
+    with pytest.raises(ValueError) as bad_ka:
+        parse_keepalive("NOPE")
+    msg = str(bad_ka.value)
+    assert "unknown keep-alive policy" in msg
+    assert "registered keep-alive policies" in msg
+    assert tokens(msg, r"[A-Z0-9_]+") == set(keepalive_names())
+    assert {"NONE", "FIXED_TTL", "HYBRID_HIST"} <= \
+        tokens(msg, r"[A-Z0-9_]+")
+    with pytest.raises(ValueError) as bad_cold:
+        parse_cold_preset("NOPE")
+    msg = str(bad_cold.value)
+    assert "unknown cold-start preset" in msg
+    assert "registered cold-start presets" in msg
+    assert tokens(msg, r"[a-z0-9-]+") == set(cold_preset_names())
+    assert {"scalar", "paper-sim", "openwhisk"} <= \
+        tokens(msg, r"[a-z0-9-]+")
+    # vector-length errors name the offending value and the expected W
+    from repro.core.cluster import ClusterCfg
+    from repro.fleet.config import FleetCfg
+    with pytest.raises(ValueError) as bad_len:
+        ClusterCfg(n_workers=4)._replace(
+            fleet=FleetCfg(speed=(1.0, 0.5))).validate()
+    msg = str(bad_len.value)
+    assert "n_workers=4" in msg and "(1.0, 0.5)" in msg
 
 
 def test_registry_names():
