@@ -12,20 +12,36 @@ see :mod:`repro.telemetry.sketch`).
 This is the streaming-engine precondition proven end to end: the same
 numbers the figures report from materialized arrays, read instead from
 a fixed-size sketch carried through the scan.
+
+A second lane (``lane="overhead"``) gates the cost of the windowed
+timeline plane (:mod:`repro.telemetry.timeline`): one steady-state
+compiled dispatch with telemetry only versus telemetry + timeline
+(min of :data:`OVERHEAD_REPS` runs each); the REPRO-CHECK requires the
+flight recorder to add at most :data:`TOL_TL_OVERHEAD` relative wall
+(plus a small absolute slack so sub-second runs aren't gated on timer
+noise).
 """
 from __future__ import annotations
 
+import time
+
+from repro.core import E_LL_PS
 from repro.core.cluster import ClusterCfg
 from repro.core.metrics import summarize_batch_sim
-from repro.core.simulator import simulate_many
+from repro.core.simulator import simulate, simulate_many
 from repro.core.workload import ms_trace, stack_workloads
-from repro.telemetry import TelemetryCfg
+from repro.telemetry import TelemetryCfg, TimelineCfg
 
 from .common import registry_policies, write_csv
 
 LOADS = (0.3, 0.6, 0.8)
 #: documented sketch tolerance (relative error vs np.percentile)
 TOL_REL = 0.02
+#: max relative steady-state wall the timeline plane may add on top of
+#: telemetry-only (plus OVERHEAD_SLACK_S absolute)
+TOL_TL_OVERHEAD = 0.05
+OVERHEAD_SLACK_S = 0.05
+OVERHEAD_REPS = 3
 
 
 def _rel_err(sketch: float, exact: float) -> float:
@@ -52,6 +68,7 @@ def run(quick: bool = True) -> list[dict]:
             e50, e99 = _rel_err(s50, exact.slow_p50), \
                 _rel_err(s99, exact.slow_p99)
             rows.append({
+                "lane": "sketch",
                 "policy": spec.name, "load": load, "n": n, "reps": reps,
                 "sketch_p50": round(s50, 6), "exact_p50":
                 round(exact.slow_p50, 6),
@@ -61,8 +78,42 @@ def run(quick: bool = True) -> list[dict]:
                 round(e99, 6),
                 "ok": bool(e50 <= TOL_REL and e99 <= TOL_REL),
             })
-    write_csv("bench_telemetry.csv", rows)
+    rows.append(_overhead_row(cluster, n))
+    cols = {k: None for r in rows for k in r}
+    write_csv("bench_telemetry.csv",
+              [{k: r.get(k, "") for k in cols} for r in rows])
     return rows
+
+
+def _overhead_row(cluster: ClusterCfg, n: int) -> dict:
+    """Steady-state wall: telemetry-only vs telemetry + timeline."""
+    wl = ms_trace(cluster, 0.6, n, seed=29)
+    tel = TelemetryCfg()
+
+    def best_wall(timeline):
+        # first call compiles (engine-cache miss); timed calls are
+        # pure dispatch + host transfer
+        simulate(E_LL_PS, cluster, wl, backend="jax", telemetry=tel,
+                 timeline=timeline)
+        best = float("inf")
+        for _ in range(OVERHEAD_REPS):
+            t0 = time.perf_counter()
+            simulate(E_LL_PS, cluster, wl, backend="jax", telemetry=tel,
+                     timeline=timeline)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    tel_wall = best_wall(None)
+    tl_wall = best_wall(TimelineCfg())
+    budget = tel_wall * (1.0 + TOL_TL_OVERHEAD) + OVERHEAD_SLACK_S
+    return {
+        "lane": "overhead", "policy": E_LL_PS.name, "load": 0.6,
+        "n": n, "reps": OVERHEAD_REPS,
+        "tel_wall_s": round(tel_wall, 6),
+        "tl_wall_s": round(tl_wall, 6),
+        "overhead_frac": round(tl_wall / tel_wall - 1.0, 6),
+        "ok": bool(tl_wall <= budget),
+    }
 
 
 if __name__ == "__main__":

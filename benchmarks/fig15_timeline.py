@@ -1,0 +1,303 @@
+"""Fig. 15 (extension) — the windowed flight-recorder timeline plane.
+
+Three lanes gating :mod:`repro.telemetry.timeline` (the fixed-``K``
+virtual-time window plane carried through the scan, the oracle, the
+serving platform and the streaming engine):
+
+* **parity lane** — per-window values are an *exact recomputation*,
+  three ways.  For a registry-spanning set of stacks (plain early
+  binding, the Hermes hybrid balancer with its mode-flip log, late
+  binding, and the full two-gen + ``TARGET_P99`` autoscale stack) the
+  numpy oracle's timeline must match the jax scan's (integer planes
+  bitwise, f64 integrals to 1e-9), and the chunked streaming engine's
+  must match the monolithic scan's **bitwise** — including a chunk
+  size that does not divide the horizon, so window accumulators hand
+  across a padded final chunk.
+* **diurnal lane** — on an ``azure-diurnal`` replay the per-window
+  arrival counts must equal a host-side recomputation bitwise, the
+  window counters must sum to the run's exact per-arrival planes
+  (cold/warm/reject, completions into the slowdown sketch), and the
+  timeline must actually *show* the trace's load shape (peak window ≫
+  median window).  A serving-platform row runs the same checks through
+  :class:`repro.serving.engine.ServingCluster`.
+* **decision lane** — the bounded decision-event log is replayed
+  (:meth:`TimelineResult.replay_n_on`) on the fig13 autoscale scenario
+  (two-generation fleet + ``TARGET_P99`` on ``azure-diurnal``) and
+  must reconstruct the engine's recorded per-window ``n_on`` plane
+  *exactly* on every arrival-bearing window.
+
+Every row carries ``lane`` / ``stack`` / ``ok`` / ``mismatches``
+columns so ``BENCH_report.json`` can reconstruct all three gates.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (ClusterCfg, E_LL_PS, FleetCfg, HERMES,
+                        PAPER_TESTBED, WORKLOADS, stack_workloads,
+                        synth_workload)
+from repro.core.simulator import build_batch_simulator, simulate
+from repro.core.sim_ref import simulate_ref
+from repro.core.streaming import final_states_equal, simulate_stream
+from repro.core.taxonomy import Binding, PolicySpec
+from repro.telemetry import TelemetryCfg, TimelineCfg, auto_window_s
+from repro.telemetry.timeline import window_index_np
+
+from .common import write_csv
+
+# Parity lane: the fig14 equivalence shape — small horizon, two
+# replications, a chunk size that does not divide N (240 % 96 != 0) so
+# the padded-tail window handoff is always exercised.
+PAR_N = 240
+PAR_CHUNK = 96
+PAR_CLUSTER = ClusterCfg(n_workers=4, cores=3, capacity_factor=2)
+PAR_LOADS = ((0.6, 0), (1.0, 1))    # (load, seed) per replication
+PAR_TL = TimelineCfg(n_windows=32, coarse_bins=96, max_events=128)
+
+# Diurnal lane: one Azure-schema diurnal replay through the scan and
+# the serving platform.
+DI_WORKLOAD = "azure-diurnal"
+DI_LOAD = 0.5
+DI_N = 4000
+DI_TL = TimelineCfg()            # default 64 windows
+
+# Decision lane: the fig13 closed-loop scenario — two-generation fleet
+# under the TARGET_P99 autoscaler on a diurnal trace.  max_events is
+# sized so the log is never truncated (replay_n_on refuses otherwise).
+DEC_LOAD = 0.85
+DEC_N = 6000
+DEC_FLEET = FleetCfg(preset="two-gen", autoscale="TARGET_P99",
+                     target_p99=3.0, min_workers=2, cooldown_s=2.0)
+DEC_TL = TimelineCfg(max_events=512)
+
+#: integer timeline planes — bitwise everywhere
+_INT_PLANES = ("mode", "arrivals", "n_cold", "n_warm", "n_evict",
+               "n_reject", "slow_hist", "lat_hist", "n_on",
+               "ev_kind", "ev_val", "ev_count")
+#: f64 planes — bitwise stream≡mono, 1e-9 np≡jax (accumulation order)
+_FLOAT_PLANES = ("window_s", "busy_time", "qlen_time", "prov_core",
+                 "ev_t", "ev_p99")
+
+
+def _timelines_equal(a, b, *, bitwise_float: bool) -> list[str]:
+    """Mismatched plane names between two TimelineResults."""
+    bad = []
+    for name in _INT_PLANES:
+        if not np.array_equal(getattr(a, name), getattr(b, name)):
+            bad.append(name)
+    for name in _FLOAT_PLANES:
+        u = np.asarray(getattr(a, name), dtype=np.float64)
+        v = np.asarray(getattr(b, name), dtype=np.float64)
+        if bitwise_float:
+            ok = u.shape == v.shape and np.array_equal(u, v,
+                                                       equal_nan=True)
+        else:
+            ok = u.shape == v.shape and np.allclose(
+                u, v, rtol=1e-9, atol=1e-9, equal_nan=True)
+        if not ok:
+            bad.append(name)
+    return bad
+
+
+def parity_stacks():
+    """(label, policy, cluster) per audited timeline stack."""
+    hermes = PolicySpec(Binding.EARLY, "H", "PS")
+    late = PolicySpec(Binding.LATE, "LL", "FCFS")
+    auto = PAR_CLUSTER._replace(
+        fleet=FleetCfg(preset="two-gen", autoscale="TARGET_P99",
+                       min_workers=2, target_p99=4.0, cooldown_s=2.0))
+    return [
+        ("E/LL/PS", E_LL_PS, PAR_CLUSTER),
+        ("E/H/PS|mode-flips", hermes, PAR_CLUSTER),
+        ("L/LL/FCFS", late, PAR_CLUSTER),
+        ("E/LL/PS|fleet|auto", E_LL_PS, auto),
+    ]
+
+
+def _check_parity(policy, cluster, tel):
+    """One stack: np ≡ jax per replication, then stream ≡ mono bitwise
+    across a padded-tail chunking.  Returns (ok, mismatches)."""
+    import jax.numpy as jnp
+
+    bad = []
+    wls = [synth_workload(cluster, load, PAR_N, n_functions=5, seed=seed)
+           for load, seed in PAR_LOADS]
+    # numpy oracle vs jax scan, one replication at a time (the oracle
+    # is single-rep); integer planes bitwise, integrals to 1e-9
+    for r, wl in enumerate(wls):
+        ref = simulate_ref(policy, cluster, wl, telemetry=tel,
+                           timeline=PAR_TL)
+        jx = simulate(policy, cluster, wl, backend="jax", telemetry=tel,
+                      timeline=PAR_TL)
+        bad += [f"np/jax.r{r}.{m}" for m in _timelines_equal(
+            ref.timeline, jx.timeline, bitwise_float=False)]
+    # chunked stream vs monolithic batch, bitwise — the timeline rides
+    # the carry, so final_states_equal covers it too.  (The streaming
+    # engine is early-binding only; late stacks stop at np ≡ jax.)
+    if policy.binding is Binding.LATE:
+        return (not bad, bad)
+    wb = stack_workloads(wls)
+    run = build_batch_simulator(policy, cluster, n_arrivals=wb.n,
+                                n_functions=wb.n_functions,
+                                backend="jax", telemetry=tel,
+                                timeline=PAR_TL)
+    mono = run(jnp.asarray(wb.arrival), jnp.asarray(wb.func),
+               jnp.asarray(wb.service), jnp.asarray(wb.u_lb),
+               jnp.asarray(wb.func_home))
+    out = simulate_stream(policy, cluster, wb, chunk_size=PAR_CHUNK,
+                          backend="jax", telemetry=tel, timeline=PAR_TL,
+                          keep_final_state=True)
+    ok_st, bad_st = final_states_equal(out.final_state, mono)
+    bad += [f"stream/mono.{m}" for m in bad_st]
+    from repro.telemetry import TimelineResult
+    import jax
+    mono_tl = TimelineResult.from_state(
+        jax.tree_util.tree_map(np.asarray, mono.tl), cfg=PAR_TL)
+    bad += [f"stream/mono.tl.{m}" for m in _timelines_equal(
+        out.timeline, mono_tl, bitwise_float=True)]
+    return (not bad, bad)
+
+
+def _parity_lane():
+    tel = TelemetryCfg()
+    rows = []
+    for label, policy, cluster in parity_stacks():
+        t0 = time.time()
+        ok, bad = _check_parity(policy, cluster, tel)
+        rows.append({
+            "lane": "parity", "stack": label, "chunk": PAR_CHUNK,
+            "n_arrivals": PAR_N, "n_reps": len(PAR_LOADS),
+            "ok": bool(ok), "mismatches": ";".join(bad),
+            "wall_s": round(time.time() - t0, 3)})
+    return rows
+
+
+def _check_shape(tl, wl, out_cold, out_rejected):
+    """Timeline vs exact host recomputation on one run's outputs."""
+    bad = []
+    K = tl.n_windows
+    ws = auto_window_s(float(wl.arrival[-1]), tl.cfg)
+    if float(tl.window_s) != ws:
+        bad.append("window_s")
+    expect = np.bincount(
+        np.asarray([window_index_np(float(t), ws, K)
+                    for t in wl.arrival], dtype=np.int64), minlength=K)
+    if not np.array_equal(tl.arrivals, expect):
+        bad.append("arrivals!=host-recount")
+    n_rej = int(np.asarray(out_rejected).sum())
+    n_cold = int(np.asarray(out_cold).sum())
+    placed = wl.n - n_rej
+    if int(tl.n_reject.sum()) != n_rej:
+        bad.append("n_reject-total")
+    if int(tl.n_cold.sum()) != n_cold:
+        bad.append("n_cold-total")
+    if int(tl.n_cold.sum() + tl.n_warm.sum()) != placed:
+        bad.append("placements-total")
+    # the sketch takes every completion (no warmup cutoff — a flight
+    # recorder must show the ramp)
+    if int(tl.slow_hist.sum()) != placed:
+        bad.append("slow-sketch-total")
+    # the diurnal load shape must be visible in the window plane
+    arr = np.asarray(tl.arrivals, dtype=np.float64)
+    if not arr.max() > 1.25 * max(float(np.median(arr)), 1.0):
+        bad.append(f"shape peak={arr.max():.0f} med={np.median(arr):.0f}")
+    return bad
+
+
+def _diurnal_lane():
+    wl = WORKLOADS[DI_WORKLOAD](PAPER_TESTBED, DI_LOAD, DI_N, seed=3)
+    rows = []
+    t0 = time.time()
+    out = simulate(E_LL_PS, PAPER_TESTBED, wl, backend="jax",
+                   timeline=DI_TL)
+    bad = _check_shape(out.timeline, wl, out.cold, out.rejected)
+    rows.append({
+        "lane": "diurnal", "stack": "E/LL/PS|scan",
+        "workload": DI_WORKLOAD, "load": DI_LOAD, "n_arrivals": DI_N,
+        "arrivals_peak": int(out.timeline.arrivals.max()),
+        "arrivals_median": float(np.median(out.timeline.arrivals)),
+        "ok": not bad, "mismatches": ";".join(bad),
+        "wall_s": round(time.time() - t0, 3)})
+    # same contract through the serving platform (controller latency,
+    # health masks and migrations live here — the counters must still
+    # reconcile with the platform's own per-arrival planes)
+    from repro.serving.engine import ServeCfg, ServingCluster
+    t0 = time.time()
+    sv = ServingCluster(ServeCfg(cluster=PAPER_TESTBED), HERMES,
+                        timeline=DI_TL).run(wl)
+    bad = _check_shape(sv.timeline, wl, sv.cold, sv.rejected)
+    rows.append({
+        "lane": "diurnal", "stack": "hermes|serving",
+        "workload": DI_WORKLOAD, "load": DI_LOAD, "n_arrivals": DI_N,
+        "arrivals_peak": int(sv.timeline.arrivals.max()),
+        "arrivals_median": float(np.median(sv.timeline.arrivals)),
+        "ok": not bad, "mismatches": ";".join(bad),
+        "wall_s": round(time.time() - t0, 3)})
+    return rows
+
+
+#: the decision-lane flight recorder from the last :func:`run` — the
+#: export source for ``benchmarks.run --timeline-out`` (CSV +
+#: OpenMetrics + Perfetto counter tracks) and ``RunManifest.timeline``
+LAST_TIMELINE = None
+
+
+def _decision_lane():
+    global LAST_TIMELINE
+    cl = PAPER_TESTBED._replace(fleet=DEC_FLEET)
+    wl = WORKLOADS[DI_WORKLOAD](PAPER_TESTBED, DEC_LOAD, DEC_N, seed=1)
+    t0 = time.time()
+    out = simulate(HERMES, cl, wl, backend="jax",
+                   telemetry=TelemetryCfg(), timeline=DEC_TL)
+    tl = out.timeline
+    LAST_TIMELINE = tl
+    bad = []
+    n_seen = int(tl.ev_count)
+    if n_seen > int(DEC_TL.max_events):
+        bad.append(f"log-truncated({n_seen}>{DEC_TL.max_events})")
+        replay_ok = False
+    else:
+        # the log alone must reconstruct the engine's n_on plane on
+        # every window that has an arrival (empty windows never get a
+        # last-write-wins sample, so they stay at init)
+        rep = tl.replay_n_on(cl.n_workers)
+        mask = np.asarray(tl.arrivals) > 0
+        replay_ok = bool(np.array_equal(rep[mask],
+                                        np.asarray(tl.n_on)[mask]))
+        if not replay_ok:
+            bad.append("replay!=n_on")
+    evs = tl.events() if n_seen <= int(DEC_TL.max_events) else []
+    n_auto = sum(1 for e in evs if e["kind"] == "autoscale")
+    if not evs:
+        bad.append("no-decisions-logged")
+    if n_auto and not all(np.isfinite(e["sensor_p99"]) for e in evs
+                          if e["kind"] == "autoscale"):
+        bad.append("sensor-p99-nonfinite")
+    return [{
+        "lane": "decision", "stack": "hermes|fleet|auto",
+        "workload": DI_WORKLOAD, "load": DEC_LOAD, "n_arrivals": DEC_N,
+        "n_events": n_seen, "n_autoscale": n_auto,
+        "n_on_min": int(np.asarray(tl.n_on).min()),
+        "n_on_max": int(np.asarray(tl.n_on).max()),
+        "ok": not bad, "mismatches": ";".join(bad),
+        "wall_s": round(time.time() - t0, 3)}]
+
+
+def run(quick: bool = True):
+    # the lanes are gate-sized (exactness checks don't get stronger
+    # with N); full mode just repeats the decision lane across seeds
+    rows = _parity_lane()
+    rows += _diurnal_lane()
+    rows += _decision_lane()
+    cols = {k: None for r in rows for k in r}
+    write_csv("fig15_timeline.csv",
+              [{k: r.get(k, "") for k in cols} for r in rows])
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['lane']:9s} {r['stack']:24s} "
+              f"{'OK ' if r['ok'] else 'BAD'} {r['mismatches'] or ''}")

@@ -53,6 +53,12 @@ def main() -> None:
                     help="trace JSON path (default "
                          "experiments/trace_bench.json; implies "
                          "--telemetry)")
+    ap.add_argument("--timeline-out", default=None, metavar="PATH",
+                    help="export the fig15 decision-lane flight "
+                         "recorder: per-window CSV at PATH plus an "
+                         "OpenMetrics text sibling at PATH.om; with "
+                         "tracing on, the windows also land in the "
+                         "trace JSON as Perfetto counter tracks")
     args = ap.parse_args()
     quick = not args.full
     # monotonic clock for elapsed time (immune to wall-clock steps);
@@ -75,7 +81,7 @@ def main() -> None:
                    fig4_scale, fig6_slowdown, fig7_coldstarts,
                    fig8_resources, fig9_robustness, fig10_trace_replay,
                    fig11_policy_zoo, fig12_keepalive, fig13_autoscale,
-                   fig14_stream, tab_overhead)
+                   fig14_stream, fig15_timeline, tab_overhead)
 
     print("== fig2: policy space (4x12 cores, Azure workload) ==",
           flush=True)
@@ -349,6 +355,40 @@ def main() -> None:
                  f"{hz14['n_done']} completions, "
                  f"wall={hz14['wall_s']:.1f}s")
 
+    print("== fig15: windowed flight-recorder timeline ==", flush=True)
+    with tracer.span("fig15"):
+        f15 = fig15_timeline.run(quick)
+    par15 = _by(f15, lane="parity")
+    bad15 = [f"{r['stack']}: {r['mismatches']}"
+             for r in par15 if not r["ok"]]
+    ok &= _claim("Timeline: per-window planes are exact — np oracle ≡ "
+                 "jax scan (ints bitwise, integrals 1e-9) and "
+                 "streamed ≡ monolithic bitwise across a non-dividing "
+                 "chunking",
+                 not bad15,
+                 f"{len(par15)} stacks exact" if not bad15
+                 else "; ".join(bad15))
+    di15 = _by(f15, lane="diurnal")
+    ok &= _claim("Timeline: diurnal load shape reproduced and window "
+                 "counters reconcile with the exact per-arrival planes "
+                 "(scan + serving platform)",
+                 all(r["ok"] for r in di15),
+                 "; ".join(
+                     f"{r['stack']}: peak={r['arrivals_peak']}"
+                     f"/med={r['arrivals_median']:.0f}"
+                     + (f" {r['mismatches']}" if r["mismatches"] else "")
+                     for r in di15))
+    dec15 = _by(f15, lane="decision")[0]
+    ok &= _claim("Timeline: decision log replays the exact n_on "
+                 "trajectory (two-gen fleet + TARGET_P99 on "
+                 "azure-diurnal)",
+                 dec15["ok"],
+                 f"{dec15['n_events']} events "
+                 f"({dec15['n_autoscale']} autoscale), "
+                 f"n_on∈[{dec15['n_on_min']},{dec15['n_on_max']}]"
+                 + (f"; {dec15['mismatches']}"
+                    if dec15["mismatches"] else ""))
+
     print("== §6.6: scheduler overhead ==", flush=True)
     with tracer.span("tab_overhead"):
         tov = tab_overhead.run(quick)
@@ -366,15 +406,24 @@ def main() -> None:
           flush=True)
     with tracer.span("bench_telemetry"):
         ftel = bench_telemetry.run(quick)
-    worst50 = max(r["rel_err_p50"] for r in ftel)
-    worst99 = max(r["rel_err_p99"] for r in ftel)
+    fsk = _by(ftel, lane="sketch")
+    worst50 = max(r["rel_err_p50"] for r in fsk)
+    worst99 = max(r["rel_err_p99"] for r in fsk)
     ok &= _claim("Telemetry: sketch p50/p99 slowdown within "
                  f"{bench_telemetry.TOL_REL:.0%} of exact "
                  "summarize_batch for every registered balancer at "
                  f"loads {bench_telemetry.LOADS}",
-                 all(r["ok"] for r in ftel),
-                 f"{len(ftel)} cells; worst rel err "
+                 all(r["ok"] for r in fsk),
+                 f"{len(fsk)} cells; worst rel err "
                  f"p50={worst50:.4f} p99={worst99:.4f}")
+    fov = _by(ftel, lane="overhead")[0]
+    ok &= _claim("Timeline: flight-recorder plane adds ≤"
+                 f"{bench_telemetry.TOL_TL_OVERHEAD:.0%} steady-state "
+                 "wall over telemetry-only",
+                 fov["ok"],
+                 f"tel={fov['tel_wall_s']:.3f}s vs "
+                 f"+timeline={fov['tl_wall_s']:.3f}s "
+                 f"({100 * fov['overhead_frac']:+.1f}%)")
 
     print("== analysis: jaxpr eqn budgets ==", flush=True)
     from repro.analysis import bench_rows
@@ -390,6 +439,18 @@ def main() -> None:
     manifest.engine_cache = cache
     manifest.wall_split = wall_split_from_aggregate(tracer.aggregate())
     os.makedirs(OUT_DIR, exist_ok=True)
+    tl15 = fig15_timeline.LAST_TIMELINE
+    timeline_paths = None
+    if tl15 is not None:
+        manifest.timeline = tl15.summary()
+        if trace_on:
+            # merge the windows into the span trace as Perfetto
+            # counter tracks (one track per tracked series)
+            tl15.emit_counters(tracer)
+        if args.timeline_out:
+            timeline_paths = (tl15.write_csv(args.timeline_out),
+                              tl15.write_openmetrics(
+                                  args.timeline_out + ".om"))
     trace_path = None
     if trace_on:
         trace_path = args.trace_out or \
@@ -408,7 +469,7 @@ def main() -> None:
         "figures": {"fig2": f2, "fig3": f3, "fig4": f4, "fig6": f6,
                     "fig8": f8, "fig9": f9, "fig10": f10, "fig11": f11,
                     "fig12": f12, "fig13": f13, "fig14": f14,
-                    "tab_overhead": tov,
+                    "fig15": f15, "tab_overhead": tov,
                     "bench_telemetry": ftel},
     }
     report_path = os.path.join(OUT_DIR, "BENCH_report.json")
@@ -419,6 +480,9 @@ def main() -> None:
           f"resident, {cache['hits']} hits / {cache['misses']} misses "
           f"({100 * cache['hits'] / hit_total:.0f}% hit rate), "
           f"{cache['evictions']} evictions")
+    if timeline_paths:
+        print(f"timeline: {timeline_paths[0]} (per-window CSV) + "
+              f"{timeline_paths[1]} (OpenMetrics)")
     if trace_path:
         print(f"trace: {trace_path} (load at https://ui.perfetto.dev)")
     print(f"\nbenchmarks done in {elapsed:.0f}s; CSVs in "

@@ -105,6 +105,35 @@ def run(quick: bool = True):
                      "decisions_per_s": N / dt,
                      "us_per_decision": dt / N * 1e6,
                      "compile_s": 0.0, "run_s": round(dt, 6)})
+    # engine-plane overhead: the per-arrival price of the telemetry and
+    # timeline carries through the full scan engine.  One steady-state
+    # dispatch (min of 3, compile excluded) per variant; an "arrival"
+    # is the decision unit, so us_per_decision is directly comparable
+    # with the controller rows above.
+    from repro.core import E_LL_PS, synth_workload
+    from repro.core.simulator import simulate
+    from repro.telemetry import TelemetryCfg, TimelineCfg
+    wl = synth_workload(cl, 0.6, N, n_functions=F, seed=5)
+    for label, tel, tline in (
+            ("E/LL/PS(plain)", None, None),
+            ("E/LL/PS(telemetry)", TelemetryCfg(), None),
+            ("E/LL/PS(tel+timeline)", TelemetryCfg(), TimelineCfg())):
+        t0 = time.perf_counter()
+        simulate(E_LL_PS, cl, wl, backend="jax", telemetry=tel,
+                 timeline=tline)
+        compile_s = time.perf_counter() - t0
+        dt = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            simulate(E_LL_PS, cl, wl, backend="jax", telemetry=tel,
+                     timeline=tline)
+            dt = min(dt, time.perf_counter() - t0)
+        rows.append({"scheduler": label, "impl": "engine-jax",
+                     "keepalive": "-",
+                     "decisions_per_s": N / dt,
+                     "us_per_decision": dt / N * 1e6,
+                     "compile_s": round(compile_s, 6),
+                     "run_s": round(dt, 6)})
     # batched Pallas kernel (Hermes) — sequential semantics preserved
     from repro.kernels.hermes_select.ops import hermes_select
     import jax.numpy as jnp

@@ -131,6 +131,14 @@ def main() -> None:
     ap.add_argument("--trace-out", metavar="PATH", default=None,
                     help="export a Perfetto-loadable Chrome trace JSON "
                          "of the sweep (implies --telemetry)")
+    ap.add_argument("--timeline-out", metavar="PATH", default=None,
+                    help="carry the windowed flight-recorder timeline "
+                         "(repro.telemetry.timeline) and export it per "
+                         "policy: per-window CSV at PATH with the "
+                         "policy name suffixed, plus an OpenMetrics "
+                         "sibling (.om); with --trace-out the windows "
+                         "also land in the trace as Perfetto counter "
+                         "tracks")
     args = ap.parse_args()
 
     if args.list_policies:
@@ -196,6 +204,21 @@ def main() -> None:
         tel_cfg = TelemetryCfg()
         if args.telemetry or args.trace_out:   # span tracing stays opt-in
             tracer = configure_tracing(True)
+    tl_cfg = None
+    if args.timeline_out:
+        from repro.telemetry import TimelineCfg
+        tl_cfg = TimelineCfg()
+
+    def export_timeline(tag, tl):
+        import os
+        base, ext = os.path.splitext(args.timeline_out)
+        ext = ext or ".csv"
+        p_csv = tl.write_csv(f"{base}.{tag}{ext}")
+        p_om = tl.write_openmetrics(f"{base}.{tag}{ext}.om")
+        if tracer is not None:
+            tl.emit_counters(tracer, prefix=f"timeline/{tag}")
+        print(f"timeline[{tag}]: {p_csv} + {p_om}")
+
     wfn = WORKLOADS[args.workload]
     ci = " ±ci95" if args.reps > 1 and args.engine == "sim" else ""
     print(f"{'policy':10s} {'load':>5s} {'slow50':>8s} "
@@ -209,7 +232,8 @@ def main() -> None:
         for ptext in args.policies:
             pol = parse_policy(ptext)
             results[pol.name] = (pol, simulate_many(pol, cl, wb,
-                                                    telemetry=tel_cfg))
+                                                    telemetry=tel_cfg,
+                                                    timeline=tl_cfg))
         for li, load in enumerate(args.loads):
             sl = slice(li * args.reps, (li + 1) * args.reps)
             for pname, (pol, out) in results.items():
@@ -228,6 +252,11 @@ def main() -> None:
                       f"{t['slow_p50']:.2f} / {t['slow_p99']:.1f}  "
                       f"cold={t['n_cold']} warm={t['n_warm']} "
                       f"evict={t['n_evict']} reject={t['n_reject']}")
+        if args.timeline_out:
+            # the batched timeline pools over loads × reps (same
+            # horizon, shared virtual-time windows)
+            for pname, (pol, out) in results.items():
+                export_timeline(pname.replace("/", "-"), out.timeline)
         if args.trace_out:
             tracer.export(args.trace_out)
             print(f"trace: {args.trace_out} "
@@ -239,7 +268,7 @@ def main() -> None:
         for ptext in args.policies:
             pol = parse_policy(ptext)
             sc = ServingCluster(ServeCfg(cluster=cl), pol,
-                                telemetry=tel_cfg)
+                                telemetry=tel_cfg, timeline=tl_cfg)
             if tracer is not None:
                 with tracer.span("explore.serve", policy=pol.name,
                                  load=load, n=args.n):
@@ -252,6 +281,9 @@ def main() -> None:
             print(f"{pol.name:10s} {load:5.2f} {s.slow_p50:8.2f} "
                   f"{s.slow_p99:10.1f} {s.lat_p99:9.2f} "
                   f"{100*s.cold_frac:6.1f} {s.mean_servers:8.2f}")
+            if out.timeline is not None:
+                export_timeline(f"{pol.name.replace('/', '-')}-{load}",
+                                out.timeline)
     if args.trace_out:
         tracer.export(args.trace_out)
         print(f"trace: {args.trace_out} (load at https://ui.perfetto.dev)")

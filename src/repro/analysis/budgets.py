@@ -72,6 +72,17 @@ BASELINES: dict[str, int] = {
     "E/LL/PS|jax|tel|chunk": 499,
     "E/LL/PS|jax|ka=HYBRID_HIST|tel|chunk": 690,
     "E/LL/PS|jax|fleet|auto|tel|chunk": 592,
+    # windowed-timeline lanes: the flight-recorder plane scatters into
+    # K-window counters/sketches on every arrival and completion, so
+    # it costs more than the telemetry sketch alone; timeline-off
+    # baselines above are unchanged (the disabled path traces the
+    # identical pre-timeline program — locked by
+    # test_timeline_off_is_bit_identical)
+    "E/LL/PS|jax|tl": 1068,
+    "E/LL/PS|jax|tel|tl": 1278,
+    "E/H/PS|jax|tel|tl": 1334,
+    "E/LL/PS|jax|fleet|auto|tel|tl": 1453,
+    "E/LL/PS|jax|tel|tl|chunk": 779,
 }
 
 #: Headroom multiplier over the measured baseline.

@@ -223,7 +223,8 @@ def _audit_cluster(lifecycle=None, fleet=None):
 
 def iter_engine_specs(*, balancers: Optional[Iterable[str]] = None,
                       sched: str = "PS") -> list[tuple]:
-    """(label, policy, cluster, backend, telemetry, chunk) per engine.
+    """(label, policy, cluster, backend, telemetry, chunk, timeline)
+    per engine.
 
     Covers every (balancer × traceable backend) pair in the registry —
     backends are ``jax`` plus ``pallas`` (balancers without a kernel
@@ -239,8 +240,13 @@ def iter_engine_specs(*, balancers: Optional[Iterable[str]] = None,
     ``|fleet|auto|tel`` lane with the ``TARGET_P99`` autoscaler carry
     riding the telemetry sketch), plus ``|chunk`` lanes (the streaming
     chunk engine's per-segment scan — same arrival/completion bodies
-    with the slot mirrors and exact-counter carry; ``chunk`` is the
-    trailing tuple element, ``None`` for monolithic lanes).
+    with the slot mirrors and exact-counter carry; ``chunk`` is
+    ``None`` for monolithic lanes), plus ``|tl`` lanes (the windowed
+    flight-recorder plane of :mod:`repro.telemetry.timeline` riding
+    the carry — alone, stacked on telemetry, on the hybrid balancer
+    whose mode flips it logs, under the autoscaler whose decisions it
+    logs, and through the chunk engine; ``timeline`` is the trailing
+    tuple element, ``None`` when the plane is off).
     """
     from repro.core.taxonomy import Binding, PolicySpec
     from repro.fleet import FleetCfg
@@ -303,18 +309,35 @@ def iter_engine_specs(*, balancers: Optional[Iterable[str]] = None,
                               (f"{pol.name}|jax|fleet|auto|tel|chunk",
                                auto, tel)):
             specs.append((lane, pol, cl2, "jax", t2, AUDIT_N))
-    return [s if len(s) == 6 else s + (None,) for s in specs]
+        # windowed-timeline lanes: the flight-recorder plane alone,
+        # stacked on the telemetry sketch, on the hybrid balancer
+        # (whose mode flips it logs), under the autoscaler (whose
+        # grow/shrink decisions it logs), and riding the chunk
+        # engine's carry across segment boundaries
+        from repro.telemetry import TimelineCfg
+        tl = TimelineCfg()
+        for lane, p3, cl3, t3, ch3 in (
+                (f"{pol.name}|jax|tl", pol, plain, None, None),
+                (f"{pol.name}|jax|tel|tl", pol, plain, tel, None),
+                (f"{ph.name}|jax|tel|tl", ph, plain, tel, None),
+                (f"{pol.name}|jax|fleet|auto|tel|tl", pol, auto, tel,
+                 None),
+                (f"{pol.name}|jax|tel|tl|chunk", pol, plain, tel,
+                 AUDIT_N)):
+            specs.append((lane, p3, cl3, "jax", t3, ch3, tl))
+    return [s + (None,) * (7 - len(s)) for s in specs]
 
 
 def trace_engine(policy, cluster, backend: str = "jax",
                  n_arrivals: int = AUDIT_N, n_functions: int = AUDIT_F,
-                 telemetry=None):
+                 telemetry=None, timeline=None):
     """``jax.make_jaxpr`` of the raw scan engine (tracing only)."""
     jax = _jax()
     import jax.numpy as jnp
     from repro.core.simulator import _build_engine
     run = _build_engine(policy, cluster, n_arrivals, n_functions,
-                        backend, telemetry=telemetry)
+                        backend, telemetry=telemetry,
+                        timeline=timeline)
     N, F = n_arrivals, n_functions
     f64 = jax.ShapeDtypeStruct((N,), jnp.float64)
     i64 = jax.ShapeDtypeStruct((N,), jnp.int64)
@@ -324,7 +347,8 @@ def trace_engine(policy, cluster, backend: str = "jax",
 
 def trace_stream_engine(policy, cluster, backend: str = "jax",
                         chunk: int = AUDIT_N,
-                        n_functions: int = AUDIT_F, telemetry=None):
+                        n_functions: int = AUDIT_F, telemetry=None,
+                        timeline=None):
     """``jax.make_jaxpr`` of the streaming chunk scan (one segment).
 
     The carry avals come from the engine's own ``init`` (leading rep
@@ -337,7 +361,7 @@ def trace_stream_engine(policy, cluster, backend: str = "jax",
     from repro.core.simulator import _build_engine
     init, run_chunk, _ = _build_engine(
         policy, cluster, int(chunk), n_functions, backend,
-        telemetry=telemetry, stream=True)
+        telemetry=telemetry, timeline=timeline, stream=True)
     st = jax.tree_util.tree_map(
         lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), init(1, 0))
     k, F = int(chunk), n_functions
@@ -354,15 +378,17 @@ def audit_engines(*, balancers: Optional[Iterable[str]] = None
     """Trace + audit every engine spec; returns (stats, findings)."""
     all_stats: list[JaxprStats] = []
     findings: list[Finding] = []
-    for label, policy, cluster, backend, telemetry, chunk in \
-            iter_engine_specs(balancers=balancers):
+    for label, policy, cluster, backend, telemetry, chunk, timeline \
+            in iter_engine_specs(balancers=balancers):
         if chunk is not None:
             closed = trace_stream_engine(policy, cluster, backend,
                                          chunk=chunk,
-                                         telemetry=telemetry)
+                                         telemetry=telemetry,
+                                         timeline=timeline)
         else:
             closed = trace_engine(policy, cluster, backend,
-                                  telemetry=telemetry)
+                                  telemetry=telemetry,
+                                  timeline=timeline)
         stats, fs = audit_jaxpr(closed, label=label, allow_64=True)
         all_stats.append(stats)
         findings.extend(fs)
@@ -497,6 +523,33 @@ def audit_cache_key() -> list[Finding]:
 
     probe_chunk(None, AUDIT_N, "chunk")
     probe_chunk(AUDIT_N, 2 * AUDIT_N, "chunk.size")
+
+    # the timeline plane is python-gated into the carry exactly like
+    # telemetry, so it is the key's trailing component: off vs on, and
+    # every TimelineCfg field perturbed (n_windows/coarse_bins resize
+    # carry planes; max_events resizes the event log; window_s is
+    # baked into the traced window-index arithmetic)
+    from repro.telemetry import TimelineCfg
+
+    def probe_timeline(t0, t1, field: str):
+        k0 = _cache_key(policy, base, AUDIT_N, AUDIT_F, False, "jax",
+                        None, None, t0)
+        k1 = _cache_key(policy, base, AUDIT_N, AUDIT_F, False, "jax",
+                        None, None, t1)
+        if k0 == k1:
+            findings.append(Finding(
+                path=f"<cache-key:{field}>", line=0, rule="JXP005",
+                message=f"configs differing in '{field}' share an "
+                        f"engine cache key", hint=RULES["JXP005"].hint))
+
+    wbase = TimelineCfg()
+    probe_timeline(None, wbase, "timeline")
+    for field in TimelineCfg._fields:
+        new = _perturb(getattr(wbase, field), field)
+        if new is None:
+            continue
+        probe_timeline(wbase, wbase._replace(**{field: new}),
+                       f"timeline.{field}")
     return findings
 
 

@@ -68,9 +68,17 @@ from repro.telemetry.state import (TelemetryCfg, TelemetryResult, init_np,
                                    on_advance_np, on_complete_np,
                                    on_evict_np, on_place_np, on_reject_np,
                                    warmup_cutoff)
+from repro.telemetry.timeline import (EV_AUTOSCALE, EV_MODE_FLIP,
+                                      TimelineCfg, TimelineResult,
+                                      auto_window_s, init_tl_np,
+                                      sensor_p99_np, tl_event_np,
+                                      tl_on_advance_np, tl_on_arrival_np,
+                                      tl_on_complete_np, tl_on_evict_np,
+                                      tl_on_place_np, tl_on_prov_np,
+                                      tl_on_reject_np, validate_timeline)
 
 from .cluster import ClusterCfg
-from .taxonomy import PolicySpec
+from .taxonomy import LoadBalance, PolicySpec
 from .workload import Workload
 
 EPS = 1e-9
@@ -102,10 +110,15 @@ class SimResult:
     #: provisioned core-seconds: the autoscaler's ``n_on × cores`` time
     #: integral, or ``end_time × total_cores`` for a fixed fleet
     prov_core_s: float = 0.0
+    #: windowed flight recorder (None unless ``timeline=`` was passed);
+    #: the oracle twin of the scan engine's ``tl`` carry — integer
+    #: planes bitwise np ≡ jax, float integrals to accumulation order
+    timeline: TimelineResult | None = None
 
 
 def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload,
                  *, telemetry: TelemetryCfg | None = None,
+                 timeline: TimelineCfg | None = None,
                  chunk_size: int | None = None,
                  chunk_hook=None) -> SimResult:
     """Pure-numpy oracle event loop (the semantic contract).
@@ -147,6 +160,15 @@ def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload,
     # scan engine's carry (place / advance / complete / reject)
     tel = init_np(W) if telemetry is not None else None
     tel_cutoff = warmup_cutoff(N, telemetry) if telemetry is not None else 0
+    # windowed flight recorder — hooks fire at the same event boundaries
+    # (and in the same order) as the scan engine's tl carry
+    tl = None
+    if timeline is not None:
+        validate_timeline(timeline)
+        tl = init_tl_np(W, timeline,
+                        auto_window_s(float(wl.arrival[-1]), timeline))
+    flip_on = tl is not None and not late \
+        and policy.balance == LoadBalance.HYBRID
     # heterogeneous fleet + autoscaling (None = homogeneous, bit-exact)
     fres = resolve_fleet(cluster, backend="np")
     fleet_on = fres is not None
@@ -206,6 +228,8 @@ def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload,
                 evicted = True
         if tel is not None:
             on_place_np(tel, w, is_cold, evicted)
+        if tl is not None:
+            tl_on_place_np(tl, now, is_cold, evicted)
         cold[arr_idx] = is_cold
         worker_of[arr_idx] = w
         svc = float(wl.service[arr_idx])
@@ -260,6 +284,14 @@ def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload,
                     np.array([bool(tasks[w]) for w in range(W)]),
                     np.array([len(tasks[w]) for w in range(W)]),
                     len(queue))
+            if tl is not None:
+                # windowed twin: the whole tau slice credits the window
+                # of its start (left-start convention, same as the scan
+                # engine)
+                tl_on_advance_np(
+                    tl, now, tau,
+                    np.array([bool(tasks[w]) for w in range(W)]),
+                    len(queue))
             now += tau
             dt_left -= tau
             for w in range(W):
@@ -273,13 +305,22 @@ def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload,
                             on_complete_np(tel, response[t.arr_idx],
                                            float(wl.service[t.arr_idx]),
                                            t.arr_idx, tel_cutoff)
+                        if tl is not None:
+                            # all completions (no warmup cutoff), in the
+                            # window of the completion time
+                            tl_on_complete_np(
+                                tl, now, response[t.arr_idx],
+                                float(wl.service[t.arr_idx]))
                         if life is None:
                             warm[w, t.func] += 1
                         else:
                             budget_evicted = life.on_complete(
                                 warm, w, t.func, now)
-                            if budget_evicted and tel is not None:
-                                on_evict_np(tel)
+                            if budget_evicted:
+                                if tel is not None:
+                                    on_evict_np(tel)
+                                if tl is not None:
+                                    tl_on_evict_np(tl, now)
                         n_alive -= 1
                         if lb_state is not None:
                             # effective (wall-clock-equivalent) duration
@@ -304,10 +345,18 @@ def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload,
             # provisioned-time integral over [now, t_i] at the current
             # n_on (decisions only take effect at arrival boundaries)
             prov_time += (t_i - now) * float(n_on)
+        if tl is not None:
+            # windowed provisioned core-seconds over the same interval,
+            # credited to the interval-start window (same operand order
+            # as the scan engine: (dt × n_prov) × C)
+            n_prov = float(n_on) if auto_on else float(W)
+            tl_on_prov_np(tl, now, (t_i - now) * n_prov * float(C))
         advance(t_i - now)
         now = t_i  # guard drift
         active = np.array([len(tasks[w]) for w in range(W)])
         if late:
+            if tl is not None:
+                tl_on_arrival_np(tl, t_i, W)
             if active.min() < C:
                 start_task(int(np.argmin(active)), i, True)
             else:
@@ -323,12 +372,30 @@ def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload,
                 # same gating (and decide ops) as the scan engine
                 window = tel["slow_hist"] - snap
                 if t_i >= cool_until and int(window.sum()) >= 1:
-                    n_on = int(auto_decide(n_on, window))
+                    n_new = int(auto_decide(n_on, window))
+                    if tl is not None and n_new != n_on:
+                        # log the level change with the sensor p99 the
+                        # controller read off the same window
+                        tl_event_np(tl, t_i, EV_AUTOSCALE, n_new,
+                                    sensor_p99_np(window))
+                    n_on = n_new
                     cool_until = t_i + auto_cool
                     snap = tel["slow_hist"].copy()
                 # deprovisioned workers are masked slot-full at
                 # selection; their running tasks drain normally
                 sel_active = np.where(np.arange(W) < n_on, active, S)
+            if tl is not None:
+                # post-decision level, last write wins in the window
+                tl_on_arrival_np(tl, t_i, n_on if auto_on else W)
+                if flip_on:
+                    # the hybrid balancer packs while any selectable
+                    # worker still has a free core (hermes_score's
+                    # low_load read on the masked active vector)
+                    new_mode = int(bool((sel_active < C).any()))
+                    if new_mode != int(tl["mode"]):
+                        tl_event_np(tl, t_i, EV_MODE_FLIP, new_mode,
+                                    float("nan"))
+                    tl["mode"] = np.int32(new_mode)
             if lb_state is not None:
                 w, lb_state = res.select(lb_state, sel_active, wcol, f,
                                          wl.func_home, float(wl.u_lb[i]), i)
@@ -339,6 +406,8 @@ def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload,
                 rejected[i] = True
                 if tel is not None:
                     on_reject_np(tel)
+                if tl is not None:
+                    tl_on_reject_np(tl, t_i)
             else:
                 start_task(w, i, True)
         if chunk_hook is not None and chunk_size and \
@@ -358,12 +427,17 @@ def simulate_ref(policy: PolicySpec, cluster: ClusterCfg, wl: Workload,
         prov_core_s = prov_time * C
     else:
         prov_core_s = now * W * C
+    if tl is not None:
+        n_prov = float(n_on) if auto_on else float(W)
+        tl_on_prov_np(tl, t_last, (now - t_last) * n_prov * float(C))
     return SimResult(response=response, cold=cold, rejected=rejected,
                      worker=worker_of, server_time=server_time,
                      core_time=core_time, end_time=now,
                      telemetry=None if tel is None
                      else TelemetryResult.from_state(tel, cfg=telemetry),
-                     prov_core_s=prov_core_s)
+                     prov_core_s=prov_core_s,
+                     timeline=None if tl is None
+                     else TimelineResult.from_state(tl, cfg=timeline))
 
 
 def simulate_ref_chunks(policy: PolicySpec, cluster: ClusterCfg,

@@ -99,12 +99,16 @@ from repro.fleet import STATIC as _AUTO_STATIC, resolve_fleet
 from repro.lifecycle import resolve_lifecycle
 from repro.policy import default_backend, resolve
 from repro.telemetry import engine as tel_engine
+from repro.telemetry import timeline_engine as tln_engine
 from repro.telemetry.spans import get_tracer
 from repro.telemetry.state import (TelemetryCfg, TelemetryResult,
                                    warmup_cutoff)
+from repro.telemetry.timeline import (EV_AUTOSCALE, EV_MODE_FLIP,
+                                      TimelineCfg, TimelineResult,
+                                      validate_timeline)
 
 from .cluster import ClusterCfg
-from .taxonomy import PolicySpec
+from .taxonomy import LoadBalance, PolicySpec
 from .workload import Workload, WorkloadBatch, stack_workloads
 
 EPS = 1e-9
@@ -140,6 +144,11 @@ class SimState(NamedTuple):
     task_fn: Any = ()       # [W, S] i32: occupant's function id
     task_svc: Any = ()      # [W, S] f64: occupant's nominal service
     stream: Any = ()        # exact online counters dict (see streaming)
+    # Windowed time-series flight recorder (repro.telemetry.timeline).
+    # () when disabled; otherwise a dict of fixed-[K]-window planes
+    # whose shapes never depend on the horizon, so the same carry hands
+    # across streaming chunk boundaries unchanged.
+    tl: Any = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -156,6 +165,8 @@ class SimOutput:
     #: provisioned core-seconds: the autoscaler's ``n_on × cores`` time
     #: integral, or ``end_time × total_cores`` for a fixed fleet
     prov_core_s: float = 0.0
+    #: windowed flight-recorder planes (None unless ``timeline=`` passed)
+    timeline: TimelineResult | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -173,6 +184,8 @@ class BatchSimOutput:
     telemetry: TelemetryResult | None = None
     #: provisioned core-seconds per replication ([R] f64)
     prov_core_s: np.ndarray | None = None
+    #: batched flight-recorder planes, leading axis R (None unless enabled)
+    timeline: TimelineResult | None = None
 
     @property
     def n_reps(self) -> int:
@@ -189,7 +202,9 @@ class BatchSimOutput:
             telemetry=None if self.telemetry is None
             else self.telemetry.rep(r),
             prov_core_s=0.0 if self.prov_core_s is None
-            else float(self.prov_core_s[r]))
+            else float(self.prov_core_s[r]),
+            timeline=None if self.timeline is None
+            else self.timeline.rep(r))
 
     def __getitem__(self, sl: slice) -> "BatchSimOutput":
         """A sub-batch over a slice of the replication axis."""
@@ -201,13 +216,16 @@ class BatchSimOutput:
             telemetry=None if self.telemetry is None
             else self.telemetry[sl],
             prov_core_s=None if self.prov_core_s is None
-            else self.prov_core_s[sl])
+            else self.prov_core_s[sl],
+            timeline=None if self.timeline is None
+            else self.timeline[sl])
 
 
 def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
                   n_arrivals: int, n_functions: int,
                   backend: str = "jax",
                   telemetry: TelemetryCfg | None = None,
+                  timeline: TimelineCfg | None = None,
                   stream: bool = False):
     """Build the raw (un-jitted) scan engine for (policy, cluster, N, F).
 
@@ -286,6 +304,23 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
             tel_cutoff = warmup_cutoff(N, telemetry)
         # stream mode: N is the chunk length, not the horizon — the
         # global warmup index rides in the carry (SimState.stream)
+    # windowed time-series flight recorder (repro.telemetry.timeline).
+    # tl_on python-gates every update exactly like tel_on — the default
+    # timeline=None traces the bit-identical pre-timeline program.  The
+    # plane is independent of tel_on (a timeline without run-aggregate
+    # telemetry is valid; the autoscaler separately mandates telemetry).
+    tl_on = timeline is not None
+    if tl_on:
+        validate_timeline(timeline)
+        tl_edges = tel_engine.edges_for_trace()
+        TL_K = int(timeline.n_windows)
+        # static trace-time constants (conversions hoisted out of the
+        # traced bodies — HOT001-clean)
+        TL_CORES = float(C)
+        TL_WS_CFG = float(timeline.window_s)
+        # hybrid-balancer pack<->spread flips only exist for Hermes
+        # under early binding (late binding has no balancer select)
+        flip_on = (not late) and policy.balance == LoadBalance.HYBRID
     # heterogeneous fleet + autoscaling (repro.fleet).  fleet_on gates
     # the speed scaling, auto_on the active-worker control loop; the
     # disabled default traces the exact pre-fleet program.
@@ -375,6 +410,11 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
             # one placement record per accepted arrival (rejections are
             # counted in step; place is never reached for them)
             tel = tel_engine.on_place(tel, w, is_cold, need_evict)
+        tl = st.tl
+        if tl_on:
+            # credited to the window of the dispatch time (= the
+            # arrival time under early binding)
+            tl = tln_engine.on_place(tl, st.now, is_cold, need_evict)
         st = st._replace(
             remaining=st.remaining.at[w, slot].set(svc),
             task_arr=st.task_arr.at[w, slot].set(t_arr),
@@ -382,6 +422,7 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
             warm=warm,
             life=life,
             tel=tel,
+            tl=tl,
         )
         if stream:
             # per-slot mirrors let the completion drain observe the
@@ -458,6 +499,13 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
                 # server_time/core_time just above
                 tel = tel_engine.on_advance(tel, tau, n_w > 0, n_w,
                                             st.q_tail - st.q_head)
+            tl = st.tl
+            if tl_on:
+                # same integrals, windowed; the whole tau slice credits
+                # the window of its start (left-start convention —
+                # identical in the oracle and serving platform)
+                tl = tln_engine.on_advance(tl, st.now, tau, n_w > 0,
+                                           st.q_tail - st.q_head)
             now = st.now + tau
             remaining = st.remaining - rates * tau
             # complete the argmin slot only (idx N / col F are scratch);
@@ -492,6 +540,12 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
                 tel = tel_engine.on_complete(
                     tel, resp_val, svc_nom, tid, completed,
                     cutoff_op, tel_edges)
+            if tl_on:
+                # windowed coarse sketches take ALL completions (no
+                # warmup cutoff — the recorder shows the ramp), in the
+                # window of the completion time
+                tl = tln_engine.on_complete(tl, now, resp_val, svc_nom,
+                                            completed, tl_edges)
             w_pad = jnp.where(completed, wj, 0)
             f_pad = jnp.where(completed, f_j, F)
             life = st.life
@@ -524,6 +578,8 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
                         -over.astype(jnp.int32))
                     if tel_on:
                         tel = tel_engine.on_evict(tel, over)
+                    if tl_on:
+                        tl = tln_engine.on_evict(tl, now, over)
             else:
                 warm = st.warm.at[w_pad, f_pad].add(
                     completed.astype(jnp.int32))
@@ -554,7 +610,7 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
                 remaining=remaining, task_idx=task_idx,
                 warm=warm, now=now, resp=resp,
                 server_time=server_time, core_time=core_time, lb=lb,
-                life=life, tel=tel)
+                life=life, tel=tel, tl=tl)
             if stream:
                 # exact online counters: the long path never holds a
                 # per-task slowdown array, but the mean response /
@@ -592,6 +648,14 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
             st = st._replace(fleet=dict(fl, prov_time=(
                 fl["prov_time"]
                 + (t_i - st.now) * fl["n_on"].astype(jnp.float64))))
+        if tl_on:
+            # windowed provisioned core-seconds over the same interval,
+            # credited to the interval-start window; without an
+            # autoscaler the whole fleet is provisioned throughout
+            n_prov = st.fleet["n_on"].astype(jnp.float64) if auto_on \
+                else jnp.float64(W)
+            st = st._replace(tl=tln_engine.on_prov(
+                st.tl, st.now, (t_i - st.now) * n_prov * TL_CORES))
         st = advance(st, t_i - st.now, funcs, services, arrivals)
         st = st._replace(now=t_i)
         active = (st.task_idx >= 0).sum(axis=1).astype(jnp.int32)
@@ -629,6 +693,30 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
             sel_active = jnp.where(
                 jnp.arange(W, dtype=jnp.int32) < n_on, active,
                 jnp.int32(S))
+            if tl_on:
+                # log the decision just taken (only when it changed the
+                # level), with the sensor p99 the controller read off
+                # the same window — fl still holds the pre-decision
+                # n_on here
+                changed = do & (n_new != fl["n_on"])
+                st = st._replace(tl=tln_engine.on_event(
+                    st.tl, changed, t_i, EV_AUTOSCALE, n_new,
+                    tln_engine.sensor_p99(window, tl_edges)))
+        if tl_on:
+            # arrival count + last-write-wins active-worker level, in
+            # the arrival's window (post-decision, so the plane shows
+            # the trajectory the decision log replays)
+            st = st._replace(tl=tln_engine.on_arrival(
+                st.tl, t_i, n_on if auto_on else jnp.int32(W)))
+            if flip_on:
+                # the hybrid balancer packs while any active worker
+                # still has a free core (hermes_score's low_load read
+                # on the same masked active vector select sees)
+                new_mode = (sel_active < C).any().astype(jnp.int32)
+                st = st._replace(tl=tln_engine.on_event(
+                    st.tl, new_mode != st.tl["mode"], t_i,
+                    EV_MODE_FLIP, new_mode, jnp.float64(np.nan)))
+                st = st._replace(tl=dict(st.tl, mode=new_mode))
         if stateful:
             w, lb = select(st.lb, sel_active, wcol, f_i, homes,
                            u_i, tid)
@@ -639,6 +727,8 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
             st = st._replace(rejected=st.rejected.at[tid].set(w < 0))
         if tel_on:
             st = st._replace(tel=tel_engine.on_reject(st.tel, w < 0))
+        if tl_on:
+            st = st._replace(tl=tln_engine.on_reject(st.tl, t_i, w < 0))
         if stream:
             st, is_cold = lax.cond(
                 w >= 0,
@@ -678,8 +768,17 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
         def step(st: SimState, xs, funcs, services, arrivals, homes):
             i, t_i, f_i, u_i = xs
             if late:
+                if tl_on:
+                    # fixed fleet: provisioned core-seconds accrue over
+                    # the inter-arrival gap at the full W
+                    st = st._replace(tl=tln_engine.on_prov(
+                        st.tl, st.now,
+                        (t_i - st.now) * jnp.float64(W) * TL_CORES))
                 st = advance(st, t_i - st.now, funcs, services, arrivals)
                 st = st._replace(now=t_i)
+                if tl_on:
+                    st = st._replace(tl=tln_engine.on_arrival(
+                        st.tl, t_i, jnp.int32(W)))
                 active = (st.task_idx >= 0).sum(axis=1).astype(jnp.int32)
 
                 def do_place(st):
@@ -697,8 +796,9 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
             return st, ()
 
     def init_planes():
-        """Initial lb/life/tel/fleet carry pytrees (shared between the
-        monolithic ``run`` and the stream ``init`` — identical bits)."""
+        """Initial lb/life/tel/fleet/tl carry pytrees (shared between
+        the monolithic ``run`` and the stream ``init`` — identical
+        bits)."""
         lb0 = ()
         if stateful:
             lb0 = jax.tree_util.tree_map(jnp.asarray,
@@ -736,10 +836,11 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
                 # decision window is slow_hist - snap
                 "snap": jnp.zeros((N_BINS,), dtype=jnp.int64),
             }
-        return lb0, life0, tel0, fleet0
+        tl0 = tln_engine.init_state(W, timeline) if tl_on else ()
+        return lb0, life0, tel0, fleet0, tl0
 
     def run(arrivals, funcs, services, u_lb, homes):
-        lb0, life0, tel0, fleet0 = init_planes()
+        lb0, life0, tel0, fleet0, tl0 = init_planes()
         st = SimState(
             remaining=jnp.full((W, S), jnp.inf, dtype=jnp.float64),
             task_arr=jnp.zeros((W, S), dtype=jnp.float64),
@@ -753,8 +854,16 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
             rejected=jnp.zeros((N + 1,), dtype=bool),
             worker_of=jnp.full((N + 1,), -1, dtype=jnp.int32),
             server_time=jnp.float64(0.0), core_time=jnp.float64(0.0),
-            lb=lb0, life=life0, tel=tel0, fleet=fleet0,
+            lb=lb0, life=life0, tel=tel0, fleet=fleet0, tl=tl0,
         )
+        if tl_on:
+            # runtime window width: the configured constant, or the
+            # horizon (last arrival) over K — one f64 division of the
+            # same operands the numpy oracle divides, so window
+            # assignment is bitwise identical across engines
+            ws = jnp.float64(TL_WS_CFG) if TL_WS_CFG > 0.0 \
+                else arrivals[N - 1] / jnp.float64(TL_K)
+            st = st._replace(tl=dict(st.tl, window_s=ws))
         xs = (jnp.arange(N, dtype=jnp.int64), arrivals, funcs, u_lb)
         st, _ = lax.scan(
             partial(step, funcs=funcs, services=services, arrivals=arrivals,
@@ -768,6 +877,11 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
             st = st._replace(fleet=dict(fl, prov_time=(
                 fl["prov_time"]
                 + (st.now - t_last) * fl["n_on"].astype(jnp.float64))))
+        if tl_on:
+            n_prov = st.fleet["n_on"].astype(jnp.float64) if auto_on \
+                else jnp.float64(W)
+            st = st._replace(tl=tln_engine.on_prov(
+                st.tl, t_last, (st.now - t_last) * n_prov * TL_CORES))
         return st
 
     if not stream:
@@ -775,13 +889,17 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
 
     # ---- stream mode: horizon-independent chunk engine ----------------
 
-    def init(n_reps: int, cutoff: int) -> SimState:
+    def init(n_reps: int, cutoff: int, window_s=None) -> SimState:
         """Initial batched carry (leading ``n_reps`` axis, eager).
 
         ``cutoff`` is the *global* post-warmup index — it rides in the
         carry so one compiled chunk program serves any horizon.
+        ``window_s`` (timeline engines only) is the per-replication
+        ``[R]`` runtime window width — computed host-side by
+        ``simulate_stream`` from each replication's horizon, exactly as
+        the monolithic engine computes it in-trace.
         """
-        lb0, life0, tel0, fleet0 = init_planes()
+        lb0, life0, tel0, fleet0, tl0 = init_planes()
         st = SimState(
             remaining=jnp.full((W, S), jnp.inf, dtype=jnp.float64),
             task_arr=jnp.zeros((W, S), dtype=jnp.float64),
@@ -791,7 +909,7 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
             now=jnp.float64(0.0),
             resp=(), cold=(), rejected=(), worker_of=(),
             server_time=jnp.float64(0.0), core_time=jnp.float64(0.0),
-            lb=lb0, life=life0, tel=tel0, fleet=fleet0,
+            lb=lb0, life=life0, tel=tel0, fleet=fleet0, tl=tl0,
             task_fn=jnp.zeros((W, S), dtype=jnp.int32),
             task_svc=jnp.zeros((W, S), dtype=jnp.float64),
             stream={
@@ -800,8 +918,12 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
                 "resp_sum": jnp.float64(0.0),
                 "slow_sum": jnp.float64(0.0),
             })
-        return jax.tree_util.tree_map(
+        st = jax.tree_util.tree_map(
             lambda x: jnp.tile(x[None], (n_reps,) + (1,) * x.ndim), st)
+        if tl_on and window_s is not None:
+            st = st._replace(tl=dict(st.tl, window_s=jnp.asarray(
+                window_s, dtype=jnp.float64)))
+        return st
 
     def run_chunk(st, gids, valid, arrivals, funcs, services, u_lb,
                   homes):
@@ -824,6 +946,11 @@ def _build_engine(policy: PolicySpec, cluster: ClusterCfg,
             st = st._replace(fleet=dict(fl, prov_time=(
                 fl["prov_time"]
                 + (st.now - t_last) * fl["n_on"].astype(jnp.float64))))
+        if tl_on:
+            n_prov = st.fleet["n_on"].astype(jnp.float64) if auto_on \
+                else jnp.float64(W)
+            st = st._replace(tl=tln_engine.on_prov(
+                st.tl, t_last, (st.now - t_last) * n_prov * TL_CORES))
         return st
 
     return init, run_chunk, run_drain
@@ -871,16 +998,20 @@ def _cache_key(policy: PolicySpec, cluster: ClusterCfg,
                n_arrivals: int, n_functions: int, batched: bool,
                backend: str,
                telemetry: TelemetryCfg | None = None,
-               chunk: int | None = None) -> tuple:
+               chunk: int | None = None,
+               timeline: TimelineCfg | None = None) -> tuple:
     # telemetry-on engines trace a different program, so the cfg is part
     # of the key (None = the golden pre-telemetry program).  ``chunk``
     # marks a streaming chunk engine (the chunk size IS the key's shape
     # axis — n_arrivals then holds the chunk length, and one compiled
-    # program serves any horizon); None = monolithic.
+    # program serves any horizon); None = monolithic.  ``timeline``
+    # likewise gates a different traced program (the flight-recorder
+    # plane), so its cfg joins the key as a trailing element.
     return (tuple(policy), tuple(cluster), int(n_arrivals),
             int(n_functions), batched, backend,
             None if telemetry is None else tuple(telemetry),
-            None if chunk is None else int(chunk))
+            None if chunk is None else int(chunk),
+            None if timeline is None else tuple(timeline))
 
 
 def _cache_get_or_build(key: tuple, build):
@@ -942,7 +1073,8 @@ def clear_engine_cache() -> None:
 
 def _get_engine(policy: PolicySpec, cluster: ClusterCfg,
                 n_arrivals: int, n_functions: int, batched: bool,
-                backend: str, telemetry: TelemetryCfg | None):
+                backend: str, telemetry: TelemetryCfg | None,
+                timeline: TimelineCfg | None = None):
     """Cached engine lookup; returns ``(engine, fresh)``.
 
     ``fresh`` marks a cache-miss build — the next dispatch through the
@@ -953,9 +1085,10 @@ def _get_engine(policy: PolicySpec, cluster: ClusterCfg,
     cluster.validate()   # named errors instead of deep broadcast failures
     backend = _resolve_backend(policy, backend)
     key = _cache_key(policy, cluster, n_arrivals, n_functions, batched,
-                     backend, telemetry)
+                     backend, telemetry, timeline=timeline)
     raw = lambda: _build_engine(policy, cluster, n_arrivals, n_functions,
-                                backend, telemetry=telemetry)
+                                backend, telemetry=telemetry,
+                                timeline=timeline)
     if batched:
         return _cache_get_or_build(key, lambda: jax.jit(jax.vmap(raw())))
     return _cache_get_or_build(key, lambda: jax.jit(raw()))
@@ -963,7 +1096,8 @@ def _get_engine(policy: PolicySpec, cluster: ClusterCfg,
 
 def _get_stream_engine(policy: PolicySpec, cluster: ClusterCfg,
                        chunk: int, n_functions: int, backend: str,
-                       telemetry: TelemetryCfg | None):
+                       telemetry: TelemetryCfg | None,
+                       timeline: TimelineCfg | None = None):
     """Cached streaming chunk-engine lookup.
 
     Returns ``((init, step_fn, drain_fn), fresh)``.  ``step_fn`` is the
@@ -978,12 +1112,13 @@ def _get_stream_engine(policy: PolicySpec, cluster: ClusterCfg,
     cluster.validate()
     backend = _resolve_backend(policy, backend)
     key = _cache_key(policy, cluster, int(chunk), n_functions, True,
-                     backend, telemetry, chunk=int(chunk))
+                     backend, telemetry, chunk=int(chunk),
+                     timeline=timeline)
 
     def build():
         init, run_chunk, run_drain = _build_engine(
             policy, cluster, int(chunk), n_functions, backend,
-            telemetry=telemetry, stream=True)
+            telemetry=telemetry, timeline=timeline, stream=True)
         # carry batched over reps; gids/valid unbatched so the padding
         # cond keeps a scalar predicate (a real branch, not a select)
         step_fn = jax.jit(
@@ -998,7 +1133,8 @@ def _get_stream_engine(policy: PolicySpec, cluster: ClusterCfg,
 def build_simulator(policy: PolicySpec, cluster: ClusterCfg, *,
                     n_arrivals: int, n_functions: int,
                     backend: str = "auto",
-                    telemetry: TelemetryCfg | None = None):
+                    telemetry: TelemetryCfg | None = None,
+                    timeline: TimelineCfg | None = None):
     """Jitted single-workload simulator, memoized process-wide.
 
     Repeated calls with an equal key return the *same* compiled callable, so
@@ -1010,17 +1146,19 @@ def build_simulator(policy: PolicySpec, cluster: ClusterCfg, *,
     :func:`set_engine_cache_capacity`); a key evicted by newer shapes is
     transparently rebuilt on the next call.  ``telemetry`` selects the
     streaming-metrics variant (a distinct cache entry — the carry shape
-    differs).
+    differs); ``timeline`` likewise selects the windowed flight-recorder
+    variant.
     """
     fn, _ = _get_engine(policy, cluster, n_arrivals, n_functions, False,
-                        backend, telemetry)
+                        backend, telemetry, timeline)
     return fn
 
 
 def build_batch_simulator(policy: PolicySpec, cluster: ClusterCfg, *,
                           n_arrivals: int, n_functions: int,
                           backend: str = "auto",
-                          telemetry: TelemetryCfg | None = None):
+                          telemetry: TelemetryCfg | None = None,
+                          timeline: TimelineCfg | None = None):
     """Jitted ``vmap``-ed simulator over a leading replication axis.
 
     All five inputs carry a leading ``R`` axis (``arrivals/funcs/services/
@@ -1032,7 +1170,7 @@ def build_batch_simulator(policy: PolicySpec, cluster: ClusterCfg, *,
     replication per arrival.
     """
     fn, _ = _get_engine(policy, cluster, n_arrivals, n_functions, True,
-                        backend, telemetry)
+                        backend, telemetry, timeline)
     return fn
 
 
@@ -1056,16 +1194,20 @@ def _prov_core_s(st, cluster: ClusterCfg):
 
 def simulate(policy: PolicySpec, cluster: ClusterCfg, wl: Workload,
              *, backend: str = "auto",
-             telemetry: TelemetryCfg | None = None) -> SimOutput:
+             telemetry: TelemetryCfg | None = None,
+             timeline: TimelineCfg | None = None) -> SimOutput:
     """Run the JAX simulator on a workload; returns host-side results.
 
     With ``telemetry`` set, the returned output carries a
     :class:`~repro.telemetry.TelemetryResult` accumulated inside the
     scan (histogram percentile sketches, counters, occupancy
-    integrals).
+    integrals).  With ``timeline`` set, it additionally carries a
+    :class:`~repro.telemetry.TimelineResult` — the windowed
+    flight-recorder plane (per-window counters/sketches/integrals and
+    the bounded decision-event log).
     """
     run, fresh = _get_engine(policy, cluster, wl.n, wl.n_functions,
-                             False, backend, telemetry)
+                             False, backend, telemetry, timeline)
     tr = get_tracer()
     with tr.span("engine.first_run" if fresh else "engine.run",
                  policy=str(policy), backend=backend, n=wl.n):
@@ -1085,12 +1227,15 @@ def simulate(policy: PolicySpec, cluster: ClusterCfg, wl: Workload,
         telemetry=None if telemetry is None else TelemetryResult.from_state(
             jax.tree_util.tree_map(np.asarray, st.tel), cfg=telemetry),
         prov_core_s=float(_prov_core_s(st, cluster)),
+        timeline=None if timeline is None else TimelineResult.from_state(
+            jax.tree_util.tree_map(np.asarray, st.tl), cfg=timeline),
     )
 
 
 def simulate_many(policy: PolicySpec, cluster: ClusterCfg,
                   workloads, *, backend: str = "auto",
-                  telemetry: TelemetryCfg | None = None
+                  telemetry: TelemetryCfg | None = None,
+                  timeline: TimelineCfg | None = None
                   ) -> BatchSimOutput:
     """Run ``R`` stacked workload replications through one compiled program.
 
@@ -1107,7 +1252,7 @@ def simulate_many(policy: PolicySpec, cluster: ClusterCfg,
     wb = workloads if isinstance(workloads, WorkloadBatch) \
         else stack_workloads(workloads)
     run, fresh = _get_engine(policy, cluster, wb.n, wb.n_functions,
-                             True, backend, telemetry)
+                             True, backend, telemetry, timeline)
     tr = get_tracer()
     with tr.span("engine.first_run" if fresh else "engine.run",
                  policy=str(policy), backend=backend, n=wb.n,
@@ -1128,4 +1273,6 @@ def simulate_many(policy: PolicySpec, cluster: ClusterCfg,
         telemetry=None if telemetry is None else TelemetryResult.from_state(
             jax.tree_util.tree_map(np.asarray, st.tel), cfg=telemetry),
         prov_core_s=np.asarray(_prov_core_s(st, cluster), dtype=np.float64),
+        timeline=None if timeline is None else TimelineResult.from_state(
+            jax.tree_util.tree_map(np.asarray, st.tl), cfg=timeline),
     )

@@ -44,6 +44,7 @@ import jax.numpy as jnp
 from repro.telemetry.spans import get_tracer
 from repro.telemetry.state import (TelemetryCfg, TelemetryResult,
                                    warmup_cutoff)
+from repro.telemetry.timeline import TimelineCfg, TimelineResult
 
 from .cluster import ClusterCfg
 from .simulator import SimState, _get_stream_engine, _prov_core_s
@@ -90,6 +91,11 @@ class StreamOutput:
     #: the post-drain device carry (None unless ``keep_final_state``;
     #: used by the bit-equality REPRO-CHECK gates)
     final_state: SimState | None = None
+    #: windowed flight recorder ([R, ...] planes; None unless
+    #: ``timeline=`` was passed) — fixed-shape virtual-time windows, so
+    #: it rides the carry across chunk boundaries and is bit-equal to
+    #: the monolithic engine's for any chunk size
+    timeline: TimelineResult | None = None
 
     @property
     def n_reps(self) -> int:
@@ -100,6 +106,7 @@ def simulate_stream(policy: PolicySpec, cluster: ClusterCfg,
                     workloads, *, chunk_size: int,
                     backend: str = "auto",
                     telemetry: TelemetryCfg | None = None,
+                    timeline: TimelineCfg | None = None,
                     collect_outputs: bool = False,
                     mesh=None,
                     keep_final_state: bool = False,
@@ -133,8 +140,20 @@ def simulate_stream(policy: PolicySpec, cluster: ClusterCfg,
     k = int(chunk_size)
     N, F, R = wb.n, wb.n_functions, wb.n_reps
     (init, step_fn, drain_fn), fresh = _get_stream_engine(
-        policy, cluster, k, F, backend, telemetry)
+        policy, cluster, k, F, backend, telemetry, timeline)
     cutoff = warmup_cutoff(N, telemetry)
+    # the runtime window width is horizon-dependent (auto = horizon/K),
+    # so it is computed host-side per replication and written into the
+    # carry — one f64 division with the same operands as the monolithic
+    # engine's in-trace arrivals[N-1]/K, hence bitwise identical
+    window_s = None
+    if timeline is not None:
+        if float(timeline.window_s) > 0.0:
+            window_s = np.full(R, float(timeline.window_s),
+                               dtype=np.float64)
+        else:
+            window_s = np.asarray(wb.arrival[:, -1], dtype=np.float64) \
+                / np.float64(int(timeline.n_windows))
     n_chunks = -(-N // k)
     pad = n_chunks * k - N
 
@@ -163,7 +182,7 @@ def simulate_stream(policy: PolicySpec, cluster: ClusterCfg,
         shard = lambda tree: shard_reps(tree, mesh)
         homes = shard(homes)
 
-    st = init(R, cutoff)
+    st = init(R, cutoff, window_s)
     if shard is not None:
         st = shard(st)
     outs: list[tuple] = []
@@ -207,7 +226,9 @@ def simulate_stream(policy: PolicySpec, cluster: ClusterCfg,
                                dtype=np.float64),
         n_arrivals=N, chunk_size=k, n_chunks=n_chunks,
         cold=cold, rejected=rej, worker=wkr,
-        final_state=st if keep_final_state else None)
+        final_state=st if keep_final_state else None,
+        timeline=None if timeline is None else TimelineResult.from_state(
+            jax.tree_util.tree_map(np.asarray, st.tl), cfg=timeline))
 
 
 def final_states_equal(a: SimState, b: SimState

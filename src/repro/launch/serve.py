@@ -119,6 +119,13 @@ def main() -> None:
     ap.add_argument("--trace-out", metavar="PATH", default=None,
                     help="export a Perfetto-loadable Chrome trace JSON "
                          "of the run (implies --telemetry)")
+    ap.add_argument("--timeline-out", metavar="PATH", default=None,
+                    help="record the windowed flight-recorder timeline "
+                         "(repro.telemetry.timeline) and export it: "
+                         "per-window CSV at PATH plus an OpenMetrics "
+                         "text sibling at PATH.om; with --trace-out "
+                         "the windows also land in the trace JSON as "
+                         "Perfetto counter tracks")
     args = ap.parse_args()
 
     if args.backend == "models":
@@ -192,9 +199,14 @@ def main() -> None:
         tel_cfg = TelemetryCfg()
         if args.telemetry or args.trace_out:   # span tracing stays opt-in
             tracer = configure_tracing(True)
+    tl_cfg = None
+    if args.timeline_out:
+        from repro.telemetry import TimelineCfg
+        tl_cfg = TimelineCfg()
     cfg = ServeCfg(cluster=cl, cold_start_s=args.cold_start)
     sc = ServingCluster(cfg, parse_policy(args.policy),
-                        use_kernel=args.use_kernel, telemetry=tel_cfg)
+                        use_kernel=args.use_kernel, telemetry=tel_cfg,
+                        timeline=tl_cfg)
     if tracer is not None:
         with tracer.span("serve.run", policy=args.policy,
                          workload=wname, load=args.load, n=args.n):
@@ -226,6 +238,16 @@ def main() -> None:
               f"cold={t['n_cold']} warm={t['n_warm']} "
               f"evict={t['n_evict']} reject={t['n_reject']}  "
               f"busy={t['busy_time_s']:.1f}s")
+    if out.timeline is not None:
+        ts = out.timeline.summary()
+        csv_p = out.timeline.write_csv(args.timeline_out)
+        om_p = out.timeline.write_openmetrics(args.timeline_out + ".om")
+        if tracer is not None:
+            out.timeline.emit_counters(tracer)
+        print(f"  timeline     : {ts['n_windows']} windows of "
+              f"{ts['window_s']:.2f}s, peak arrivals="
+              f"{ts['arrivals_peak']}, {ts['n_events']} decision "
+              f"events -> {csv_p} + {om_p}")
     if args.trace_out:
         tracer.export(args.trace_out)
         print(f"  trace        : {args.trace_out} "

@@ -26,7 +26,7 @@ import math
 import numpy as np
 
 from repro.core.cluster import ClusterCfg
-from repro.core.taxonomy import PolicySpec, HERMES
+from repro.core.taxonomy import LoadBalance, PolicySpec, HERMES
 from repro.core.workload import Workload
 from repro.fleet import resolve_fleet
 from repro.lifecycle import LifecycleRuntime, resolve_lifecycle
@@ -36,6 +36,14 @@ from repro.telemetry.state import (TelemetryCfg, TelemetryResult, init_np,
                                    on_advance_np, on_complete_np,
                                    on_evict_np, on_place_np, on_reject_np,
                                    warmup_cutoff)
+from repro.telemetry.timeline import (EV_AUTOSCALE, EV_MODE_FLIP,
+                                      TimelineCfg, TimelineResult,
+                                      auto_window_s, init_tl_np,
+                                      sensor_p99_np, tl_event_np,
+                                      tl_on_advance_np, tl_on_arrival_np,
+                                      tl_on_complete_np, tl_on_evict_np,
+                                      tl_on_place_np, tl_on_prov_np,
+                                      tl_on_reject_np, validate_timeline)
 
 EPS = 1e-9
 
@@ -105,6 +113,9 @@ class ServeResult:
     #: provisioned core-seconds: the autoscaler's ``n_on × cores`` time
     #: integral, or ``end_time × total_cores`` for a fixed fleet
     prov_core_s: float = 0.0
+    #: windowed flight recorder (None unless the cluster was built with
+    #: a TimelineCfg) — same layout as the simulators' timeline plane
+    timeline: TimelineResult | None = None
 
 
 class ServingCluster:
@@ -112,11 +123,14 @@ class ServingCluster:
 
     def __init__(self, cfg: ServeCfg, policy: PolicySpec = HERMES,
                  use_kernel: bool = False,
-                 telemetry: TelemetryCfg | None = None):
+                 telemetry: TelemetryCfg | None = None,
+                 timeline: TimelineCfg | None = None):
         self.cfg = cfg
         self.policy = policy
         self.use_kernel = use_kernel
         self.telemetry = telemetry
+        self.timeline = validate_timeline(timeline) \
+            if timeline is not None else None
         # numpy-backend resolution drives the virtual-time loop; the
         # balancer's batched kernel (if registered) serves the
         # ``use_kernel`` controller path
@@ -153,6 +167,16 @@ class ServingCluster:
         tel = init_np(W) if self.telemetry is not None else None
         tel_cutoff = warmup_cutoff(N, self.telemetry) \
             if self.telemetry is not None else 0
+        # windowed flight recorder — the simulators' plane-4 layout with
+        # the platform's own event semantics (responses include the
+        # controller latency, migrations count evictions only)
+        tl = None
+        if self.timeline is not None:
+            tl = init_tl_np(W, self.timeline,
+                            auto_window_s(float(wl.arrival[-1]),
+                                          self.timeline))
+        flip_on = tl is not None and not late \
+            and self.policy.balance == LoadBalance.HYBRID
         tracer = get_tracer()
         # heterogeneous fleet (repro.fleet): when ServeCfg.speeds is
         # empty, the fleet's speed vector drives the same per-worker
@@ -235,6 +259,11 @@ class ServingCluster:
                     # a migration's slot-pressure eviction is real even
                     # though the placement itself is not a decision
                     on_evict_np(tel)
+            if tl is not None:
+                if not migration:
+                    tl_on_place_np(tl, now, is_cold, evicted)
+                elif evicted:
+                    tl_on_evict_np(tl, now)
             cold_s = cfg.cold_start_s if life is None \
                 else life.cold_cost(f, cfg.cold_start_s)
             if life is not None:
@@ -320,6 +349,11 @@ class ServingCluster:
                         np.array([bool(tasks[w]) for w in range(W)]),
                         np.array([len(tasks[w]) for w in range(W)]),
                         len(queue))
+                if tl is not None:
+                    tl_on_advance_np(
+                        tl, now, tau,
+                        np.array([bool(tasks[w]) for w in range(W)]),
+                        len(queue))
                 now += tau
                 dt_left -= tau
                 for w in range(W):
@@ -335,6 +369,10 @@ class ServingCluster:
                                     tel, response[t.arr_idx],
                                     float(wl.service[t.arr_idx]),
                                     t.arr_idx, tel_cutoff)
+                            if tl is not None:
+                                tl_on_complete_np(
+                                    tl, now, response[t.arr_idx],
+                                    float(wl.service[t.arr_idx]))
                             if tracer.enabled:
                                 # one virtual-time event per task:
                                 # arrival → completion on its worker's
@@ -350,8 +388,11 @@ class ServingCluster:
                             else:
                                 budget_evicted = life.on_complete(
                                     warm, w, t.func, now)
-                                if budget_evicted and tel is not None:
-                                    on_evict_np(tel)
+                                if budget_evicted:
+                                    if tel is not None:
+                                        on_evict_np(tel)
+                                    if tl is not None:
+                                        tl_on_evict_np(tl, now)
                             n_alive -= 1
                             if lb_state is not None:
                                 # observed (speed-scaled) duration under
@@ -383,6 +424,9 @@ class ServingCluster:
                 # provisioned-time integral over [now, t_i] at the
                 # current n_on (decisions land at arrival boundaries)
                 prov_time += (t_i - now) * float(n_on)
+            if tl is not None:
+                n_prov = float(n_on) if auto_on else float(W)
+                tl_on_prov_np(tl, now, (t_i - now) * n_prov * float(C))
             advance(t_i - now)
             now = t_i
             active = np.array([len(tasks[w]) for w in range(W)])
@@ -398,10 +442,22 @@ class ServingCluster:
                 # idiom, composed after it
                 window = tel["slow_hist"] - snap
                 if t_i >= cool_until and int(window.sum()) >= 1:
-                    n_on = int(auto_decide(n_on, window))
+                    n_new = int(auto_decide(n_on, window))
+                    if tl is not None and n_new != n_on:
+                        tl_event_np(tl, t_i, EV_AUTOSCALE, n_new,
+                                    sensor_p99_np(window))
+                    n_on = n_new
                     cool_until = t_i + auto_cool
                     snap = tel["slow_hist"].copy()
                 active = np.where(np.arange(W) < n_on, active, S)
+            if tl is not None:
+                tl_on_arrival_np(tl, t_i, n_on if auto_on else W)
+                if flip_on:
+                    new_mode = int(bool((active < C).any()))
+                    if new_mode != int(tl["mode"]):
+                        tl_event_np(tl, t_i, EV_MODE_FLIP, new_mode,
+                                    float("nan"))
+                    tl["mode"] = np.int32(new_mode)
             if late:
                 if active.min() < C:
                     place(int(np.argmin(active)), i)
@@ -430,6 +486,8 @@ class ServingCluster:
                 rejected[i] = True
                 if tel is not None:
                     on_reject_np(tel)
+                if tl is not None:
+                    tl_on_reject_np(tl, t_i)
             else:
                 place(w, i)
 
@@ -441,6 +499,9 @@ class ServingCluster:
             prov_core_s = prov_time * C
         else:
             prov_core_s = now * W * C
+        if tl is not None:
+            n_prov = float(n_on) if auto_on else float(W)
+            tl_on_prov_np(tl, t_last, (now - t_last) * n_prov * float(C))
         return ServeResult(
             response=response, cold=cold, rejected=rejected,
             worker=worker_of, redispatched=redisp,
@@ -449,4 +510,6 @@ class ServingCluster:
             n_redispatch=int(redisp.sum()),
             telemetry=None if tel is None else TelemetryResult.from_state(
                 tel, cfg=self.telemetry),
-            prov_core_s=prov_core_s)
+            prov_core_s=prov_core_s,
+            timeline=None if tl is None else TimelineResult.from_state(
+                tl, cfg=self.timeline))

@@ -13,9 +13,18 @@ zero-dep nested spans exported as Perfetto-loadable Chrome trace JSON.
 Plane 3 — run provenance (:mod:`~repro.telemetry.manifest`):
 ``RunManifest`` blocks attached to benchmark reports.
 
+Plane 4 — windowed time-series flight recorder
+(:mod:`~repro.telemetry.timeline`; jax twins in
+:mod:`~repro.telemetry.timeline_engine`): an opt-in fixed-``K``-window
+``TimelineCfg`` plane carried next to the telemetry state — per-window
+arrival/cold/evict/reject counts, coarse slowdown/latency sketches,
+busy/queue/provisioned integrals, the active-worker trajectory and a
+bounded autoscaler/mode-flip decision log, exported as CSV /
+OpenMetrics / Perfetto counter tracks.
+
 This package is importable without jax — :mod:`repro.telemetry.engine`
-(the jax twins) is deliberately *not* imported here; the simulator
-imports it directly.
+and :mod:`repro.telemetry.timeline_engine` (the jax twins) are
+deliberately *not* imported here; the simulator imports them directly.
 """
 from .manifest import RunManifest, collect as collect_manifest, \
     wall_split_from_aggregate
@@ -23,16 +32,22 @@ from .sketch import (HIST_HI, HIST_LO, N_BINS, bin_index_np, hist_edges,
                      sketch_count, sketch_percentile)
 from .spans import (Tracer, configure_tracing, get_tracer, set_tracer,
                     span)
-from .state import (TelemetryCfg, TelemetryResult, init_np,
-                    on_advance_np, on_complete_np, on_evict_np,
+from .state import (TelemetryCfg, TelemetryResult, WarmupMismatchError,
+                    init_np, on_advance_np, on_complete_np, on_evict_np,
                     on_place_np, on_reject_np, warmup_cutoff)
+from .timeline import (TimelineCfg, TimelineResult, auto_window_s,
+                       coarse_edges, coarse_group, validate_timeline,
+                       window_index_np)
 
 __all__ = [
     "N_BINS", "HIST_LO", "HIST_HI", "hist_edges", "bin_index_np",
     "sketch_percentile", "sketch_count",
-    "TelemetryCfg", "TelemetryResult", "init_np", "warmup_cutoff",
+    "TelemetryCfg", "TelemetryResult", "WarmupMismatchError", "init_np",
+    "warmup_cutoff",
     "on_place_np", "on_advance_np", "on_complete_np", "on_evict_np",
     "on_reject_np",
+    "TimelineCfg", "TimelineResult", "auto_window_s", "coarse_edges",
+    "coarse_group", "validate_timeline", "window_index_np",
     "Tracer", "configure_tracing", "get_tracer", "set_tracer", "span",
     "RunManifest", "collect_manifest", "wall_split_from_aggregate",
 ]

@@ -35,6 +35,9 @@ class RunManifest:
     args: dict = dataclasses.field(default_factory=dict)
     engine_cache: dict = dataclasses.field(default_factory=dict)
     wall_split: dict = dataclasses.field(default_factory=dict)
+    #: windowed flight-recorder digest (``TimelineResult.summary()``);
+    #: empty when the run had no timeline plane
+    timeline: dict = dataclasses.field(default_factory=dict)
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)

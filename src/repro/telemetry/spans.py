@@ -119,6 +119,22 @@ class Tracer:
             "args": {k: _jsonable(v) for k, v in args.items()},
         })
 
+    def counter_at(self, name: str, ts_s: float, value: float, *,
+                   tid: int = 0) -> None:
+        """A *virtual-time* counter sample (Perfetto counter track).
+
+        Used by the timeline exporter to merge per-window metrics into
+        the span trace: one ``ph: "C"`` sample per window start renders
+        as a stepped counter track under :data:`VIRTUAL_PID`, aligned
+        with the serving platform's task events."""
+        if not self.enabled:
+            return
+        self._events.append({
+            "name": name, "ph": "C", "ts": ts_s * 1e6,
+            "pid": VIRTUAL_PID, "tid": int(tid),
+            "args": {"value": float(value)},
+        })
+
     # ------------------------------------------------------------------
     @property
     def events(self) -> list[dict]:

@@ -46,8 +46,30 @@ class TelemetryCfg(NamedTuple):
     ``warmup_frac`` must match the ``warmup_frac`` later passed to
     ``summarize`` for the sketch population to equal the exact-percentile
     population; the default mirrors ``metrics.summarize``'s default.
+    A mismatch raises :class:`WarmupMismatchError` at summarize time
+    instead of silently skewing the comparison.
     """
     warmup_frac: float = 0.1
+
+
+class WarmupMismatchError(ValueError):
+    """The engine's ``TelemetryCfg.warmup_frac`` differs from the
+    ``warmup_frac`` handed to ``summarize``/``summarize_batch``.
+
+    The sketch population is fixed at engine time (``warmup_cutoff``);
+    summarizing the same run with a different cutoff would compare two
+    different task populations — a silent skew this error makes loud.
+    """
+
+    def __init__(self, engine_frac: float, summarize_frac: float):
+        self.engine_frac = float(engine_frac)
+        self.summarize_frac = float(summarize_frac)
+        super().__init__(
+            f"telemetry sketches were accumulated with warmup_frac="
+            f"{engine_frac!r} but summarize was called with "
+            f"warmup_frac={summarize_frac!r}; the two populations "
+            f"differ — pass the same warmup_frac to both (or rerun the "
+            f"engine with TelemetryCfg(warmup_frac={summarize_frac!r}))")
 
 
 def init_np(n_workers: int) -> dict:
@@ -212,7 +234,8 @@ def warmup_cutoff(n_arrivals: int, cfg: TelemetryCfg) -> int:
 
 
 __all__ = [
-    "TelemetryCfg", "TelemetryResult", "init_np", "warmup_cutoff",
+    "TelemetryCfg", "TelemetryResult", "WarmupMismatchError", "init_np",
+    "warmup_cutoff",
     "on_place_np", "on_advance_np", "on_complete_np", "on_evict_np",
     "on_reject_np", "hist_edges", "N_BINS",
 ]

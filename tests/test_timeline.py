@@ -1,0 +1,241 @@
+"""repro.telemetry.timeline contract tests.
+
+The windowed flight-recorder plane's obligations:
+
+* enabling it never perturbs the simulation (python-gated carry — the
+  timeline-off program is bit-identical);
+* per-window planes are exact: numpy oracle ≡ jax scan (integer planes
+  bitwise, f64 integrals to 1e-9) and chunked stream ≡ monolithic
+  bitwise, including a padded final chunk whose window accumulators
+  merge across the boundary;
+* sketch pooling edge cases (empty windows, single-completion windows)
+  read sanely;
+* the bounded decision log replays the autoscaler's exact ``n_on``
+  trajectory, and truncation is *visible*, never silent;
+* config and warmup contracts fail with named errors;
+* the exporters (CSV, OpenMetrics, Perfetto counter tracks) emit
+  well-formed output.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import ClusterCfg, FleetCfg, parse_policy, synth_workload
+from repro.core.metrics import summarize_batch_sim, summarize_sim
+from repro.core.sim_ref import simulate_ref
+from repro.core.simulator import simulate, simulate_many
+from repro.core.streaming import simulate_stream
+from repro.core.workload import stack_workloads
+from repro.telemetry import (TelemetryCfg, TimelineCfg, TimelineResult,
+                             Tracer, WarmupMismatchError, auto_window_s,
+                             coarse_edges, validate_timeline,
+                             window_index_np)
+from repro.telemetry.timeline import init_tl_np, tl_on_complete_np
+
+CLUSTER = ClusterCfg(n_workers=4, cores=3, capacity_factor=2)
+TL = TimelineCfg(n_windows=16, coarse_bins=96, max_events=64)
+AUTO_CLUSTER = CLUSTER._replace(
+    fleet=FleetCfg(preset="two-gen", autoscale="TARGET_P99",
+                   min_workers=2, target_p99=4.0, cooldown_s=2.0))
+
+_INT = ("mode", "arrivals", "n_cold", "n_warm", "n_evict", "n_reject",
+        "slow_hist", "lat_hist", "n_on", "ev_kind", "ev_val", "ev_count")
+_FLT = ("window_s", "busy_time", "qlen_time", "prov_core", "ev_t",
+        "ev_p99")
+
+
+def _wl(load, n=200, seed=0):
+    return synth_workload(CLUSTER, load, n, n_functions=5,
+                          hot_fraction=0.8, seed=seed)
+
+
+def _assert_tl_equal(a: TimelineResult, b: TimelineResult,
+                     bitwise_float: bool):
+    for name in _INT:
+        assert np.array_equal(getattr(a, name), getattr(b, name)), name
+    for name in _FLT:
+        u = np.asarray(getattr(a, name), dtype=np.float64)
+        v = np.asarray(getattr(b, name), dtype=np.float64)
+        if bitwise_float:
+            assert np.array_equal(u, v, equal_nan=True), name
+        else:
+            np.testing.assert_allclose(u, v, rtol=1e-9, atol=1e-9,
+                                       err_msg=name)
+
+
+# --------------------------------------------------------------------------
+# config + warmup contracts: named errors
+# --------------------------------------------------------------------------
+
+def test_validate_timeline_named_errors():
+    with pytest.raises(ValueError, match="n_windows"):
+        validate_timeline(TimelineCfg(n_windows=0))
+    with pytest.raises(ValueError, match="max_events"):
+        validate_timeline(TimelineCfg(max_events=0))
+    with pytest.raises(ValueError, match="coarse_bins"):
+        validate_timeline(TimelineCfg(coarse_bins=100))  # 1536 % 100 != 0
+    cfg = TimelineCfg()
+    assert validate_timeline(cfg) is cfg
+
+
+def test_warmup_mismatch_is_a_named_error():
+    wl = _wl(0.6)
+    out = simulate(parse_policy("E/LL/PS"), CLUSTER, wl, backend="jax",
+                   telemetry=TelemetryCfg(warmup_frac=0.2))
+    with pytest.raises(WarmupMismatchError) as ei:
+        summarize_sim(out, wl, warmup_frac=0.1)
+    assert ei.value.engine_frac == 0.2
+    assert ei.value.summarize_frac == 0.1
+    # the matching cutoff summarizes fine
+    summarize_sim(out, wl, warmup_frac=0.2)
+    # batch twin
+    wb = stack_workloads([_wl(0.6), _wl(0.8, seed=1)])
+    outb = simulate_many(parse_policy("E/LL/PS"), CLUSTER, wb,
+                         telemetry=TelemetryCfg(warmup_frac=0.2))
+    with pytest.raises(WarmupMismatchError):
+        summarize_batch_sim(outb, wb)        # default 0.1 != 0.2
+    summarize_batch_sim(outb, wb, warmup_frac=0.2)
+
+
+# --------------------------------------------------------------------------
+# the timeline never perturbs the simulation
+# --------------------------------------------------------------------------
+
+def test_timeline_off_is_bit_identical():
+    wl = _wl(0.8)
+    pol = parse_policy("E/H/PS")
+    base = simulate(pol, CLUSTER, wl, backend="jax")
+    on = simulate(pol, CLUSTER, wl, backend="jax", timeline=TL)
+    assert np.array_equal(base.response, on.response, equal_nan=True)
+    assert np.array_equal(base.cold, on.cold)
+    assert np.array_equal(base.worker, on.worker)
+    assert base.timeline is None and on.timeline is not None
+
+
+# --------------------------------------------------------------------------
+# exactness: np oracle ≡ jax scan ≡ chunked stream
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", ["E/LL/PS", "E/H/PS", "L/LL/FCFS"])
+def test_np_jax_parity(spec):
+    pol = parse_policy(spec)
+    wl = _wl(0.9)
+    ref = simulate_ref(pol, CLUSTER, wl, telemetry=TelemetryCfg(),
+                       timeline=TL)
+    jx = simulate(pol, CLUSTER, wl, backend="jax",
+                  telemetry=TelemetryCfg(), timeline=TL)
+    _assert_tl_equal(ref.timeline, jx.timeline, bitwise_float=False)
+    # the auto window width is the same IEEE division on all engines
+    assert float(jx.timeline.window_s) == \
+        auto_window_s(float(wl.arrival[-1]), TL)
+
+
+def test_stream_padded_final_chunk_merges_windows():
+    # 100 % 48 != 0 — the final chunk is padded; window accumulators
+    # must hand across the boundary and ignore the dead tail steps
+    pol = parse_policy("E/LL/PS")
+    wls = [_wl(0.7, n=100), _wl(1.0, n=100, seed=1)]
+    wb = stack_workloads(wls)
+    mono = simulate_many(pol, CLUSTER, wb, backend="jax",
+                         telemetry=TelemetryCfg(), timeline=TL)
+    out = simulate_stream(pol, CLUSTER, wb, chunk_size=48,
+                          backend="jax", telemetry=TelemetryCfg(),
+                          timeline=TL)
+    assert out.n_chunks == 3
+    _assert_tl_equal(out.timeline, mono.timeline, bitwise_float=True)
+
+
+# --------------------------------------------------------------------------
+# sketch pooling edge cases
+# --------------------------------------------------------------------------
+
+def test_empty_and_single_completion_windows():
+    cfg = TimelineCfg(n_windows=4, coarse_bins=96)
+    tl = init_tl_np(2, cfg, window_s=10.0)
+    tl_on_complete_np(tl, 5.0, response_s=2.0, service_s=1.0)  # window 0
+    res = TimelineResult.from_state(tl, cfg=cfg)
+    # single completion: both percentiles read the same (only) bin,
+    # whose geometric midpoint brackets the true value
+    p50, p99 = res.slow_percentile(0, 50), res.slow_percentile(0, 99)
+    assert p50 == p99
+    edges = coarse_edges(cfg)
+    assert edges[0] <= p50 <= edges[-1]
+    assert abs(p50 - 2.0) / 2.0 < 0.2     # coarse-bin quantization only
+    # empty windows: NaN percentile, zero counters — never a crash
+    assert np.isnan(res.slow_percentile(1, 99))
+    assert np.isnan(res.lat_percentile(3, 50))
+    assert int(res.arrivals.sum()) == 0
+    rows = res.to_rows()
+    assert len(rows) == 4
+
+
+def test_window_index_clips_and_degenerate_width():
+    assert window_index_np(0.0, 10.0, 4) == 0
+    assert window_index_np(39.9, 10.0, 4) == 3
+    assert window_index_np(1e9, 10.0, 4) == 3      # clipped, never OOB
+    assert window_index_np(5.0, 0.0, 4) == 0       # degenerate width
+
+
+# --------------------------------------------------------------------------
+# decision log: exact replay + visible truncation
+# --------------------------------------------------------------------------
+
+def _auto_out(max_events=64, n=400):
+    wl = synth_workload(AUTO_CLUSTER, 0.9, n, n_functions=5, seed=2)
+    cfg = TimelineCfg(n_windows=16, coarse_bins=96,
+                      max_events=max_events)
+    return simulate(parse_policy("E/LL/PS"), AUTO_CLUSTER, wl,
+                    backend="jax", telemetry=TelemetryCfg(),
+                    timeline=cfg)
+
+
+def test_decision_log_replays_n_on_exactly():
+    out = _auto_out()
+    tl = out.timeline
+    evs = tl.events()
+    auto_evs = [e for e in evs if e["kind"] == "autoscale"]
+    assert auto_evs, "autoscaler never acted — scenario too tame"
+    assert all(np.isfinite(e["sensor_p99"]) for e in auto_evs)
+    rep = tl.replay_n_on(AUTO_CLUSTER.n_workers)
+    mask = np.asarray(tl.arrivals) > 0
+    assert np.array_equal(rep[mask], np.asarray(tl.n_on)[mask])
+
+
+def test_decision_log_truncation_is_visible():
+    out = _auto_out(max_events=1)
+    tl = out.timeline
+    # the counter keeps counting past the buffer — truncation shows
+    assert int(tl.ev_count) > 1
+    with pytest.raises(ValueError, match="truncated"):
+        tl.replay_n_on(AUTO_CLUSTER.n_workers)
+
+
+# --------------------------------------------------------------------------
+# exporters
+# --------------------------------------------------------------------------
+
+def test_exporters_roundtrip(tmp_path):
+    out = _auto_out()
+    tl = out.timeline
+    csv_p = tl.write_csv(str(tmp_path / "tl.csv"))
+    with open(csv_p) as f:
+        header = f.readline()
+        n_lines = sum(1 for _ in f)
+    assert "window" in header and "arrivals" in header
+    assert n_lines == tl.n_windows
+    om_p = tl.write_openmetrics(str(tmp_path / "tl.om"))
+    om = open(om_p).read()
+    assert om.rstrip().endswith("# EOF")
+    assert "repro_timeline_arrivals_total" in om
+    s = tl.summary()
+    assert s["arrivals_total"] == 400
+    assert s["n_events"] == int(tl.ev_count)
+    json.dumps(s)                       # JSON-friendly digest
+    tr = Tracer(enabled=True)
+    tl.emit_counters(tr)
+    trace_p = str(tmp_path / "trace.json")
+    tr.export(trace_p)
+    evs = json.load(open(trace_p))["traceEvents"]
+    counters = [e for e in evs if e.get("ph") == "C"]
+    assert any(e["name"] == "timeline.arrivals" for e in counters)
